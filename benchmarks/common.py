@@ -1,0 +1,51 @@
+"""Shared benchmark utilities: the paper's Table-2 query workload, timing,
+CSV emission (``name,us_per_call,derived``)."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Iterable, List
+
+# Table 2: most common real-world RPQs (k=3 labels, matching the SO graph)
+PAPER_QUERIES: Dict[str, str] = {
+    "Q1": "a*",
+    "Q2": "a . b*",
+    "Q3": "a . b* . c*",
+    "Q4": "(a | b | c)*",
+    "Q5": "a . b* . c",
+    "Q6": "a* . b*",
+    "Q7": "a . b . c*",
+    "Q8": "a? . b*",
+    "Q9": "(a | b | c)+",
+    "Q10": "(a | b | c) . b*",
+    "Q11": "a . b . c",
+}
+
+# label mapping for the SO-like generator (paper Table 3)
+SO_LABEL_MAP = {"a": "a2q", "b": "c2a", "c": "c2q"}
+
+
+def so_queries() -> Dict[str, str]:
+    out = {}
+    for name, expr in PAPER_QUERIES.items():
+        q = expr
+        for sym, lab in SO_LABEL_MAP.items():
+            q = q.replace(sym, lab)
+        out[name] = q
+    return out
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.2f},{derived}", flush=True)
+
+
+def time_stream(fn: Callable[[], None]) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def percentile(xs: List[float], p: float) -> float:
+    if not xs:
+        return 0.0
+    s = sorted(xs)
+    return s[min(int(p * len(s)), len(s) - 1)]

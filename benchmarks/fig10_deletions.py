@@ -1,0 +1,39 @@
+"""Fig. 10 analogue: impact of explicit-deletion ratio on tail latency
+(negative tuples re-inserting previously consumed edges, §5.4 protocol)."""
+from __future__ import annotations
+
+import time
+
+from repro.core.automaton import compile_query
+from repro.core.reference import RAPQ
+from repro.streaming.generators import with_deletions, yago_like
+
+from .common import emit, percentile
+
+
+def run(n_edges: int = 1200, n_vertices: int = 96) -> None:
+    base = yago_like(n_vertices, n_edges, n_labels=8, seed=5)
+    window, slide = 40.0, 5.0
+    dfa = compile_query("p0 . p1*")
+    for ratio in (0.0, 0.02, 0.05, 0.10):
+        stream = with_deletions(base, ratio, seed=6) if ratio else base
+        eng = RAPQ(dfa, window)
+        lat = []
+        next_exp = slide
+        for sgt in stream:
+            if sgt.ts >= next_exp:
+                eng.expire(sgt.ts)
+                while next_exp <= sgt.ts:
+                    next_exp += slide
+            t0 = time.perf_counter_ns()
+            if sgt.op == "+":
+                eng.insert(sgt.src, sgt.dst, sgt.label, sgt.ts)
+            else:
+                eng.delete(sgt.src, sgt.dst, sgt.label, sgt.ts)
+            lat.append((time.perf_counter_ns() - t0) / 1e3)
+        emit(f"fig10/del={ratio:.0%}", sum(lat) / len(lat),
+             f"p99={percentile(lat, 0.99):.0f}us n={len(lat)}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,101 @@
+"""Fig. 4 analogue: throughput (edges/s) and p99 tuple latency of streaming
+RAPQ per query per graph, for BOTH engines (paper-faithful pointer baseline
+and the dense TPU engine on CPU) — the paper's headline table."""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+from repro.core.automaton import compile_query
+from repro.core.engine import DenseRPQEngine
+from repro.core.reference import RAPQ
+from repro.streaming.generators import ldbc_like, so_like, yago_like
+
+from .common import emit, percentile, so_queries
+
+
+def _run_engine(make_engine, stream, window, slide, batch=1):
+    eng = make_engine()
+    if batch > 1:
+        # warm the jit cache (compile excluded from timing)
+        warm = make_engine()
+        warm.insert_batch([s.as_edge() for s in list(stream)[:batch]])
+    lat = []
+    next_exp = slide
+    t_start = time.perf_counter()
+    n = 0
+    pending = []
+    for sgt in stream:
+        if sgt.ts >= next_exp:
+            if pending:
+                t0 = time.perf_counter_ns()
+                eng.insert_batch([s.as_edge() for s in pending])
+                lat.append((time.perf_counter_ns() - t0) / 1e3 / len(pending))
+                n += len(pending)
+                pending = []
+            eng.expire(sgt.ts)
+            while next_exp <= sgt.ts:
+                next_exp += slide
+        if batch > 1:
+            pending.append(sgt)
+            if len(pending) >= batch:
+                t0 = time.perf_counter_ns()
+                eng.insert_batch([s.as_edge() for s in pending])
+                lat.append((time.perf_counter_ns() - t0) / 1e3 / len(pending))
+                n += len(pending)
+                pending = []
+        else:
+            t0 = time.perf_counter_ns()
+            eng.insert(sgt.src, sgt.dst, sgt.label, sgt.ts)
+            lat.append((time.perf_counter_ns() - t0) / 1e3)
+            n += 1
+    if pending:
+        eng.insert_batch([s.as_edge() for s in pending])
+        n += len(pending)
+    wall = time.perf_counter() - t_start
+    return {
+        "throughput": n / wall,
+        "p99_us": percentile(lat, 0.99),
+        "mean_us": sum(lat) / max(len(lat), 1),
+        "results": len(eng.results),
+    }
+
+
+def run(n_edges: int = 1500, n_vertices: int = 48) -> None:
+    graphs = {
+        "so": so_like(n_vertices, n_edges, seed=1),
+        "ldbc": ldbc_like(n_vertices, n_edges, seed=1),
+        "yago": yago_like(n_vertices * 4, n_edges, n_labels=20, seed=1),
+    }
+    window, slide = 30.0, 5.0
+    for gname, stream in graphs.items():
+        # choose queries whose labels exist in the graph
+        if gname == "so":
+            queries = so_queries()
+        elif gname == "ldbc":
+            queries = {"Q2": "knows . replyOf*", "Q11": "knows . replyOf . hasCreator",
+                       "Q1": "knows*"}
+        else:
+            queries = {"Q1": "p0*", "Q2": "p0 . p1*", "Q11": "p0 . p1 . p2"}
+        for qname, expr in queries.items():
+            dfa = compile_query(expr)
+            ref = _run_engine(lambda: RAPQ(dfa, window), stream, window, slide)
+            # dense engine runs in (realistic) micro-batch mode; results are
+            # evaluated at batch boundaries, so the monotone set is a subset
+            # of the per-tuple reference (exact B=1 equality is covered by
+            # tests/test_dense_engine.py)
+            dense = _run_engine(
+                lambda: DenseRPQEngine(dfa, window, n_slots=256, batch_size=32),
+                stream, window, slide, batch=32)
+            assert dense["results"] <= ref["results"], (gname, qname)
+            cover = dense["results"] / max(ref["results"], 1)
+            emit(f"fig4/{gname}/{qname}/reference", ref["mean_us"],
+                 f"thr={ref['throughput']:.0f}eps p99={ref['p99_us']:.0f}us "
+                 f"results={ref['results']}")
+            emit(f"fig4/{gname}/{qname}/dense_b32", dense["mean_us"],
+                 f"thr={dense['throughput']:.0f}eps p99={dense['p99_us']:.0f}us "
+                 f"results={dense['results']} coverage={cover:.3f}")
+
+
+if __name__ == "__main__":
+    run()

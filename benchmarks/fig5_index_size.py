@@ -1,0 +1,50 @@
+"""Fig. 5 + Fig. 9 analogue: Δ tree-index size per query on the SO-like
+graph, and the (negative) correlation between index size and throughput."""
+from __future__ import annotations
+
+import time
+
+from repro.core.automaton import compile_query
+from repro.core.reference import RAPQ
+from repro.streaming.generators import so_like
+
+from .common import emit, so_queries
+
+
+def run(n_edges: int = 1500, n_vertices: int = 48) -> None:
+    stream = so_like(n_vertices, n_edges, seed=2)
+    window, slide = 30.0, 5.0
+    rows = []
+    for qname, expr in so_queries().items():
+        dfa = compile_query(expr)
+        eng = RAPQ(dfa, window)
+        next_exp = slide
+        t0 = time.perf_counter()
+        for sgt in stream:
+            if sgt.ts >= next_exp:
+                eng.expire(sgt.ts)
+                while next_exp <= sgt.ts:
+                    next_exp += slide
+            eng.insert(sgt.src, sgt.dst, sgt.label, sgt.ts)
+        wall = time.perf_counter() - t0
+        trees, nodes = eng.index_size()
+        thr = len(stream) / wall
+        rows.append((qname, trees, nodes, thr))
+        emit(f"fig5/so/{qname}", wall / len(stream) * 1e6,
+             f"trees={trees} nodes={nodes} thr={thr:.0f}eps")
+    # Fig. 9: confirm negative correlation nodes vs throughput
+    if len(rows) > 2:
+        import statistics
+
+        nodes = [r[2] for r in rows]
+        thr = [r[3] for r in rows]
+        mn, mt = statistics.mean(nodes), statistics.mean(thr)
+        cov = sum((n - mn) * (t - mt) for n, t in zip(nodes, thr))
+        sn = (sum((n - mn) ** 2 for n in nodes)) ** 0.5
+        st = (sum((t - mt) ** 2 for t in thr)) ** 0.5
+        corr = cov / (sn * st + 1e-12)
+        emit("fig9/so/corr_nodes_throughput", 0.0, f"pearson={corr:.3f}")
+
+
+if __name__ == "__main__":
+    run()

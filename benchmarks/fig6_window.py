@@ -1,0 +1,52 @@
+"""Fig. 6 analogue: tail latency and window-maintenance cost vs window size
+|W| and slide interval β (Yago-like fixed-rate stream, as in the paper)."""
+from __future__ import annotations
+
+import time
+
+from repro.core.automaton import compile_query
+from repro.core.reference import RAPQ
+from repro.streaming.generators import yago_like
+
+from .common import emit, percentile
+
+
+def run(n_edges: int = 2000, n_vertices: int = 128) -> None:
+    stream = yago_like(n_vertices, n_edges, n_labels=8, seed=3, rate=10.0)
+    expr = "p0 . p1*"
+    dfa = compile_query(expr)
+
+    # (a) latency vs |W| at fixed slide
+    for window in (10.0, 20.0, 40.0, 80.0):
+        lat, exp_cost = _run(dfa, stream, window, slide=5.0)
+        emit(f"fig6a/W={window:g}", sum(lat) / len(lat),
+             f"p99={percentile(lat, 0.99):.0f}us expiry_ms={exp_cost*1e3:.1f}")
+    # (b) expiry cost vs slide interval at fixed |W|
+    for slide in (2.0, 5.0, 10.0, 20.0):
+        lat, exp_cost = _run(dfa, stream, window=40.0, slide=slide)
+        n_slides = max(1, int(stream.span()[1] / slide))
+        emit(f"fig6b/beta={slide:g}", sum(lat) / len(lat),
+             f"expiry_total_ms={exp_cost*1e3:.1f} per_slide_ms="
+             f"{exp_cost*1e3/n_slides:.2f}")
+
+
+def _run(dfa, stream, window, slide):
+    eng = RAPQ(dfa, window)
+    lat = []
+    expiry = 0.0
+    next_exp = slide
+    for sgt in stream:
+        if sgt.ts >= next_exp:
+            t0 = time.perf_counter()
+            eng.expire(sgt.ts)
+            expiry += time.perf_counter() - t0
+            while next_exp <= sgt.ts:
+                next_exp += slide
+        t0 = time.perf_counter_ns()
+        eng.insert(sgt.src, sgt.dst, sgt.label, sgt.ts)
+        lat.append((time.perf_counter_ns() - t0) / 1e3)
+    return lat, expiry
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,71 @@
+"""Fig. 7 + Fig. 8 analogue: minimal-DFA size vs query size |Q| for a
+gMark-like synthetic workload, and throughput vs automaton size k."""
+from __future__ import annotations
+
+import random
+import time
+
+from repro.core.automaton import compile_query
+from repro.core.reference import RAPQ
+from repro.streaming.generators import gmark_like
+
+from .common import emit
+
+
+def _synth_query(rng: random.Random, size: int, labels) -> str:
+    """gMark-style: groups of <=3 labels in concat/alternation; 50% starred."""
+    parts = []
+    budget = size
+    while budget > 0:
+        g = min(rng.randint(1, 3), budget)
+        syms = [rng.choice(labels) for _ in range(g)]
+        grp = "(" + " | ".join(syms) + ")" if g > 1 else syms[0]
+        if rng.random() < 0.5:
+            grp += "*" if rng.random() < 0.5 else "+"
+            budget -= 1
+        parts.append(grp)
+        budget -= g
+    return " . ".join(parts)
+
+
+def run(n_queries: int = 60, n_edges: int = 1200) -> None:
+    rng = random.Random(17)
+    labels = ["r0", "r1", "r2", "r3"]
+    stream = gmark_like(64, n_edges, labels, seed=4, cyclicity=0.3)
+    window, slide = 30.0, 5.0
+    max_k = 0
+    for size in (2, 4, 8, 12, 16, 20):
+        ks = []
+        for _ in range(n_queries // 6):
+            expr = _synth_query(rng, size, labels)
+            dfa = compile_query(expr)
+            ks.append(dfa.k)
+            max_k = max(max_k, dfa.k)
+        emit(f"fig7/|Q|={size}", 0.0,
+             f"k_mean={sum(ks)/len(ks):.1f} k_max={max(ks)}")
+    # Fig. 8: throughput vs k
+    by_k = {}
+    for _ in range(n_queries):
+        expr = _synth_query(rng, rng.choice([4, 8, 12]), labels)
+        dfa = compile_query(expr)
+        if dfa.k in by_k or dfa.k == 0:
+            continue
+        eng = RAPQ(dfa, window)
+        next_exp = slide
+        t0 = time.perf_counter()
+        for sgt in stream:
+            if sgt.ts >= next_exp:
+                eng.expire(sgt.ts)
+                while next_exp <= sgt.ts:
+                    next_exp += slide
+            eng.insert(sgt.src, sgt.dst, sgt.label, sgt.ts)
+        wall = time.perf_counter() - t0
+        _trees, nodes = eng.index_size()
+        by_k[dfa.k] = (len(stream) / wall, nodes)
+    for k in sorted(by_k):
+        thr, nodes = by_k[k]
+        emit(f"fig8/k={k}", 1e6 / thr, f"thr={thr:.0f}eps index_nodes={nodes}")
+
+
+if __name__ == "__main__":
+    run()

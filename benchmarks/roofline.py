@@ -1,0 +1,135 @@
+"""Roofline analysis: three terms per (arch x shape x mesh) from the
+dry-run artifacts (benchmarks/results/dryrun/*.json).
+
+    compute   = HLO_FLOPs / (chips x peak_FLOP/s)
+    memory    = HLO_bytes / (chips x HBM_bw)
+    collective= collective_bytes / (chips x link_bw)
+
+HLO_FLOPs/HLO_bytes are the PER-DEVICE post-SPMD extrapolated values (see
+dryrun.probe_period_costs; device_* values already per chip — do not divide
+again). MODEL_FLOPS uses 6·N·D (train) / 2·N·D (decode/prefill) with
+N = active params. Emits CSV and writes results/roofline.csv.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+from typing import Dict, List
+
+PEAK_FLOPS = 197e12     # bf16 MXU / chip (v5e)
+VPU_PEAK = 3.9e12       # elementwise ops/s / chip (v5e VPU, 8x128 lanes)
+HBM_BW = 819e9          # B/s / chip
+LINK_BW = 50e9          # B/s / link (ICI)
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+DRYRUN = os.path.join(RESULTS, "dryrun")
+
+
+def model_flops(rec: Dict) -> float:
+    n_active = rec.get("params_active", 0)
+    if rec.get("kind") == "rpq":
+        # semiring ops on the VPU; report as the analytic term
+        return rec.get("semiring_ops", 0.0)
+    if rec["kind"] == "train":
+        tokens = _tokens(rec)
+        return 6.0 * n_active * tokens
+    if rec["kind"] == "prefill":
+        return 2.0 * n_active * _tokens(rec)
+    # decode: one token per sequence
+    return 2.0 * n_active * _batch(rec)
+
+
+def _tokens(rec: Dict) -> float:
+    shape = rec["shape"]
+    seq = {"train_4k": 4096, "prefill_32k": 32768}.get(shape, 0)
+    return seq * _batch(rec)
+
+
+def _batch(rec: Dict) -> float:
+    return {"train_4k": 256, "prefill_32k": 32, "decode_32k": 128,
+            "long_500k": 1}.get(rec["shape"], 1)
+
+
+def analyze(rec: Dict) -> Dict:
+    chips = rec["chips"]
+    dev_flops = rec.get("device_flops_extrap", rec.get("device_flops", 0.0))
+    dev_bytes = rec.get("device_bytes_extrap", rec.get("device_bytes", 0.0))
+    wire = rec.get("collective_wire_bytes_extrap",
+                   rec.get("collective_wire_bytes_rolled", 0.0))
+    peak = PEAK_FLOPS
+    if rec.get("kind") == "rpq":
+        # HLO flop counts under-count fori bodies (counted once); use the
+        # ANALYTIC semiring op count, on the unit each mode actually uses
+        ops = rec.get("semiring_ops", 0.0)
+        if rec.get("engine_mode", "baseline") == "mxu":
+            dev_flops = ops * max(rec.get("n_levels", 1), 1) / chips
+            peak = PEAK_FLOPS   # boolean matmuls on the MXU
+        else:
+            dev_flops = ops / chips
+            peak = VPU_PEAK     # (max,min) has no MXU contraction
+    t_compute = dev_flops / peak
+    t_memory = dev_bytes / HBM_BW
+    t_coll = wire / LINK_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops(rec)
+    hlo_global = rec.get("global_flops_extrap", 0.0) or (dev_flops * chips)
+    ratio = mf / hlo_global if hlo_global else 0.0
+    if rec.get("kind") == "rpq":
+        # useful = semiring ops / executed ops (mxu pays T x for MXU speed)
+        ratio = 1.0 / max(rec.get("n_levels", 1), 1)             if rec.get("engine_mode") == "mxu" else 1.0
+    # roofline fraction: useful model flops per chip-second at the bound
+    t_bound = max(terms.values())
+    use_peak = PEAK_FLOPS
+    if rec.get("kind") == "rpq" and rec.get("engine_mode", "baseline") != "mxu":
+        use_peak = VPU_PEAK
+    frac = min((mf / chips / use_peak) / t_bound, 1.0) if t_bound else 0.0
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "chips": chips,
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "bottleneck": bottleneck,
+        "model_flops": mf, "hlo_flops_global": hlo_global,
+        "useful_ratio": ratio,
+        "roofline_frac": frac,
+        "fits_hbm": rec.get("fits_hbm"),
+    }
+
+
+def run() -> List[Dict]:
+    rows = []
+    if not os.path.isdir(DRYRUN):
+        print("roofline/no_dryrun_artifacts,0.0,run repro.launch.dryrun first")
+        return rows
+    for fn in sorted(os.listdir(DRYRUN)):
+        if not fn.endswith(".json"):
+            continue
+        with open(os.path.join(DRYRUN, fn)) as f:
+            rec = json.load(f)
+        if not rec.get("ok"):
+            continue
+        row = analyze(rec)
+        rows.append(row)
+        print(
+            f"roofline/{row['arch']}/{row['shape']}/{row['mesh']},"
+            f"{max(row['t_compute_s'], row['t_memory_s'], row['t_collective_s'])*1e6:.1f},"
+            f"compute={row['t_compute_s']*1e3:.2f}ms memory={row['t_memory_s']*1e3:.2f}ms "
+            f"coll={row['t_collective_s']*1e3:.2f}ms bottleneck={row['bottleneck']} "
+            f"useful={row['useful_ratio']:.2f} frac={row['roofline_frac']:.2f}",
+            flush=True,
+        )
+    os.makedirs(RESULTS, exist_ok=True)
+    import csv
+
+    with open(os.path.join(RESULTS, "roofline.csv"), "w", newline="") as f:
+        if rows:
+            w = csv.DictWriter(f, fieldnames=list(rows[0]))
+            w.writeheader()
+            w.writerows(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

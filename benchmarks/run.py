@@ -1,0 +1,39 @@
+"""Benchmark harness: one module per paper table/figure. Prints
+``name,us_per_call,derived`` CSV rows (paper-faithful reference engine AND
+the dense TPU engine where applicable) plus the roofline table from the
+dry-run artifacts."""
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="", help="substring filter on module name")
+    ap.add_argument("--fast", action="store_true", help="smaller sizes")
+    args = ap.parse_args()
+
+    from . import (fig4_throughput, fig5_index_size, fig6_window,
+                   fig7_query_size, fig10_deletions, fig11_vs_batch,
+                   roofline, table4_rspq)
+
+    scale = 0.4 if args.fast else 1.0
+    modules = [
+        ("fig4", lambda: fig4_throughput.run(n_edges=int(1500 * scale))),
+        ("fig5", lambda: fig5_index_size.run(n_edges=int(1500 * scale))),
+        ("fig6", lambda: fig6_window.run(n_edges=int(2000 * scale))),
+        ("fig7", lambda: fig7_query_size.run(n_edges=int(1200 * scale))),
+        ("fig10", lambda: fig10_deletions.run(n_edges=int(1200 * scale))),
+        ("table4", lambda: table4_rspq.run(n_edges=int(900 * scale))),
+        ("fig11", lambda: fig11_vs_batch.run(n_edges=int(400 * scale))),
+        ("roofline", roofline.run),
+    ]
+    print("name,us_per_call,derived")
+    for name, fn in modules:
+        if args.only and args.only not in name:
+            continue
+        fn()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Core of the paper's contribution: streaming RPQ evaluation.
+
+Public API:
+    compile_query(expr)            -- regex -> minimal DFA (+ RSPQ metadata)
+    RAPQ / RSPQ                    -- paper-faithful pointer engines (oracle)
+    DenseRPQEngine                 -- the TPU-native dense semiring engine
+    batch_rapq / streaming_oracle  -- batch baselines
+"""
+from .automaton import DFA, compile_query
+from .batch import batch_rapq, batch_rspq_bruteforce, snapshot_from_edges, streaming_oracle
+from .reference import RAPQ, RSPQ, SnapshotGraph
+
+__all__ = [
+    "DFA",
+    "compile_query",
+    "RAPQ",
+    "RSPQ",
+    "SnapshotGraph",
+    "batch_rapq",
+    "batch_rspq_bruteforce",
+    "snapshot_from_edges",
+    "streaming_oracle",
+]

@@ -1,0 +1,152 @@
+"""(max, min) bottleneck-semiring relaxation over the product graph.
+
+The dense Δ index is ``dist[x, v, s]`` = best (max over paths) bottleneck
+(min over edges) timestamp of any path x→v whose label drives the DFA from
+s0 to s (DESIGN.md §2). One *relaxation round* applies every DFA transition
+(s, l, t):
+
+    out[x, v, t] ∨= max_u min(dist[x, u, s], adj[l, u, v])     (∨ = max)
+
+plus the *base* term for transitions out of s0 (seed paths of length 1):
+
+    out[x, v, t] ∨= adj[l, x, v]          for (s0, l, t)
+
+The closure iterates rounds to a fixpoint (monotone, so `lax.while_loop`
+on a changed-flag terminates in at most product-graph-diameter rounds).
+
+Three interchangeable contraction back-ends:
+  * ``jnp``        chunked pure-jnp (CPU tests / oracle)
+  * ``pallas``     VPU max-min kernel (kernels/maxmin)
+  * ``mxu_bucket`` level-quantized boolean closure on the MXU (kernels/bucket)
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels.maxmin.maxmin import maxmin_matmul
+from ..kernels.maxmin.ref import maxmin_matmul_ref
+
+NEG_INF = float("-inf")
+
+
+class TransitionTable(NamedTuple):
+    """Static DFA transition arrays (built once at query registration)."""
+
+    src: jnp.ndarray      # (J,) int32 source state of each transition
+    lab: jnp.ndarray      # (J,) int32 label index
+    dst: jnp.ndarray      # (J,) int32 destination state
+    dst_onehot: jnp.ndarray  # (J, K) f32 one-hot of dst (for scatter-max)
+    start_mask: jnp.ndarray  # (J,) bool: src == s0
+    k: int
+    n_labels: int
+
+    @staticmethod
+    def from_dfa(dfa) -> "TransitionTable":
+        trans = dfa.transitions()
+        if not trans:
+            trans = [(0, 0, 0)]  # degenerate: empty language; never fires
+            src = np.array([0], np.int32)
+            lab = np.array([0], np.int32)
+            dst = np.array([0], np.int32)
+            oh = np.zeros((1, max(dfa.k, 1)), np.float32)
+            return TransitionTable(
+                jnp.asarray(src), jnp.asarray(lab), jnp.asarray(dst),
+                jnp.asarray(oh), jnp.asarray(np.array([False])),
+                max(dfa.k, 1), max(dfa.n_labels, 1),
+            )
+        src = np.array([s for (s, _l, _t) in trans], np.int32)
+        lab = np.array([l for (_s, l, _t) in trans], np.int32)
+        dst = np.array([t for (_s, _l, t) in trans], np.int32)
+        oh = np.zeros((len(trans), dfa.k), np.float32)
+        oh[np.arange(len(trans)), dst] = 1.0
+        return TransitionTable(
+            src=jnp.asarray(src),
+            lab=jnp.asarray(lab),
+            dst=jnp.asarray(dst),
+            dst_onehot=jnp.asarray(oh),
+            start_mask=jnp.asarray(src == dfa.start),
+            k=dfa.k,
+            n_labels=dfa.n_labels,
+        )
+
+
+def _contract(dist_s: jnp.ndarray, adj_l: jnp.ndarray, backend: str) -> jnp.ndarray:
+    """maxmin over u for a single transition: dist_s (N,N)[x,u] x adj_l
+    (N,N)[u,v] -> (N,N)[x,v]."""
+    if backend == "pallas":
+        return maxmin_matmul(dist_s, adj_l, interpret=jax.default_backend() != "tpu")
+    return maxmin_matmul_ref(dist_s, adj_l)
+
+
+def relax_round(
+    dist: jnp.ndarray,          # (N, N, K) f32
+    adj: jnp.ndarray,           # (L, N, N) f32
+    tt: TransitionTable,
+    backend: str = "jnp",
+) -> jnp.ndarray:
+    """One relaxation round; returns the pointwise max of dist and all
+    transition contributions (monotone)."""
+    n = dist.shape[0]
+
+    def per_transition(j, acc):
+        s = tt.src[j]
+        l = tt.lab[j]
+        dist_s = jax.lax.dynamic_index_in_dim(
+            jnp.moveaxis(dist, 2, 0), s, axis=0, keepdims=False
+        )  # (N, N) [x, u]
+        adj_l = jax.lax.dynamic_index_in_dim(adj, l, axis=0, keepdims=False)
+        contrib = _contract(dist_s, adj_l, backend)           # (N, N) [x, v]
+        # base term: seed (x, x, s0) = +inf => min(+inf, adj[l, x, v]) = adj
+        contrib = jnp.where(tt.start_mask[j], jnp.maximum(contrib, adj_l), contrib)
+        # scatter-max into destination state slice
+        oh = tt.dst_onehot[j]                                  # (K,)
+        upd = jnp.where(oh[None, None, :] > 0, contrib[:, :, None], NEG_INF)
+        return jnp.maximum(acc, upd)
+
+    out = jax.lax.fori_loop(0, tt.src.shape[0], per_transition, dist)
+    return out
+
+
+def closure(
+    dist: jnp.ndarray,
+    adj: jnp.ndarray,
+    tt: TransitionTable,
+    backend: str = "jnp",
+    max_rounds: int = 0,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Iterate relaxation to fixpoint. Returns (dist, rounds_used).
+
+    max_rounds=0 -> bound by N*K (longest simple product path)."""
+    n, _, k = dist.shape
+    bound = max_rounds if max_rounds > 0 else n * k + 1
+
+    def cond(carry):
+        _d, changed, it = carry
+        return jnp.logical_and(changed, it < bound)
+
+    def body(carry):
+        d, _changed, it = carry
+        nd = relax_round(d, adj, tt, backend)
+        return nd, jnp.any(nd > d), it + 1
+
+    dist0 = relax_round(dist, adj, tt, backend)
+    dist_f, _, rounds = jax.lax.while_loop(
+        cond, body, (dist0, jnp.asarray(True), jnp.asarray(1, jnp.int32))
+    )
+    return dist_f, rounds
+
+
+def valid_pairs(
+    dist: jnp.ndarray, finals: jnp.ndarray, low: jnp.ndarray
+) -> jnp.ndarray:
+    """(N, N) bool: pair (x, v) has an accepting path fully inside the
+    window, i.e. max over final states of dist > low. `finals` is a (K,)
+    bool mask."""
+    acc = jnp.where(finals[None, None, :], dist, NEG_INF)
+    best = jnp.max(acc, axis=2)
+    return best > low

@@ -1,0 +1,227 @@
+"""PartitionSpecs for every array family, per mesh flavor.
+
+Mesh axes:
+    single-pod:  ('data', 'model')            16 x 16 = 256 chips (v5e pod)
+    multi-pod:   ('pod', 'data', 'model')     2 x 16 x 16 = 512 chips
+
+FSDP axis = ('data',) or ('pod', 'data'): parameters and optimizer moments
+are additionally sharded over the data-parallel axis (ZeRO-3 style); the
+leading (n_periods,) stack dim is never sharded.
+
+Param rules (by array name within a layer dict):
+    embed.table      (V, d)        V->model, d->fsdp
+    lm_head.w        (d, V)        d->fsdp,  V->model
+    attn wq/wk/wv    (d, H*hd)     d->fsdp,  cols->model
+    attn wo          (H*hd, d)     rows->model, d->fsdp
+    mlp w_gate/up    (d, f)        d->fsdp,  f->model
+    mlp w_down       (f, d)        f->model, d->fsdp
+    moe router       (d, E)        replicated
+    moe w_*          (E, d, f)     E->model, d->fsdp (expert parallelism)
+    ssd w_in         (d, ch)       d->fsdp,  ch->model
+    ssd w_out        (di, d)       di->model, d->fsdp
+    biases/norms/small             replicated
+
+Activation rules (constrain tags):
+    hidden  (b, s, d)   b->batch_axes  (train/prefill/decode with b>1)
+                        s->batch_axes  (long-context decode with b=1)
+    logits  (b, s, V)   b->batch_axes, V->model
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def fsdp_axes(mesh: Mesh):
+    names = mesh.axis_names
+    if "pod" in names:
+        return ("pod", "data")
+    return ("data",)
+
+
+def batch_axes(mesh: Mesh):
+    return fsdp_axes(mesh)
+
+
+def _divisible(dim: int, mesh: Mesh, axes) -> bool:
+    if dim is None:
+        return False
+    total = 1
+    for a in (axes if isinstance(axes, tuple) else (axes,)):
+        total *= mesh.shape[a]
+    return dim % total == 0 and dim >= total
+
+
+def param_spec(path: str, shape, mesh: Mesh) -> P:
+    """Map a flattened param path + shape to a PartitionSpec."""
+    fs = fsdp_axes(mesh)
+    name = path.split("/")[-1]
+    stacked = path.startswith("layers")  # leading (n_periods,) dim
+    lead = (None,) if stacked else ()
+
+    def spec(*dims):
+        out = []
+        for d in dims:
+            out.append(d)
+        return P(*lead, *out)
+
+    dims = shape[1:] if stacked else shape
+
+    if name in ("scale", "norm_scale", "dt_bias", "A_log", "D", "conv_b",
+                "bq", "bk", "bv"):
+        return P(*lead, *([None] * len(dims)))
+    if name == "router":
+        return P(*lead, None, None)
+    if name == "conv_w":
+        return P(*lead, None, "model") if _divisible(dims[-1], mesh, "model") \
+            else P(*lead, None, None)
+    if name == "table":  # embedding (V, d)
+        return spec("model" if _divisible(dims[0], mesh, "model") else None,
+                    fs if _divisible(dims[1], mesh, fs) else None)
+    if path.startswith("lm_head"):  # (d, V)
+        return spec(fs if _divisible(dims[0], mesh, fs) else None,
+                    "model" if _divisible(dims[1], mesh, "model") else None)
+    if name in ("w_gate", "w_up", "w_down") and len(dims) == 3:  # MoE (E, d, f)
+        e = "model" if _divisible(dims[0], mesh, "model") else None
+        d1 = fs if _divisible(dims[1], mesh, fs) else None
+        return spec(e, d1, None)
+    if name in ("wq", "wk", "wv", "w_gate", "w_up", "w_in"):  # (d, cols)
+        return spec(fs if _divisible(dims[0], mesh, fs) else None,
+                    "model" if _divisible(dims[1], mesh, "model") else None)
+    if name in ("wo", "w_down", "w_out"):  # (rows, d)
+        return spec("model" if _divisible(dims[0], mesh, "model") else None,
+                    fs if _divisible(dims[1], mesh, fs) else None)
+    if name == "w":  # frontend_proj (d, d)
+        return spec(fs if _divisible(dims[0], mesh, fs) else None,
+                    "model" if _divisible(dims[1], mesh, "model") else None)
+    return P(*lead, *([None] * len(dims)))
+
+
+def params_shardings(abstract_params: Any, mesh: Mesh,
+                     serving: bool = False) -> Any:
+    """NamedSharding pytree matching an abstract (eval_shape) param tree.
+
+    serving=True drops the FSDP axes (params replicate across data; only
+    tensor-parallel sharding remains). Decode steps are otherwise dominated
+    by per-step FSDP param all-gathers (~0.7 GB/step measured for 3B-class
+    archs — §Perf It.5); serving has no optimizer state, so replication
+    costs only params/TP of HBM."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(abstract_params)
+    out = []
+    for path, leaf in flat:
+        pstr = "/".join(_p(p) for p in path)
+        spec = param_spec(pstr, leaf.shape, mesh)
+        if serving:
+            fs = fsdp_axes(mesh)
+            spec = P(*[None if d == fs or d == "data" or
+                       (isinstance(d, tuple) and set(d) & {"data", "pod"})
+                       else d for d in spec])
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(abstract_params), out
+    )
+
+
+def _p(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return f"[{p.idx}]"
+    return str(p)
+
+
+def make_constrain(mesh: Mesh, seq_sharded: bool = False) -> Callable:
+    """Activation-constraint hook for Model(constrain=...).
+
+    seq_sharded=True (long-context, batch=1): shard sequence instead of batch.
+    """
+    ba = batch_axes(mesh)
+
+    def constrain(x, tag: str):
+        if tag == "hidden" and x.ndim == 3:
+            b, s, _d = x.shape
+            if seq_sharded:
+                spec = P(None, ba, None) if _divisible(s, mesh, ba) else P()
+            else:
+                spec = P(ba, None, None) if _divisible(b, mesh, ba) else P()
+            return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+        if tag == "ssm_heads" and x.ndim == 4:
+            b, s, h, _p = x.shape
+            h_ax = "model" if _divisible(h, mesh, "model") else None
+            if seq_sharded:
+                bspec, sspec = None, (ba if _divisible(s, mesh, ba) else None)
+            else:
+                bspec, sspec = (ba if _divisible(b, mesh, ba) else None), None
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(bspec, sspec, h_ax, None)))
+        if tag == "ssm_dt" and x.ndim == 3:
+            b, s, h = x.shape
+            h_ax = "model" if _divisible(h, mesh, "model") else None
+            bspec = ba if (not seq_sharded and _divisible(b, mesh, ba)) else None
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(bspec, None, h_ax)))
+        if tag == "logits" and x.ndim == 3:
+            b, s, v = x.shape
+            bspec = ba if (not seq_sharded and _divisible(b, mesh, ba)) else None
+            vspec = "model" if _divisible(v, mesh, "model") else None
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(bspec, None, vspec)))
+        return x
+
+    return constrain
+
+
+def batch_shardings(mesh: Mesh, seq_sharded: bool = False) -> Callable[[str, tuple], NamedSharding]:
+    """Input-batch shardings: tokens (b, s), prefix_embeds (b, p, d)."""
+    ba = batch_axes(mesh)
+
+    def shard_for(name: str, shape: tuple) -> NamedSharding:
+        b = shape[0]
+        if seq_sharded or not _divisible(b, mesh, ba):
+            if len(shape) >= 2 and _divisible(shape[1], mesh, ba):
+                return NamedSharding(mesh, P(None, ba, *([None] * (len(shape) - 2))))
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, P(ba, *([None] * (len(shape) - 1))))
+
+    return shard_for
+
+
+def cache_shardings(mesh: Mesh, abstract_caches: Any, seq_sharded: bool) -> Any:
+    """Decode-cache shardings. KV caches (n_periods, b, S, KV, hd):
+    b -> batch axes (or S -> batch axes for long-context b=1), KV heads ->
+    model when divisible, else head_dim -> model."""
+    ba = batch_axes(mesh)
+
+    def one(path, leaf):
+        shape = leaf.shape
+        name = _p(path[-1]) if path else ""
+        if name in ("k", "v") and len(shape) == 5:
+            _np, b, s, kv, hd = shape
+            kv_ax = "model" if _divisible(kv, mesh, "model") else None
+            hd_ax = "model" if kv_ax is None and _divisible(hd, mesh, "model") else None
+            if seq_sharded or not _divisible(b, mesh, ba):
+                return NamedSharding(mesh, P(None, None, ba if _divisible(s, mesh, ba) else None, kv_ax, hd_ax))
+            return NamedSharding(mesh, P(None, ba, None, kv_ax, hd_ax))
+        if name == "ssm" and len(shape) == 5:  # (n_periods, b, h, n, p)
+            _np, b, h, n, pdim = shape
+            h_ax = "model" if _divisible(h, mesh, "model") else None
+            if _divisible(b, mesh, ba) and not seq_sharded:
+                return NamedSharding(mesh, P(None, ba, h_ax, None, None))
+            return NamedSharding(mesh, P(None, None, h_ax, None, None))
+        if name == "conv" and len(shape) == 4:  # (n_periods, b, k-1, ch)
+            _np, b, _k, ch = shape
+            ch_ax = "model" if _divisible(ch, mesh, "model") else None
+            if _divisible(b, mesh, ba) and not seq_sharded:
+                return NamedSharding(mesh, P(None, ba, None, ch_ax))
+            return NamedSharding(mesh, P(None, None, None, ch_ax))
+        # len counters etc.
+        return NamedSharding(mesh, P(*([None] * len(shape))))
+
+    flat, _ = jax.tree_util.tree_flatten_with_path(abstract_caches)
+    out = [one(path, leaf) for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(abstract_caches), out
+    )

@@ -1,0 +1,85 @@
+"""Pallas TPU kernel: fused bucketized bottleneck closure step (MXU path).
+
+One pass over the level matrices computes ALL T threshold boolean matmuls:
+tiles of A and B are read from HBM into VMEM once, binarized at each
+threshold in registers, contracted on the MXU, and the T partial counts are
+kept in a VMEM scratch accumulator. Compared with T separate XLA dots this
+saves (T-1)x the HBM traffic of A and B — the dominant term once the
+closure is memory-bound (see EXPERIMENTS.md §Perf napkin math).
+
+Grid: (m/bm, n/bn, k/bk), k innermost; scratch acc: (T, bm, bn) f32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _bucket_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_levels: int, k_steps: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...]  # (bm, bk) int32 levels
+    b = b_ref[...]  # (bk, bn) int32 levels
+    for theta in range(1, n_levels + 1):  # static unroll: T MXU dots per tile
+        ab = (a >= theta).astype(jnp.bfloat16)
+        bb = (b >= theta).astype(jnp.bfloat16)
+        acc_ref[theta - 1] += jnp.dot(
+            ab, bb, preferred_element_type=jnp.float32
+        )
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _finish():
+        counts = acc_ref[...]  # (T, bm, bn)
+        o_ref[...] = jnp.sum((counts > 0.5).astype(jnp.int32), axis=0)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_levels", "bm", "bn", "bk", "interpret")
+)
+def bucket_maxmin(
+    a_lvl: jnp.ndarray,
+    b_lvl: jnp.ndarray,
+    *,
+    n_levels: int,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Level-quantized bottleneck matmul on the MXU.
+
+    a_lvl: (m, k) int32 in [0, T]; b_lvl: (k, n) int32. Returns (m, n) int32
+    = max_k min(a, b). Level 0 = unreachable (semiring zero).
+    """
+    m, k = a_lvl.shape
+    k2, n = b_lvl.shape
+    assert k == k2
+    mp, np_, kp = (-m) % bm, (-n) % bn, (-k) % bk
+    if mp or kp:
+        a_lvl = jnp.pad(a_lvl, ((0, mp), (0, kp)), constant_values=0)
+    if np_ or kp:
+        b_lvl = jnp.pad(b_lvl, ((0, kp), (0, np_)), constant_values=0)
+    M, K = a_lvl.shape
+    _, N = b_lvl.shape
+    k_steps = K // bk
+
+    out = pl.pallas_call(
+        functools.partial(_bucket_kernel, n_levels=n_levels, k_steps=k_steps),
+        grid=(M // bm, N // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.int32),
+        # (T, bm, bn) f32 accumulator lives in VMEM across the k-sweep
+        scratch_shapes=[pltpu.VMEM((n_levels, bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a_lvl, b_lvl)
+    return out[:m, :n]

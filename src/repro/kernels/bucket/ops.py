@@ -1,0 +1,22 @@
+"""Jitted public wrapper for the bucketized MXU bottleneck closure step."""
+from __future__ import annotations
+
+import jax
+
+from .bucket import bucket_maxmin
+from .ref import bucket_maxmin_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def bucket_maxmin_op(a_lvl, b_lvl, *, n_levels: int, use_pallas: bool | None = None,
+                     interpret: bool | None = None):
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        if interpret is None:
+            interpret = not _on_tpu()
+        return bucket_maxmin(a_lvl, b_lvl, n_levels=n_levels, interpret=interpret)
+    return bucket_maxmin_ref(a_lvl, b_lvl, n_levels)

@@ -1,0 +1,87 @@
+"""Pallas TPU kernel: (max, min) bottleneck-semiring matmul.
+
+C[i, j] = max_k min(A[i, k], B[k, j])
+
+TPU mapping notes (DESIGN.md §2): the (max, min) semiring has no MXU
+contraction, so this runs on the VPU; the kernel's job is the memory
+schedule — HBM→VMEM tiling with a k-innermost accumulation grid so each
+output tile stays resident in VMEM across k-steps. Block sizes keep the
+(bm, bk, bn) broadcast intermediate within VMEM (bm*bk*bn*4B + tiles
+≲ 8 MiB of the ~16 MiB/core budget), and bm/bn are 128-aligned for lane
+efficiency.
+
+The MXU-friendly alternative (bucketized boolean closure, used by the
+engine's ``mxu_bucket`` mode) lives in ``kernels/bucket``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = float("-inf")
+
+
+def _maxmin_kernel(a_ref, b_ref, o_ref, *, bk: int):
+    """Grid = (m/bm, n/bn, k/bk); k is the innermost (minor) grid dim so the
+    o_ref tile is revisited with the same (i, j) while k sweeps."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.full_like(o_ref, NEG_INF)
+
+    a = a_ref[...]  # (bm, bk) VMEM tile
+    b = b_ref[...]  # (bk, bn) VMEM tile
+    # broadcast-min then max-reduce over k: (bm, bk, bn) stays in VMEM
+    c = jnp.max(jnp.minimum(a[:, :, None], b[None, :, :]), axis=1)
+    o_ref[...] = jnp.maximum(o_ref[...], c)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def maxmin_matmul(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 64,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """(max, min) matmul via pallas_call. a: (m, k), b: (k, n) -> (m, n).
+
+    Inputs are padded (with -inf, the semiring zero) to block multiples.
+    ``interpret=True`` runs the kernel body in Python on CPU (validation
+    path on this host; TPU is the deployment target).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    dtype = a.dtype
+    mp, np_, kp = (-m) % bm, (-n) % bn, (-k) % bk
+    if mp or kp:
+        a = jnp.pad(a, ((0, mp), (0, kp)), constant_values=NEG_INF)
+    if np_ or kp:
+        b = jnp.pad(b, ((0, kp), (0, np_)), constant_values=NEG_INF)
+    M, K = a.shape
+    _, N = b.shape
+
+    grid = (M // bm, N // bn, K // bk)
+    out = pl.pallas_call(
+        functools.partial(_maxmin_kernel, bk=bk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), dtype),
+        interpret=interpret,
+    )(a, b)
+    return out[:m, :n]
+
+
+def maxmin_matmul_batched(a: jnp.ndarray, b: jnp.ndarray, **kw) -> jnp.ndarray:
+    """Batched over a leading J dim (one slice per DFA transition)."""
+    return jax.vmap(lambda x, y: maxmin_matmul(x, y, **kw))(a, b)

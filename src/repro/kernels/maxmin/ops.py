@@ -1,0 +1,34 @@
+"""Jitted public wrapper for the bottleneck-semiring matmul.
+
+Dispatches between the Pallas TPU kernel and the chunked pure-jnp fallback.
+On this CPU host the Pallas path runs with ``interpret=True`` (validation);
+on TPU it compiles to a VPU kernel with VMEM tiling.
+"""
+from __future__ import annotations
+
+import jax
+
+from .maxmin import maxmin_matmul
+from .ref import maxmin_matmul_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def maxmin(a, b, *, use_pallas: bool | None = None, interpret: bool | None = None):
+    """C[i, j] = max_k min(A[i, k], B[k, j]).
+
+    use_pallas=None -> pallas on TPU, jnp fallback elsewhere.
+    """
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        if interpret is None:
+            interpret = not _on_tpu()
+        return maxmin_matmul(a, b, interpret=interpret)
+    return maxmin_matmul_ref(a, b)
+
+
+def maxmin_batched(a, b, **kw):
+    return jax.vmap(lambda x, y: maxmin(x, y, **kw))(a, b)

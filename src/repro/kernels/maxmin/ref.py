@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for the (max, min) bottleneck-semiring matmul.
+
+C[i, j] = max_k min(A[i, k], B[k, j])
+
+This is the dense form of the paper's product-graph relaxation (DESIGN.md §2):
+A holds source-side bottleneck timestamps, B holds edge timestamps, C the
+improved bottleneck timestamps. -inf encodes "unreachable / no edge".
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def maxmin_matmul_ref(a: jnp.ndarray, b: jnp.ndarray, *, chunk: int = 128) -> jnp.ndarray:
+    """Reference (max, min) matmul; chunked over k to bound the (m, k, n)
+    broadcast intermediate. Shapes: a (m, k), b (k, n) -> (m, n)."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    neg = jnp.asarray(-jnp.inf, a.dtype)
+    out = jnp.full((m, n), neg, dtype=a.dtype)
+    # pad k to a multiple of chunk with -inf columns (identity for max-min)
+    pad = (-k) % chunk
+    if pad:
+        a = jnp.pad(a, ((0, 0), (0, pad)), constant_values=-jnp.inf)
+        b = jnp.pad(b, ((0, pad), (0, 0)), constant_values=-jnp.inf)
+    kk = a.shape[1]
+
+    def body(i, out):
+        asl = lax.dynamic_slice(a, (0, i * chunk), (m, chunk))
+        bsl = lax.dynamic_slice(b, (i * chunk, 0), (chunk, n))
+        c = jnp.max(jnp.minimum(asl[:, :, None], bsl[None, :, :]), axis=1)
+        return jnp.maximum(out, c)
+
+    return lax.fori_loop(0, kk // chunk, body, out)
+
+
+def maxmin_matmul_naive(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Unchunked one-liner (test-size inputs only)."""
+    return jnp.max(jnp.minimum(a[:, :, None], b[None, :, :]), axis=1)

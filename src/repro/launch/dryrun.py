@@ -1,0 +1,460 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST be run as its own process (the two lines above must execute before any
+jax import anywhere): ``PYTHONPATH=src python -m repro.launch.dryrun --arch
+<id> --shape <name> --mesh pod|multipod`` or ``--all``.
+
+Per cell it records into benchmarks/results/dryrun/<arch>__<shape>__<mesh>.json:
+  * memory_analysis (argument/output/temp bytes per device) + a <=16 GiB/chip
+    HBM assertion (params+opt+cache shards + temps),
+  * cost_analysis flops / bytes (per-device, post-SPMD — includes sharding
+    redundancy), and the pre-partition global flops from the lowered module,
+  * the collective schedule scraped from the compiled HLO: op kind, shape,
+    bytes, replica-group size, and ring-model bytes-on-wire per device.
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import ARCH_NAMES, SHAPES, get_config, shape_applicable
+from ..distributed.sharding import (
+    batch_shardings,
+    cache_shardings,
+    make_constrain,
+    params_shardings,
+)
+from ..launch.mesh import make_production_mesh
+from ..launch.specs import abstract_opt_state, abstract_params, decode_specs, token_specs
+from ..launch.train import make_train_step
+from ..models.transformer import Model
+from ..optim.adamw import AdamWConfig
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "benchmarks", "results", "dryrun")
+
+HBM_PER_CHIP = 16 * 1024**3  # v5e
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLL_RE = re.compile(
+    r"(\w[\w.\-]*)\s*=\s*(?:\()?([a-z0-9]+)\[([0-9,]*)\][^)]*?"
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)\b"
+)
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def scrape_collectives(hlo_text: str) -> List[Dict[str, Any]]:
+    """Collect collective ops with output bytes + group size + wire model."""
+    out = []
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        _name, dt, dims, kind = m.groups()
+        nbytes = _DTYPE_BYTES.get(dt)
+        if nbytes is None:
+            continue
+        size = nbytes * int(np.prod([int(d) for d in dims.split(",") if d])) \
+            if dims else nbytes
+        g = _GROUPS_RE.search(line)
+        if g:
+            group = len(g.group(1).split(","))
+        else:
+            gi = _GROUPS_IOTA_RE.search(line)
+            group = int(gi.group(2)) if gi else 1
+        # ring-model bytes on the wire per participating device
+        if kind == "all-reduce":
+            wire = 2 * size * (group - 1) / max(group, 1)
+        elif kind in ("all-gather",):
+            wire = size * (group - 1) / max(group, 1)
+        elif kind in ("reduce-scatter", "all-to-all"):
+            wire = size * (group - 1) / max(group, 1)
+        else:  # collective-permute
+            wire = size
+        out.append({"kind": kind, "bytes": size, "group": group, "wire_bytes": wire})
+    return out
+
+
+def build_cell(arch: str, shape_name: str, multi_pod: bool,
+               scan_unroll: bool = False, n_layers: int = 0):
+    import dataclasses
+    cfg = get_config(arch)
+    if n_layers:
+        cfg = dataclasses.replace(cfg, n_layers=n_layers)
+    if cfg.n_experts:
+        mesh_probe = make_production_mesh(multi_pod=multi_pod)
+        shards = mesh_probe.shape["data"] * mesh_probe.shape.get("pod", 1)
+        shape_probe = SHAPES[shape_name]
+        tokens = shape_probe.global_batch * (1 if shape_probe.kind == "decode"
+                                             else shape_probe.seq_len)
+        groups = shards
+        while tokens % groups != 0 or groups > tokens:
+            groups //= 2
+        cfg = dataclasses.replace(cfg, moe_groups=max(groups, 1))
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    tp = mesh.shape["model"]
+    seq_sharded = shape.global_batch < mesh.shape["data"]
+    model = Model(cfg, tp=tp, constrain=make_constrain(mesh, seq_sharded=seq_sharded),
+                  scan_unroll=scan_unroll)
+    return cfg, shape, mesh, model, seq_sharded
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               scan_unroll: bool = False, n_layers: int = 0,
+               serving_sharding: bool = False):
+    """Returns (lowered, static_arg_bytes_per_device, meta)."""
+    cfg, shape, mesh, model, seq_sharded = build_cell(
+        arch, shape_name, multi_pod, scan_unroll=scan_unroll, n_layers=n_layers)
+    chips = int(np.prod(list(mesh.shape.values())))
+    p_abs = abstract_params(model)
+    p_shard = params_shardings(
+        p_abs, mesh, serving=(serving_sharding and shape.kind != "train"))
+    bshard = batch_shardings(mesh, seq_sharded)
+
+    if shape.kind == "train":
+        opt_cfg = AdamWConfig(moment_dtype=cfg.opt_state_dtype)
+        o_abs = abstract_opt_state(model, opt_cfg)
+        o_shard = opt_shardings(o_abs, p_abs, p_shard, mesh)
+        batch = token_specs(model, shape)
+        b_shard = {k: bshard(k, v.shape) for k, v in batch.items()}
+        step = make_train_step(model, opt_cfg)
+        jitted = jax.jit(
+            step,
+            in_shardings=(p_shard, o_shard, b_shard),
+            donate_argnums=(0, 1),
+        )
+        with jax.set_mesh(mesh):
+            lowered = jitted.lower(p_abs, o_abs, batch)
+        state_bytes = (_tree_bytes(p_abs) + _tree_bytes(o_abs)) / chips
+    elif shape.kind == "prefill":
+        batch = token_specs(model, shape)
+        b_shard = {k: bshard(k, v.shape) for k, v in batch.items()}
+
+        def prefill_step(params, batch):
+            return model.prefill(params, batch["tokens"], batch.get("prefix_embeds"))
+
+        jitted = jax.jit(prefill_step, in_shardings=(p_shard, b_shard))
+        with jax.set_mesh(mesh):
+            lowered = jitted.lower(p_abs, batch)
+        state_bytes = _tree_bytes(p_abs) / chips
+    else:  # decode
+        token, caches = decode_specs(model, shape)
+        c_shard = cache_shardings(mesh, caches, seq_sharded)
+        t_shard = bshard("tokens", token.shape)
+
+        def serve_step(params, token, caches):
+            return model.decode_step(params, token, caches)
+
+        jitted = jax.jit(
+            serve_step,
+            in_shardings=(p_shard, t_shard, c_shard),
+            donate_argnums=(2,),
+        )
+        with jax.set_mesh(mesh):
+            lowered = jitted.lower(p_abs, token, caches)
+        state_bytes = (_tree_bytes(p_abs) + _tree_bytes(caches)) / chips
+
+    meta = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips,
+        "kind": shape.kind,
+        "seq_sharded": seq_sharded,
+        "params_logical": cfg.param_count(),
+        "params_active": cfg.active_param_count(),
+        "params_padded": cfg.param_count(logical=False, tp=mesh.shape["model"]),
+        "state_bytes_per_chip": state_bytes,
+    }
+    return lowered, meta
+
+
+def opt_shardings(o_abs, p_abs, p_shard, mesh):
+    """Optimizer moments share the param shardings; step is replicated."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    rep = NamedSharding(mesh, P())
+    return type(o_abs)(
+        step=rep,
+        m=jax.tree.map(lambda _l, s: s, o_abs.m, p_shard),
+        v=jax.tree.map(lambda _l, s: s, o_abs.v, p_shard),
+    )
+
+
+def analytic_activation_bytes(cfg, shape, mesh, model) -> float:
+    """Per-chip activation bound under the nested-remat schedule (what TPU
+    buffer assignment would see). XLA:CPU's temp accounting materializes an
+    f32 copy of every bf16 dot operand and keeps conservative liveness for
+    rolled loops, so the CPU `memory.temp_bytes` is reported as a diagnostic
+    only (EXPERIMENTS.md §Perf It.3 forensics).
+
+    Terms (bf16 activations = 2B, f32 transients = 4B):
+      boundaries : n_periods x (b_l*s*d) x 2          (outer remat residuals)
+      layer_in   : period x (b_l*s*d) x 2             (inner remat residuals)
+      cotangent  : 3 x (b_l*s*d) x 4
+      work       : max over layer kinds of its transient set
+      head/loss  : (b_l*q_chunk*V_l) x 4 x 2
+    """
+    tp = mesh.shape["model"]
+    bs = mesh.shape["data"] * mesh.shape.get("pod", 1)
+    b, sq = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        sq = 1
+    b_l = max(b // bs, 1)
+    if b < bs:  # seq sharded
+        sq = max(sq // bs, 1)
+        b_l = b
+    d = cfg.d_model
+    hidden = b_l * sq * d
+    n_periods = cfg.n_layers // cfg.period
+    V_l = cfg.padded_vocab(tp) // tp
+    H, KV = cfg.padded_heads(tp)
+    h_l = max(H // tp, 1) if H else 0
+    work = 0.0
+    for o in range(cfg.period):
+        w = 0.0
+        if cfg.layer_kind(o) == "attn":
+            kv_len = shape.seq_len if shape.kind == "decode" else sq
+            w += b_l * h_l * cfg.q_chunk * kv_len * 4          # score chunk
+            w += 3 * b_l * sq * h_l * cfg.head_dim * 2         # qkv slices
+        else:
+            sh_l = max(cfg.ssm_heads // tp, 1)
+            w += 3 * b_l * sq * cfg.ssm_chunk * sh_l * 4       # intra-chunk L/W/dW
+            w += b_l * sq * (2 * cfg.d_inner // tp + 2 * cfg.ssm_state) * 2
+        if cfg.mlp_kind(o) == "moe":
+            E_l = max(cfg.n_experts // tp, 1)
+            T_g = b_l * sq if shape.kind != "train" else (b * shape.seq_len) // max(cfg.moe_groups, 1)
+            C = max(int(np.ceil(cfg.capacity_factor * T_g * cfg.experts_per_token / cfg.n_experts)), 1)
+            w += 2 * E_l * C * (d + cfg.d_ff) * 2
+        elif cfg.d_ff:
+            w += 2 * b_l * sq * (cfg.d_ff // tp if cfg.d_ff % tp == 0 else cfg.d_ff) * 2
+        work = max(work, w)
+    M = max(cfg.microbatches, 1) if shape.kind == "train" else 1
+    total = (n_periods * hidden * 2 + cfg.period * hidden * 2
+             + 3 * hidden * 4 + work + b_l * cfg.q_chunk * V_l * 4 * 2) / M
+    if shape.kind == "train" and M > 1:
+        total += _grad_buffer_bytes(cfg, mesh)  # bf16 accumulation buffer
+    if shape.kind != "train":
+        # no backward: boundaries/cotangents absent; keep layer transit + head
+        total = cfg.period * hidden * 2 + work + b_l * max(sq, 1) * V_l * 4
+    return float(total)
+
+
+def _grad_buffer_bytes(cfg, mesh) -> float:
+    chips = int(np.prod(list(mesh.shape.values())))
+    return 2.0 * cfg.param_count(logical=False, tp=mesh.shape["model"]) / chips
+
+
+def _tree_bytes(tree) -> int:
+    return sum(
+        int(np.prod(l.shape)) * l.dtype.itemsize for l in jax.tree.leaves(tree)
+    )
+
+
+
+
+def probe_period_costs(arch: str, shape_name: str, multi_pod: bool,
+                       serving_sharding: bool = False):
+    """Per-period flop/byte/collective accounting.
+
+    XLA's HloCostAnalysis counts a while-loop body ONCE, so the rolled-scan
+    full model undercounts by ~n_periods. We lower UNROLLED 1-period and
+    2-period variants (cheap: 1-2 layers of the same width/sharding) and
+    extrapolate linearly — exact for a homogeneous layer stack:
+        cost(n) = base + n * per_period,  per_period = c2 - c1.
+    """
+    cfg = get_config(arch)
+    out = {}
+    for npd in (1, 2):
+        lowered, _meta = lower_cell(arch, shape_name, multi_pod,
+                                    scan_unroll=True,
+                                    n_layers=npd * cfg.period,
+                                    serving_sharding=serving_sharding)
+        compiled = lowered.compile()
+        ca = compiled.cost_analysis() or {}
+        colls = scrape_collectives(compiled.as_text())
+        out[npd] = {
+            "flops": ca.get("flops", 0.0),
+            "bytes": ca.get("bytes accessed", 0.0),
+            "wire": sum(c["wire_bytes"] for c in colls),
+            "by_kind": _sum_by_kind(colls),
+            "global_flops": lowered.cost_analysis().get("flops", 0.0),
+        }
+    n_periods = cfg.n_layers // cfg.period
+    per = {k: out[2][k] - out[1][k] for k in ("flops", "bytes", "wire", "global_flops")}
+    base = {k: out[1][k] - per[k] for k in per}
+    per_kind = {k: out[2]["by_kind"].get(k, 0.0) - out[1]["by_kind"].get(k, 0.0)
+                for k in set(out[1]["by_kind"]) | set(out[2]["by_kind"])}
+    base_kind = {k: out[1]["by_kind"].get(k, 0.0) - per_kind.get(k, 0.0)
+                 for k in per_kind}
+    total = {k: base[k] + n_periods * per[k] for k in per}
+    total_kind = {k: base_kind[k] + n_periods * per_kind[k] for k in per_kind}
+    return {
+        "device_flops_extrap": total["flops"],
+        "device_bytes_extrap": total["bytes"],
+        "global_flops_extrap": total["global_flops"],
+        "collective_wire_bytes_extrap": total["wire"],
+        "collectives_by_kind_extrap": total_kind,
+        "per_period": per,
+    }
+
+
+def _sum_by_kind(colls):
+    out = {}
+    for c in colls:
+        out[c["kind"]] = out.get(c["kind"], 0.0) + c["wire_bytes"]
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: str = RESULTS_DIR, force: bool = False,
+             serving_sharding: bool = False) -> Dict[str, Any]:
+    os.makedirs(out_dir, exist_ok=True)
+    mesh_tag = "multipod" if multi_pod else "pod"
+    tag = f"{arch}-servshard" if serving_sharding else arch
+    path = os.path.join(out_dir, f"{tag}__{shape_name}__{mesh_tag}.json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+
+    t0 = time.monotonic()
+    lowered, meta = lower_cell(arch, shape_name, multi_pod,
+                               serving_sharding=serving_sharding)
+    t_lower = time.monotonic() - t0
+    if serving_sharding:
+        meta["arch"] = tag
+    global_flops = lowered.cost_analysis().get("flops", 0.0)
+
+    t0 = time.monotonic()
+    compiled = lowered.compile()
+    t_compile = time.monotonic() - t0
+
+    ca = compiled.cost_analysis() or {}
+    ma = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    colls = scrape_collectives(hlo)
+    probe = probe_period_costs(arch, shape_name, multi_pod,
+                               serving_sharding=serving_sharding)
+
+    mem = {
+        "argument_bytes": getattr(ma, "argument_size_in_bytes", 0),
+        "output_bytes": getattr(ma, "output_size_in_bytes", 0),
+        "temp_bytes_cpu_backend": getattr(ma, "temp_size_in_bytes", 0),
+        "alias_bytes": getattr(ma, "alias_size_in_bytes", 0),
+    }
+    # peak per-chip: live state + ANALYTIC activation bound. The CPU
+    # backend's temp number is kept as a diagnostic: XLA:CPU materializes
+    # f32 copies of bf16 dot operands and schedules rolled loops
+    # conservatively, neither of which exists on TPU (HLO forensics in
+    # EXPERIMENTS.md §Perf It.3).
+    cfg_m = get_config(arch)
+    shape_m = SHAPES[shape_name]
+    mesh_m = make_production_mesh(multi_pod=multi_pod)
+    model_m = None
+    act = analytic_activation_bytes(cfg_m, shape_m, mesh_m, model_m)
+    mem["activation_bytes_analytic"] = act
+    peak = meta["state_bytes_per_chip"] + act
+    coll_wire = sum(c["wire_bytes"] for c in colls)
+    by_kind: Dict[str, float] = {}
+    for c in colls:
+        by_kind[c["kind"]] = by_kind.get(c["kind"], 0.0) + c["wire_bytes"]
+
+    # gradient-accumulation scan bodies are counted ONCE by cost analysis:
+    # scale per-step costs by M for train cells
+    M = get_config(arch).microbatches if SHAPES[shape_name].kind == "train" else 1
+    if M > 1:
+        for key in ("device_flops_extrap", "device_bytes_extrap",
+                    "global_flops_extrap", "collective_wire_bytes_extrap"):
+            if key in probe:
+                probe[key] *= M
+        probe["collectives_by_kind_extrap"] = {
+            k: v * M for k, v in probe.get("collectives_by_kind_extrap", {}).items()}
+    result = {
+        **meta,
+        "ok": True,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "global_flops": global_flops,
+        "device_flops": ca.get("flops", 0.0),
+        "device_bytes": ca.get("bytes accessed", 0.0),
+        "memory": mem,
+        "peak_bytes_per_chip": peak,
+        "fits_hbm": bool(peak <= HBM_PER_CHIP),
+        "n_collectives": len(colls),
+        "collective_wire_bytes_rolled": coll_wire,
+        "collectives_by_kind_rolled": by_kind,
+        **probe,
+    }
+    # HBM check: report, and hard-fail only when state alone cannot fit
+    if meta["state_bytes_per_chip"] > HBM_PER_CHIP:
+        result["ok"] = False
+        result["error"] = "state exceeds HBM"
+
+    with open(path, "w") as f:
+        json.dump(result, f, indent=1)
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="")
+    ap.add_argument("--shape", default="")
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--serving-sharding", action="store_true",
+                    help="replicate params over data axes for serve cells")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in ARCH_NAMES:
+            cfg = get_config(arch)
+            for shape_name, shape in SHAPES.items():
+                if not shape_applicable(cfg, shape):
+                    continue
+                for mp in ((False, True) if args.mesh in ("both",) else
+                           ((args.mesh == "multipod"),)):
+                    cells.append((arch, shape_name, mp))
+    else:
+        meshes = [False, True] if args.mesh == "both" else [args.mesh == "multipod"]
+        for mp in meshes:
+            cells.append((args.arch, args.shape, mp))
+
+    failures = 0
+    for arch, shape_name, mp in cells:
+        tag = f"{arch} x {shape_name} x {'2x16x16' if mp else '16x16'}"
+        try:
+            r = run_cell(arch, shape_name, mp, force=args.force,
+                         serving_sharding=args.serving_sharding)
+            print(f"[ok] {tag}: compile {r['compile_s']}s, "
+                  f"state {r['state_bytes_per_chip']/2**30:.2f} GiB/chip, "
+                  f"fits_hbm={r['fits_hbm']}, colls={r['n_collectives']}",
+                  flush=True)
+            if not r["ok"]:
+                failures += 1
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"[FAIL] {tag}: {type(e).__name__}: {e}", flush=True)
+            traceback.print_exc()
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,285 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Dry-run of the PAPER'S TECHNIQUE on the production mesh: one bottleneck
+relaxation round of the dense streaming-RPQ engine (the repeated unit of
+ingest/expiry/delete closures — round count is data-dependent, so the
+roofline is reported per round).
+
+Distributed layout (DESIGN.md §4):
+    dist (x, u, s): x -> (pod,)data, u -> model    (frontier)
+    adj  (l, u, v): v -> model                      (timestamped adjacency)
+Contraction over u needs the full frontier per chip -> the per-round
+all-gather over 'model' is the engine's collective term (baseline; the ring
+schedule is the §Perf hillclimb).
+
+Run: PYTHONPATH=src python -m repro.launch.dryrun_rpq [--all]
+"""
+import argparse
+import json
+import time
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..core.automaton import compile_query
+from ..core.semiring import NEG_INF, TransitionTable
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "benchmarks", "results", "dryrun")
+
+# engine cells: (name, n_slots, query, v-chunk)
+RPQ_CELLS = [
+    ("rpq_n4096_k2", 4096, "a . b*", 512),
+    ("rpq_n8192_k3", 8192, "a . b* . c", 512),
+    ("rpq_n16384_k2", 16384, "(a | b)*", 512),
+]
+
+N_LEVELS = 8  # |W|/beta buckets for the MXU mode (paper: 1-month/1-day ~ 30;
+              # 8 keeps the napkin conservative)
+
+
+def relax_round_mxu_bucket(dist_lvl, adj_lvl, tt: TransitionTable, n_levels: int):
+    """Level-quantized relaxation on the MXU: T boolean matmuls per DFA
+    transition (kernels/bucket decomposition), pure-jnp form so GSPMD can
+    partition it. Levels are int32 in [0, T]; dots run in bf16 -> f32."""
+    n = dist_lvl.shape[0]
+
+    def per_transition(j, acc):
+        s = tt.src[j]
+        l = tt.lab[j]
+        d_s = jax.lax.dynamic_index_in_dim(
+            jnp.moveaxis(dist_lvl, 2, 0), s, axis=0, keepdims=False)  # (x,u)
+        a_l = jax.lax.dynamic_index_in_dim(adj_lvl, l, axis=0, keepdims=False)
+
+        contrib = jnp.zeros((n, n), jnp.int32)
+        for theta in range(1, n_levels + 1):  # static unroll: T MXU dots
+            db = (d_s >= theta).astype(jnp.bfloat16)
+            ab = (a_l >= theta).astype(jnp.bfloat16)
+            reach = jnp.dot(db, ab, preferred_element_type=jnp.float32) > 0.5
+            contrib = contrib + reach.astype(jnp.int32)
+        contrib = jnp.where(tt.start_mask[j], jnp.maximum(contrib, a_l), contrib)
+        upd = jnp.where(tt.dst_onehot[j][None, None, :] > 0,
+                        contrib[:, :, None], 0)
+        return jnp.maximum(acc, upd)
+
+    return jax.lax.fori_loop(0, tt.src.shape[0], per_transition, dist_lvl)
+
+
+def make_ring_round(mesh, tt: TransitionTable, n_slots: int, multi_pod: bool):
+    """Manual ring reduce-scatter(max) schedule via shard_map: each chip
+    contracts its LOCAL u-block (dist and adj are co-sharded on u), then the
+    partial results ring around the model axis with max-accumulation —
+    bytes-on-wire ~1x frontier (vs 2x for all-reduce-max) and every hop can
+    overlap with the next partial contraction on TPU.
+
+    (The base term — direct edges from start transitions — is applied once
+    per ingest outside the iterated round, so it is not part of this
+    lowering.)"""
+    from jax.sharding import PartitionSpec as P
+
+    tp = mesh.shape["model"]
+    xa = ("pod", "data") if multi_pod else "data"
+
+    def local_partial(dist_blk, adj_blk, j):
+        # dist_blk: (x_l, u_l, K); adj_blk: (L, u_l, N) -> partial (x_l, N)
+        s_ = tt.src[j]
+        l_ = tt.lab[j]
+        d_s = jax.lax.dynamic_index_in_dim(
+            jnp.moveaxis(dist_blk, 2, 0), s_, axis=0, keepdims=False)
+        a_l = jax.lax.dynamic_index_in_dim(adj_blk, l_, axis=0, keepdims=False)
+        n = a_l.shape[1]
+        vc = min(512, n)
+
+        def per_chunk(c, out):
+            a = jax.lax.dynamic_slice(a_l, (0, c * vc), (a_l.shape[0], vc))
+            contrib = jnp.max(jnp.minimum(d_s[:, :, None], a[None, :, :]), axis=1)
+            return jax.lax.dynamic_update_slice(out, contrib, (0, c * vc))
+
+        return jax.lax.fori_loop(0, n // vc, per_chunk,
+                                 jnp.full((d_s.shape[0], n), NEG_INF, jnp.float32))
+
+    def body(dist_blk, adj_blk):
+        def per_t(j, acc):
+            part = local_partial(dist_blk, adj_blk, j)       # (x_l, N)
+            upd = jnp.where(tt.dst_onehot[j][None, None, :] > 0,
+                            part[:, :, None], NEG_INF)
+            return jnp.maximum(acc, upd)
+
+        x_l = dist_blk.shape[0]
+        n = adj_blk.shape[2]
+        part = jax.lax.fori_loop(
+            0, tt.src.shape[0], per_t,
+            jnp.full((x_l, n, tt.k), NEG_INF, jnp.float32))
+
+        # ring reduce-scatter(max) over 'model': after tp-1 hops each chip
+        # owns the fully-reduced u-block matching its dist_blk shard.
+        idx = jax.lax.axis_index("model")
+        u_l = n // tp
+        perm = [(k, (k - 1) % tp) for k in range(tp)]
+
+        def take(block_idx):
+            start = (block_idx % tp) * u_l
+            return jax.lax.dynamic_slice(part, (0, start, 0), (x_l, u_l, tt.k))
+
+        def hop(i, acc):
+            acc = jax.lax.ppermute(acc, "model", perm)
+            return jnp.maximum(acc, take(idx + 2 + i))
+
+        acc0 = take(idx + 1)
+        out_blk = jax.lax.fori_loop(0, tp - 1, hop, acc0)
+        return jnp.maximum(dist_blk, out_blk)
+
+    from jax.experimental.shard_map import shard_map
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P(xa, "model", None), P(None, "model", None)),
+        out_specs=P(xa, "model", None),
+        check_rep=False,
+    )
+
+
+def relax_round_vchunked(dist, adj, tt: TransitionTable, v_chunk: int):
+    """One relaxation round, chunked over the OUTPUT v dim so the broadcast
+    intermediate stays bounded and the u-contraction triggers the frontier
+    all-gather (dist's u dim is model-sharded)."""
+    n = dist.shape[0]
+
+    def per_transition(j, acc):
+        s = tt.src[j]
+        l = tt.lab[j]
+        dist_s = jax.lax.dynamic_index_in_dim(
+            jnp.moveaxis(dist, 2, 0), s, axis=0, keepdims=False)      # (x, u)
+        adj_l = jax.lax.dynamic_index_in_dim(adj, l, axis=0, keepdims=False)  # (u, v)
+
+        def per_chunk(c, out):
+            a = jax.lax.dynamic_slice(adj_l, (0, c * v_chunk), (n, v_chunk))
+            contrib = jnp.max(
+                jnp.minimum(dist_s[:, :, None], a[None, :, :]), axis=1
+            )  # (x, v_chunk)
+            return jax.lax.dynamic_update_slice(out, contrib, (0, c * v_chunk))
+
+        contrib = jax.lax.fori_loop(
+            0, n // v_chunk, per_chunk, jnp.full((n, n), NEG_INF, dist.dtype))
+        contrib = jnp.where(tt.start_mask[j], jnp.maximum(contrib, adj_l), contrib)
+        upd = jnp.where(tt.dst_onehot[j][None, None, :] > 0,
+                        contrib[:, :, None], NEG_INF)
+        return jnp.maximum(acc, upd)
+
+    return jax.lax.fori_loop(0, tt.src.shape[0], per_transition, dist)
+
+
+def run_rpq_cell(name: str, n_slots: int, query: str, v_chunk: int,
+                 multi_pod: bool, force: bool = False,
+                 mode: str = "baseline") -> Dict[str, Any]:
+    from .dryrun import scrape_collectives  # shares the HLO scraper
+    from .mesh import make_production_mesh
+
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    mesh_tag = "multipod" if multi_pod else "pod"
+    path = os.path.join(RESULTS_DIR, f"{name}-{mode}__ingest_round__{mesh_tag}.json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+
+    dfa = compile_query(query)
+    tt = TransitionTable.from_dfa(dfa)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+    xa = ("pod", "data") if multi_pod else "data"
+
+    dtype = jnp.int32 if mode == "mxu" else jnp.float32
+    dist_spec = jax.ShapeDtypeStruct((n_slots, n_slots, dfa.k), dtype)
+    adj_spec = jax.ShapeDtypeStruct((dfa.n_labels, n_slots, n_slots), dtype)
+    dist_sh = NamedSharding(mesh, P(xa, "model", None))
+    if mode == "ring":
+        adj_sh = NamedSharding(mesh, P(None, "model", None))  # u co-sharded
+        round_fn = make_ring_round(mesh, tt, n_slots, multi_pod)
+    else:
+        adj_sh = NamedSharding(mesh, P(None, None, "model"))
+
+        def round_fn(dist, adj):
+            if mode == "mxu":
+                out = relax_round_mxu_bucket(dist, adj, tt, N_LEVELS)
+            else:
+                out = relax_round_vchunked(dist, adj, tt, v_chunk)
+            return jax.lax.with_sharding_constraint(out, dist_sh)
+
+    t0 = time.monotonic()
+    with jax.set_mesh(mesh):
+        lowered = jax.jit(round_fn, in_shardings=(dist_sh, adj_sh),
+                          out_shardings=dist_sh).lower(dist_spec, adj_spec)
+    global_flops = lowered.cost_analysis().get("flops", 0.0)
+    compiled = lowered.compile()
+    t_total = time.monotonic() - t0
+    ca = compiled.cost_analysis() or {}
+    ma = compiled.memory_analysis()
+    colls = scrape_collectives(compiled.as_text())
+    state_bytes = (np.prod(dist_spec.shape) * 4 + np.prod(adj_spec.shape) * 4) / chips
+    by_kind: Dict[str, float] = {}
+    for c in colls:
+        by_kind[c["kind"]] = by_kind.get(c["kind"], 0.0) + c["wire_bytes"]
+
+    result = {
+        "arch": f"{name}-{mode}", "shape": "ingest_round",
+        "engine_mode": mode,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips, "kind": "rpq",
+        "query": query, "k": dfa.k, "n_labels": dfa.n_labels,
+        "n_slots": n_slots,
+        "ok": True,
+        "compile_s": round(t_total, 2),
+        "global_flops": global_flops,
+        "device_flops": ca.get("flops", 0.0),
+        "device_bytes": ca.get("bytes accessed", 0.0),
+        "device_flops_extrap": ca.get("flops", 0.0),
+        "device_bytes_extrap": ca.get("bytes accessed", 0.0),
+        "global_flops_extrap": global_flops,
+        "memory": {
+            "argument_bytes": getattr(ma, "argument_size_in_bytes", 0),
+            "temp_bytes": getattr(ma, "temp_size_in_bytes", 0),
+        },
+        "state_bytes_per_chip": state_bytes,
+        "peak_bytes_per_chip": state_bytes + getattr(ma, "temp_size_in_bytes", 0),
+        "fits_hbm": bool(state_bytes + getattr(ma, "temp_size_in_bytes", 0)
+                         <= 16 * 1024**3),
+        "n_collectives": len(colls),
+        # ring mode: the ppermute sits inside a fori_loop executed (tp-1)
+        # times; HLO text counts the body once, so scale the wire model
+        "collective_wire_bytes_extrap": sum(c["wire_bytes"] for c in colls)
+        * ((mesh.shape["model"] - 1) if mode == "ring" else 1),
+        "collectives_by_kind_extrap": by_kind,
+        # semiring ops (max+min per MAC-equivalent) for the analytic term:
+        "semiring_ops": 2.0 * len(dfa.transitions()) * n_slots**3,
+        "n_levels": N_LEVELS if mode == "mxu" else 0,
+    }
+    with open(path, "w") as f:
+        json.dump(result, f, indent=1)
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", default="")
+    ap.add_argument("--mesh", default="both", choices=["pod", "multipod", "both"])
+    ap.add_argument("--modes", default="baseline,mxu,ring")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    meshes = {"pod": [False], "multipod": [True], "both": [False, True]}[args.mesh]
+    for (name, n, q, vc) in RPQ_CELLS:
+        if args.cell and args.cell != name:
+            continue
+        for mp in meshes:
+            for mode in args.modes.split(","):
+                r = run_rpq_cell(name, n, q, vc, mp, force=args.force, mode=mode)
+                print(f"[ok] {name}/{mode} x {'2x16x16' if mp else '16x16'}: "
+                      f"compile {r['compile_s']}s, colls={r['n_collectives']}, "
+                      f"wire {r['collective_wire_bytes_extrap']/2**20:.1f} MiB/round",
+                      flush=True)
+
+
+if __name__ == "__main__":
+    main()

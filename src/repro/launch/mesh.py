@@ -1,0 +1,25 @@
+"""Production mesh construction.
+
+A FUNCTION (never a module-level constant) so importing this module never
+touches jax device state — required by the dry-run protocol.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 chips per v5e pod; the multi-pod mesh adds a leading 'pod' axis
+    (2 pods = 512 chips). Sources sharded over 'pod' need no per-round
+    collectives in the RPQ engine (tree independence — DESIGN.md §4)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_axis: int = 2):
+    """Small mesh over whatever devices exist (CPU tests: set
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 in the TEST process)."""
+    n = len(jax.devices())
+    data = max(n // model_axis, 1)
+    return jax.make_mesh((data, model_axis), ("data", "model"))

@@ -1,0 +1,48 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) cell.
+
+No device allocation — the dry-run lowers against these (weak-type-correct,
+shardable). Decode shapes describe ONE new token against a KV/SSM cache of
+`seq_len` (capacity seq_len + 8 headroom so the cache write stays in
+bounds), lowering `serve_step`, not `train_step`.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..models.transformer import Model
+
+DECODE_HEADROOM = 512  # keeps cache seq divisible by the batch axes (32-way)
+
+
+def token_specs(model: Model, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    cfg = model.cfg
+    b, s = shape.global_batch, shape.seq_len
+    prefix = cfg.prefix_len if cfg.frontend != "none" else 0
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((b, s - prefix), jnp.int32),
+    }
+    if prefix:
+        specs["prefix_embeds"] = jax.ShapeDtypeStruct((b, prefix, cfg.d_model), jnp.float32)
+    return specs
+
+
+def decode_specs(model: Model, shape: ShapeConfig) -> Tuple[jax.ShapeDtypeStruct, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    token = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    caches = jax.eval_shape(lambda: model.init_caches(b, s + DECODE_HEADROOM))
+    return token, caches
+
+
+def abstract_params(model: Model) -> Any:
+    return model.init_abstract()
+
+
+def abstract_opt_state(model: Model, opt_cfg) -> Any:
+    from ..optim.adamw import init_adamw
+
+    params = abstract_params(model)
+    return jax.eval_shape(lambda p: init_adamw(opt_cfg, p), params)

@@ -1,0 +1,138 @@
+"""Training driver: step builder (used by the dry-run and the CPU example)
+plus a runnable CLI for reduced-config end-to-end training with
+checkpoint/restart and straggler monitoring.
+
+CLI (CPU, reduced config):
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-360m \
+        --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from functools import partial
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import get_config
+from ..configs.base import ModelConfig
+from ..models.transformer import Model
+from ..optim.adamw import AdamWConfig, adamw_update, init_adamw
+
+
+def make_train_step(model: Model, opt_cfg: AdamWConfig) -> Callable:
+    """Single step with optional gradient accumulation: the global batch is
+    split into cfg.microbatches scanned chunks, shrinking the activation
+    live set M-fold at the cost of M sequential passes (EXPERIMENTS.md
+    §Perf It.4 — required to fit jamba-398B train on one pod). Grads
+    accumulate in bf16 (mean of means; error <= 2^-8 relative, dominated by
+    bf16 gradient noise itself)."""
+    M = model.cfg.microbatches
+
+    def train_step(params, opt_state, batch):
+        if M <= 1:
+            loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        else:
+            mbs = jax.tree.map(
+                lambda x: x.reshape((M, x.shape[0] // M) + x.shape[1:]), batch)
+
+            def micro(carry, mb):
+                g_acc, l_acc = carry
+                loss_i, g_i = jax.value_and_grad(model.loss)(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(a.dtype) / M, g_acc, g_i)
+                return (g_acc, l_acc + loss_i / M), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.bfloat16), params)
+            (grads, loss), _ = jax.lax.scan(
+                micro, (g0, jnp.zeros((), jnp.float32)), mbs)
+        new_params, new_opt, metrics = adamw_update(opt_cfg, params, grads, opt_state)
+        metrics = dict(metrics)
+        metrics["loss"] = loss
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_eval_step(model: Model) -> Callable:
+    def eval_step(params, batch):
+        return model.loss(params, batch)
+
+    return eval_step
+
+
+# ---------------------------------------------------------------------------
+# CPU end-to-end driver (reduced configs)
+# ---------------------------------------------------------------------------
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--full-config", action="store_true",
+                    help="use the full arch config (default: reduced)")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if not args.full_config:
+        cfg = cfg.reduced()
+    model = Model(cfg, tp=1)
+    opt_cfg = AdamWConfig(lr_peak=args.lr, warmup_steps=10, total_steps=args.steps,
+                          moment_dtype=cfg.opt_state_dtype)
+
+    params = model.init(jax.random.PRNGKey(0))
+    opt_state = init_adamw(opt_cfg, params)
+    step_fn = jax.jit(make_train_step(model, opt_cfg), donate_argnums=(0, 1))
+
+    from ..data.tokens import TokenPipeline
+
+    pipe = TokenPipeline(
+        vocab_size=cfg.vocab_size, seq_len=args.seq, batch_per_host=args.batch,
+        prefix_len=cfg.prefix_len if cfg.frontend != "none" else 0,
+        d_model=cfg.d_model,
+    )
+
+    from ..distributed.fault import StragglerMonitor
+
+    monitor = StragglerMonitor()
+    losses = []
+    t_start = time.monotonic()
+    for step in range(args.steps):
+        batch = {k: jnp.asarray(v) for k, v in next(pipe).items()}
+        t0 = time.monotonic()
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        loss = float(metrics["loss"])
+        monitor.observe(step, time.monotonic() - t0)
+        losses.append(loss)
+        if step % 10 == 0 or step == args.steps - 1:
+            print(f"step {step:5d}  loss {loss:.4f}  lr {float(metrics['lr']):.2e}"
+                  f"  gnorm {float(metrics['grad_norm']):.3f}")
+        if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+            from ..checkpoint import ckpt
+
+            ckpt.async_save(args.ckpt_dir, step + 1,
+                            {"params": params, "opt": opt_state},
+                            extra={"step": step + 1, "cursor": pipe.cursor()})
+    if args.ckpt_dir:
+        from ..checkpoint import ckpt
+
+        ckpt.wait_pending(args.ckpt_dir)
+    wall = time.monotonic() - t_start
+    print(f"done: {args.steps} steps in {wall:.1f}s "
+          f"({args.steps * args.batch * args.seq / wall:.0f} tok/s); "
+          f"loss {losses[0]:.3f} -> {losses[-1]:.3f}; "
+          f"stragglers: {len(monitor.stragglers)}")
+    pipe.close()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,268 @@
+"""Shared transformer layers: RMSNorm, RoPE, GQA attention (chunked,
+memory-bounded), SwiGLU MLP, embeddings.
+
+Conventions:
+  * params are nested dicts of jnp arrays (plain pytrees);
+  * every `init_*` has a matching `apply_*`;
+  * head counts may be *sharding-padded* (DESIGN.md §Arch-applicability):
+    pad q/kv head slots are zero-initialized, so they contribute nothing to
+    the output projection; FLOP fidelity is accounted in the roofline's
+    MODEL_FLOPS/HLO_FLOPS ratio.
+  * attention is chunked over query blocks (scores never materialize more
+    than (b, h, q_chunk, kv_len)) — required for the 32k prefill cells.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Dict[str, Any]
+
+
+def _dtype(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[name]
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rms_norm(params: Params, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    orig = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * params["scale"].astype(jnp.float32)).astype(orig)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float = 1e4) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 1e4) -> jnp.ndarray:
+    """x: (..., s, heads, head_dim); positions: (..., s)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                      # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., s, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]                    # (..., s, 1, hd/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, chunked)
+# ---------------------------------------------------------------------------
+
+
+def init_attention(
+    key: jax.Array,
+    d_model: int,
+    n_heads: int,
+    n_kv: int,
+    head_dim: int,
+    qkv_bias: bool = False,
+    dtype=jnp.bfloat16,
+    n_heads_logical: Optional[int] = None,
+    n_kv_logical: Optional[int] = None,
+) -> Params:
+    """Padded head slots (>= logical counts) are zero-initialized."""
+    kq, kk, kv_, ko = jax.random.split(key, 4)
+    hl = n_heads_logical or n_heads
+    kl = n_kv_logical or n_kv
+    scale = 1.0 / np.sqrt(d_model)
+
+    def dense(k, out_cols, live_cols):
+        w = jax.random.normal(k, (d_model, out_cols), jnp.float32) * scale
+        if live_cols < out_cols:
+            w = w.at[:, live_cols:].set(0.0)
+        return w.astype(dtype)
+
+    wo = jax.random.normal(ko, (n_heads * head_dim, d_model), jnp.float32)
+    wo = wo * (1.0 / np.sqrt(n_heads * head_dim))
+    wo = wo.at[hl * head_dim :, :].set(0.0)  # pad head slots contribute nothing
+    p = {
+        "wq": dense(kq, n_heads * head_dim, hl * head_dim),
+        "wk": dense(kk, n_kv * head_dim, kl * head_dim),
+        "wv": dense(kv_, n_kv * head_dim, kl * head_dim),
+        "wo": wo.astype(dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads * head_dim,), dtype)
+        p["bk"] = jnp.zeros((n_kv * head_dim,), dtype)
+        p["bv"] = jnp.zeros((n_kv * head_dim,), dtype)
+    return p
+
+
+def _qkv(params: Params, x: jnp.ndarray, n_heads: int, n_kv: int, head_dim: int):
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if "bq" in params:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    b, s, _ = x.shape
+    q = q.reshape(b, s, n_heads, head_dim)
+    k = k.reshape(b, s, n_kv, head_dim)
+    v = v.reshape(b, s, n_kv, head_dim)
+    return q, k, v
+
+
+def _grouped_scores(q: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+    """q: (b, sq, kv, g, hd), k: (b, skv, kv, hd) -> (b, kv, g, sq, skv)."""
+    return jnp.einsum("bqkgh,bskh->bkgqs", q, k)
+
+
+def chunked_causal_attention(
+    q: jnp.ndarray,            # (b, s, H, hd)
+    k: jnp.ndarray,            # (b, s, KV, hd)
+    v: jnp.ndarray,            # (b, s, KV, hd)
+    q_chunk: int = 512,
+    q_offset: int = 0,
+) -> jnp.ndarray:
+    """Causal attention, chunked over query blocks: per-block scores are
+    (b, H, q_chunk, s) so the full (s, s) score matrix never materializes.
+    `q_offset` supports chunked prefill continuation."""
+    b, s, H, hd = q.shape
+    kvh = k.shape[2]
+    g = H // kvh
+    scale = 1.0 / np.sqrt(hd)
+    pad = (-s) % q_chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n_chunks = q.shape[1] // q_chunk
+    qc = q.reshape(b, n_chunks, q_chunk, H, hd)
+    kv_pos = jnp.arange(k.shape[1])
+
+    def one_chunk(ci):
+        qi = qc[:, ci]                                   # (b, qc, H, hd)
+        qi = qi.reshape(b, q_chunk, kvh, g, hd)
+        scores = _grouped_scores(qi, k) * scale          # (b, kv, g, qc, skv)
+        q_pos = q_offset + ci * q_chunk + jnp.arange(q_chunk)
+        mask = kv_pos[None, :] <= q_pos[:, None]         # (qc, skv)
+        scores = jnp.where(mask[None, None, None], scores.astype(jnp.float32), -1e30)
+        w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+        out = jnp.einsum("bkgqs,bskh->bqkgh", w, v)
+        return out.reshape(b, q_chunk, H, hd)
+
+    out = jax.lax.map(one_chunk, jnp.arange(n_chunks))   # (n, b, qc, H, hd)
+    out = jnp.moveaxis(out, 0, 1).reshape(b, n_chunks * q_chunk, H, hd)
+    return out[:, :s]
+
+
+def decode_attention(
+    q: jnp.ndarray,            # (b, 1, H, hd)
+    k_cache: jnp.ndarray,      # (b, S, KV, hd)
+    v_cache: jnp.ndarray,      # (b, S, KV, hd)
+    cache_len: jnp.ndarray,    # (b,) or scalar int32: valid prefix length
+) -> jnp.ndarray:
+    b, _one, H, hd = q.shape
+    kvh = k_cache.shape[2]
+    g = H // kvh
+    scale = 1.0 / np.sqrt(hd)
+    qi = q.reshape(b, 1, kvh, g, hd)
+    scores = _grouped_scores(qi, k_cache) * scale        # (b, kv, g, 1, S)
+    pos = jnp.arange(k_cache.shape[1])
+    valid = pos[None, :] < jnp.broadcast_to(jnp.asarray(cache_len), (b,))[:, None]
+    scores = jnp.where(valid[:, None, None, None, :], scores.astype(jnp.float32), -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(v_cache.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", w, v_cache)
+    return out.reshape(b, 1, H, hd)
+
+
+def apply_attention(
+    params: Params,
+    x: jnp.ndarray,
+    *,
+    n_heads: int,
+    n_kv: int,
+    head_dim: int,
+    rope_theta: float = 1e4,
+    q_chunk: int = 512,
+    positions: Optional[jnp.ndarray] = None,
+    cache: Optional[Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]] = None,
+) -> Tuple[jnp.ndarray, Optional[Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]]]:
+    """Training/prefill when cache is None (causal over x); decode when cache
+    = (k_cache, v_cache, cache_len) and x is a single-token slice."""
+    b, s, _ = x.shape
+    q, k, v = _qkv(params, x, n_heads, n_kv, head_dim)
+    if cache is None:
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+        out = chunked_causal_attention(q, k, v, q_chunk=q_chunk)
+        new_cache = (k, v, jnp.full((b,), s, jnp.int32))
+    else:
+        k_cache, v_cache, cache_len = cache
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.asarray(cache_len)[:, None], (b, s))
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+        idx = jnp.broadcast_to(jnp.asarray(cache_len), (b,))
+        k_cache = jax.vmap(lambda c, upd, i: jax.lax.dynamic_update_slice(
+            c, upd, (i, 0, 0)))(k_cache, k, idx)
+        v_cache = jax.vmap(lambda c, upd, i: jax.lax.dynamic_update_slice(
+            c, upd, (i, 0, 0)))(v_cache, v, idx)
+        out = decode_attention(q, k_cache, v_cache, idx + 1)
+        new_cache = (k_cache, v_cache, idx + 1)
+    y = out.reshape(b, s, -1) @ params["wo"]
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key: jax.Array, d_model: int, d_ff: int, dtype=jnp.bfloat16) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = 1.0 / np.sqrt(d_model)
+    s_out = 1.0 / np.sqrt(d_ff)
+    return {
+        "w_gate": (jax.random.normal(k1, (d_model, d_ff), jnp.float32) * s_in).astype(dtype),
+        "w_up": (jax.random.normal(k2, (d_model, d_ff), jnp.float32) * s_in).astype(dtype),
+        "w_down": (jax.random.normal(k3, (d_ff, d_model), jnp.float32) * s_out).astype(dtype),
+    }
+
+
+def apply_mlp(params: Params, x: jnp.ndarray) -> jnp.ndarray:
+    return (jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])) @ params["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+
+
+def init_embedding(key: jax.Array, vocab: int, d_model: int, dtype=jnp.bfloat16) -> Params:
+    return {"table": (jax.random.normal(key, (vocab, d_model), jnp.float32) * 0.02).astype(dtype)}
+
+
+def embed(params: Params, tokens: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def init_lm_head(key: jax.Array, d_model: int, vocab: int, dtype=jnp.bfloat16) -> Params:
+    return {"w": (jax.random.normal(key, (d_model, vocab), jnp.float32) / np.sqrt(d_model)).astype(dtype)}
+
+
+def lm_logits(params: Params, x: jnp.ndarray) -> jnp.ndarray:
+    return (x @ params["w"]).astype(jnp.float32)

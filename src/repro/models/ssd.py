@@ -1,0 +1,215 @@
+"""Mamba-2 SSD (state-space duality) block [arXiv:2405.21060], chunked
+matmul form for training/prefill + O(1)-state recurrent decode step.
+
+The chunked algorithm splits the sequence into chunks of length Q and
+computes (per head):
+    intra-chunk:  Y_ij = C_i·B_j * exp(cumA_i - cumA_j) * dt_j * x_j (j<=i)
+    chunk state:  S_c  = sum_j exp(cumA_Q - cumA_j) * dt_j * B_j ⊗ x_j
+    inter-chunk:  S <- S * exp(sumA_c) + S_c   (scan over chunks)
+                  Y_i += C_i · S_prev * exp(cumA_i)
+which is matmul-dominated (MXU-friendly) — the TPU-idiomatic form of the
+selective scan. ngroups = 1 (B/C shared across heads).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Dict[str, Any]
+
+
+class SSDConfig(NamedTuple):
+    d_model: int
+    d_inner: int
+    n_heads: int        # d_inner // head_dim
+    head_dim: int
+    d_state: int
+    d_conv: int = 4
+    chunk: int = 256
+
+
+def init_ssd(key: jax.Array, cfg: SSDConfig, dtype=jnp.bfloat16) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.d_state
+    h = cfg.n_heads
+    conv_ch = di + 2 * n  # x, B, C go through the causal conv
+    s_in = 1.0 / np.sqrt(d)
+    return {
+        # in_proj -> [z (di), x (di), B (n), C (n), dt (h)]
+        "w_in": (jax.random.normal(k1, (d, 2 * di + 2 * n + h), jnp.float32) * s_in).astype(dtype),
+        "conv_w": (jax.random.normal(k2, (cfg.d_conv, conv_ch), jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h).astype(jnp.float32)),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "w_out": (jax.random.normal(k3, (di, d), jnp.float32) / np.sqrt(di)).astype(dtype),
+        "norm_scale": jnp.ones((di,), dtype),  # gated RMSNorm before out_proj
+    }
+
+
+def _split_proj(cfg: SSDConfig, proj: jnp.ndarray):
+    di, n, h = cfg.d_inner, cfg.d_state, cfg.n_heads
+    z = proj[..., :di]
+    xbc = proj[..., di : di + di + 2 * n]
+    dt = proj[..., di + di + 2 * n :]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 state: jnp.ndarray | None = None):
+    """Depthwise causal conv over time. xbc: (b, s, ch); w: (k, ch).
+    Returns (out, new_state) where state is the last (k-1) inputs."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, xbc], axis=1)          # (b, s+k-1, ch)
+    out = sum(xp[:, i : i + xbc.shape[1]] * w[i] for i in range(k)) + b
+    new_state = xp[:, -(k - 1):] if k > 1 else jnp.zeros_like(pad)
+    return jax.nn.silu(out), new_state
+
+
+def _gated_norm(y: jnp.ndarray, z: jnp.ndarray, scale: jnp.ndarray, eps=1e-6):
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), -1, keepdims=True)
+    return (y.astype(jnp.float32) * jax.lax.rsqrt(var + eps)).astype(y.dtype) * scale
+
+
+def ssd_chunked(
+    x: jnp.ndarray,      # (b, s, h, p)
+    dt: jnp.ndarray,     # (b, s, h) post-softplus
+    A: jnp.ndarray,      # (h,) negative
+    B: jnp.ndarray,      # (b, s, n)
+    C: jnp.ndarray,      # (b, s, n)
+    chunk: int,
+    init_state: jnp.ndarray | None = None,  # (b, h, n, p)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (y (b,s,h,p), final_state (b,h,n,p))."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    S = s + pad
+    nc = S // chunk
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h).astype(jnp.float32)
+    Bc = B.reshape(b, nc, chunk, n)
+    Cc = C.reshape(b, nc, chunk, n)
+
+    dA = dtc * A[None, None, None, :]                    # (b,nc,Q,h) negative
+    cum = jnp.cumsum(dA, axis=2)                          # inclusive cumsum
+    # intra-chunk decay matrix L[i,j] = exp(cum_i - cum_j), i >= j
+    li = cum[:, :, :, None, :] - cum[:, :, None, :, :]    # (b,nc,Q,Q,h)
+    iq = jnp.arange(chunk)
+    causal = (iq[:, None] >= iq[None, :])[None, None, :, :, None]
+    # mask BEFORE exp: non-causal li is positive and exp overflows, which
+    # would poison gradients through the where (standard where-grad trap)
+    L = jnp.exp(jnp.where(causal, li, -jnp.inf))
+    # scores: (C_i . B_j)
+    cb = jnp.einsum("bcin,bcjn->bcij", Cc.astype(jnp.float32), Bc.astype(jnp.float32))
+    W = cb[..., None] * L * dtc[:, :, None, :, :]         # (b,nc,Q,Q,h)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", W, xc.astype(jnp.float32))
+
+    # chunk states: S_c = sum_j exp(cum_Q - cum_j) dt_j B_j (x) x_j
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)       # (b,nc,Q,h)
+    state_c = jnp.einsum(
+        "bcjh,bcjn,bcjhp->bchnp",
+        decay_to_end * dtc, Bc.astype(jnp.float32), xc.astype(jnp.float32),
+    )                                                     # (b,nc,h,n,p)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])               # (b,nc,h)
+
+    def scan_fn(S_prev, inp):
+        sc, dec = inp
+        S_new = S_prev * dec[..., None, None] + sc        # (b,h,n,p)
+        return S_new, S_prev
+
+    S0 = (jnp.zeros((b, h, n, p), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+    _, S_prevs = jax.lax.scan(
+        scan_fn, S0,
+        (jnp.moveaxis(state_c, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    S_final = scan_fn(S_prevs[-1], (state_c[:, -1], chunk_decay[:, -1]))[0]
+    S_prevs = jnp.moveaxis(S_prevs, 0, 1)                 # (b,nc,h,n,p)
+
+    # inter-chunk: Y_i += exp(cum_i) * C_i . S_prev
+    y_inter = jnp.einsum(
+        "bcin,bchnp,bcih->bcihp",
+        Cc.astype(jnp.float32), S_prevs, jnp.exp(cum),
+    )
+    y = (y_intra + y_inter).reshape(b, S, h, p)[:, :s]
+    return y, S_final
+
+
+def ssd_decode_step(
+    x: jnp.ndarray,      # (b, 1, h, p)
+    dt: jnp.ndarray,     # (b, 1, h)
+    A: jnp.ndarray,      # (h,)
+    B: jnp.ndarray,      # (b, 1, n)
+    C: jnp.ndarray,      # (b, 1, n)
+    state: jnp.ndarray,  # (b, h, n, p) f32
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    dtf = dt[:, 0].astype(jnp.float32)                    # (b,h)
+    dA = jnp.exp(dtf * A[None, :])                        # (b,h)
+    upd = jnp.einsum("bh,bn,bhp->bhnp", dtf, B[:, 0].astype(jnp.float32),
+                     x[:, 0].astype(jnp.float32))
+    state = state * dA[..., None, None] + upd
+    y = jnp.einsum("bn,bhnp->bhp", C[:, 0].astype(jnp.float32), state)
+    return y[:, None], state
+
+
+def apply_ssd(
+    params: Params,
+    cfg: SSDConfig,
+    x: jnp.ndarray,      # (b, s, d)
+    cache: Tuple[jnp.ndarray, jnp.ndarray] | None = None,  # (conv_state, ssm_state)
+    decode: bool = False,
+    constrain=None,
+):
+    """Returns (y (b,s,d), new_cache).
+
+    `constrain(x, tag)` lets the launcher pin head-parallel shardings: the
+    intra-chunk decay tensors scale with (b, s, Q, h) and MUST shard h over
+    the model axis at scale (EXPERIMENTS.md §Perf It.3)."""
+    if constrain is None:
+        constrain = lambda t, _tag: t
+    b, s, d = x.shape
+    h, p, n = cfg.n_heads, cfg.head_dim, cfg.d_state
+    proj = x @ params["w_in"]
+    z, xbc, dt_raw = _split_proj(cfg, proj)
+    conv_state = cache[0] if cache is not None else None
+    xbc, conv_state = _causal_conv(xbc, params["conv_w"], params["conv_b"], conv_state)
+    xs = xbc[..., : cfg.d_inner].reshape(b, s, h, p)
+    xs = constrain(xs, "ssm_heads")
+    B = xbc[..., cfg.d_inner : cfg.d_inner + n]
+    C = xbc[..., cfg.d_inner + n :]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    dt = constrain(dt, "ssm_dt")
+    A = -jnp.exp(params["A_log"])
+    ssm_state = cache[1] if cache is not None else None
+    if decode:
+        assert s == 1 and ssm_state is not None
+        y, ssm_state = ssd_decode_step(xs, dt, A, B, C, ssm_state)
+    else:
+        y, ssm_state = ssd_chunked(xs, dt, A, B, C, cfg.chunk, ssm_state)
+    y = y + params["D"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.astype(x.dtype).reshape(b, s, cfg.d_inner)
+    y = _gated_norm(y, z, params["norm_scale"])
+    out = y @ params["w_out"]
+    return out, (conv_state, ssm_state)
+
+
+def init_ssd_cache(cfg: SSDConfig, batch: int, dtype=jnp.bfloat16):
+    conv_ch = cfg.d_inner + 2 * cfg.d_state
+    return (
+        jnp.zeros((batch, cfg.d_conv - 1, conv_ch), dtype),
+        jnp.zeros((batch, cfg.n_heads, cfg.d_state, cfg.head_dim), jnp.float32),
+    )

@@ -1,0 +1,344 @@
+"""Model assembly for every assigned architecture family.
+
+One generic decoder with a repeating layer *period* (scan-over-periods +
+optional remat), covering:
+  dense        (qwen*, smollm)                attn + SwiGLU
+  moe          (llama4-scout, dbrx)           attn + top-k MoE
+  ssm          (mamba2)                       SSD mixer only
+  hybrid       (jamba)                        1:7 attn:SSD interleave, MoE/2
+  vlm / audio  (paligemma, musicgen)          stub prefix embeddings + decoder
+
+Params are nested dicts; layer params are stacked with a leading
+(n_periods,) dim and consumed by `lax.scan` (small HLO, fast compile, remat
+per period). Serving caches mirror the same stacking.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from . import layers as L
+from .moe import apply_moe, init_moe
+from .ssd import SSDConfig, apply_ssd, init_ssd, init_ssd_cache
+
+Params = Dict[str, Any]
+Constrain = Callable[[jnp.ndarray, str], jnp.ndarray]
+
+
+def _identity_constrain(x: jnp.ndarray, _tag: str) -> jnp.ndarray:
+    return x
+
+
+class Model:
+    """cfg + tensor-parallel degree -> init / forward / loss / serve fns."""
+
+    def __init__(self, cfg: ModelConfig, tp: int = 1,
+                 constrain: Constrain = _identity_constrain,
+                 scan_unroll: bool = False):
+        # scan_unroll: fully unroll the layer scan. Used by the dry-run so
+        # XLA cost analysis sees every layer (a while-loop body is counted
+        # ONCE by HloCostAnalysis, which would undercount flops/collectives
+        # by ~n_periods). Training/serving keep the rolled scan.
+        self.scan_unroll = scan_unroll
+        self.cfg = cfg
+        self.tp = tp
+        self.H, self.KV = cfg.padded_heads(tp)
+        self.V = cfg.padded_vocab(tp)
+        self.dtype = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.param_dtype]
+        self.period = cfg.period
+        self.n_periods = cfg.n_layers // cfg.period
+        self.constrain = constrain
+        self.ssd_cfg = SSDConfig(
+            d_model=cfg.d_model,
+            d_inner=cfg.d_inner,
+            n_heads=cfg.ssm_heads,
+            head_dim=cfg.ssm_head_dim,
+            d_state=cfg.ssm_state,
+            chunk=cfg.ssm_chunk,
+        ) if cfg.ssm_state else None
+
+    # -- init ------------------------------------------------------------------
+
+    def _init_one_layer(self, key: jax.Array, offset: int) -> Params:
+        cfg = self.cfg
+        kmix, kmlp = jax.random.split(key)
+        p: Params = {"ln1": L.init_rmsnorm(cfg.d_model, self.dtype)}
+        if cfg.layer_kind(offset) == "attn":
+            p["attn"] = L.init_attention(
+                kmix, cfg.d_model, self.H, self.KV, cfg.head_dim,
+                qkv_bias=cfg.qkv_bias, dtype=self.dtype,
+                n_heads_logical=cfg.n_heads, n_kv_logical=cfg.n_kv_heads,
+            )
+        else:
+            p["ssd"] = init_ssd(kmix, self.ssd_cfg, self.dtype)
+        if cfg.d_ff > 0 or cfg.mlp_kind(offset) == "moe":
+            p["ln2"] = L.init_rmsnorm(cfg.d_model, self.dtype)
+            if cfg.mlp_kind(offset) == "moe":
+                p["moe"] = init_moe(kmlp, cfg.d_model, cfg.d_ff, cfg.n_experts, self.dtype)
+            else:
+                p["mlp"] = L.init_mlp(kmlp, cfg.d_model, cfg.d_ff, self.dtype)
+        return p
+
+    def init(self, key: jax.Array) -> Params:
+        cfg = self.cfg
+        ke, kh, kl, kf = jax.random.split(key, 4)
+        # stacked layers: one stack per period offset, leading (n_periods,)
+        stacks = []
+        for o in range(self.period):
+            keys = jax.random.split(jax.random.fold_in(kl, o), self.n_periods)
+            stacks.append(jax.vmap(lambda k, o=o: self._init_one_layer(k, o))(keys))
+        params: Params = {
+            "embed": L.init_embedding(ke, self.V, cfg.d_model, self.dtype),
+            "final_norm": L.init_rmsnorm(cfg.d_model, self.dtype),
+            "lm_head": L.init_lm_head(kh, cfg.d_model, self.V, self.dtype),
+            "layers": stacks,
+        }
+        if cfg.frontend != "none":
+            # stub frontend projection: maps precomputed modality embeddings
+            # (already d_model-sized in the stub) into the decoder space
+            params["frontend_proj"] = {
+                "w": (jax.random.normal(kf, (cfg.d_model, cfg.d_model), jnp.float32)
+                      / np.sqrt(cfg.d_model)).astype(self.dtype)
+            }
+        return params
+
+    def init_abstract(self) -> Params:
+        """ShapeDtypeStruct pytree of params — no allocation (dry-run path)."""
+        return jax.eval_shape(self.init, jax.random.PRNGKey(0))
+
+    # -- one transformer layer ----------------------------------------------------
+
+    def _apply_layer(
+        self,
+        p: Params,
+        offset: int,
+        x: jnp.ndarray,
+        cache: Optional[Params],
+        mode: str,                      # train | prefill | decode
+        positions: Optional[jnp.ndarray],
+        max_len: int,
+    ) -> Tuple[jnp.ndarray, Optional[Params], jnp.ndarray]:
+        cfg = self.cfg
+        aux = jnp.zeros((), jnp.float32)
+        h = L.rms_norm(p["ln1"], x, cfg.norm_eps)
+        new_cache: Optional[Params] = None
+        if cfg.layer_kind(offset) == "attn":
+            att_cache = None
+            if mode == "decode":
+                att_cache = (cache["k"], cache["v"], cache["len"])
+            y, att_cache = L.apply_attention(
+                p["attn"], h,
+                n_heads=self.H, n_kv=self.KV, head_dim=cfg.head_dim,
+                rope_theta=cfg.rope_theta, q_chunk=cfg.q_chunk,
+                positions=positions, cache=att_cache,
+            )
+            if mode != "train":
+                k, v, ln = att_cache
+                if mode == "prefill" and k.shape[1] < max_len:
+                    pad = max_len - k.shape[1]
+                    k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                    v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                new_cache = {"k": k, "v": v, "len": ln}
+        else:
+            ssd_cache = None
+            if mode == "decode":
+                ssd_cache = (cache["conv"], cache["ssm"])
+            y, ssd_cache = apply_ssd(p["ssd"], self.ssd_cfg, h,
+                                     cache=ssd_cache, decode=(mode == "decode"),
+                                     constrain=self.constrain)
+            if mode != "train":
+                new_cache = {"conv": ssd_cache[0], "ssm": ssd_cache[1]}
+        x = x + y
+        x = self.constrain(x, "hidden")
+        if "ln2" in p:
+            h = L.rms_norm(p["ln2"], x, cfg.norm_eps)
+            if "moe" in p:
+                y, aux = apply_moe(p["moe"], h, top_k=cfg.experts_per_token,
+                                   capacity_factor=cfg.capacity_factor,
+                                   n_groups=cfg.moe_groups)
+            else:
+                y = L.apply_mlp(p["mlp"], h)
+            x = x + y
+            x = self.constrain(x, "hidden")
+        return x, new_cache, aux
+
+    # -- stacked layers (scan over periods) ------------------------------------
+
+    def _run_layers(
+        self,
+        params: Params,
+        x: jnp.ndarray,
+        caches: Optional[list],
+        mode: str,
+        positions: Optional[jnp.ndarray],
+        max_len: int = 0,
+    ) -> Tuple[jnp.ndarray, Optional[list], jnp.ndarray]:
+        cfg = self.cfg
+
+        def period_body(carry, xs):
+            h, aux = carry
+            if mode == "decode":
+                layer_stacks, cache_stacks = xs
+            else:
+                layer_stacks, cache_stacks = xs, [None] * self.period
+            new_caches = []
+            for o in range(self.period):
+                def layer_fn(pp, hh, cc, o=o):
+                    return self._apply_layer(pp, o, hh, cc, mode, positions, max_len)
+                if cfg.remat and mode == "train":
+                    layer_fn = jax.checkpoint(layer_fn)
+                h, nc, a = layer_fn(layer_stacks[o], h, cache_stacks[o])
+                new_caches.append(nc)
+                aux = aux + a
+            ys = None if mode == "train" else new_caches
+            return (h, aux), ys
+
+        body = period_body
+        if cfg.remat and mode == "train":
+            # NESTED remat: the outer checkpoint keeps only period-boundary
+            # activations across the scan; the inner per-layer checkpoints
+            # (above) bound the live set during a period's backward to one
+            # layer's internals. Forward is computed ~3x (10*N*D flops
+            # instead of 8*N*D) -- the classic sqrt-style trade; without
+            # the outer level, 9 periods x 8 layer-input residuals are
+            # 38 GiB/chip for jamba (EXPERIMENTS.md §Perf It.3).
+            body = jax.checkpoint(period_body)
+
+        xs = (params["layers"], caches) if mode == "decode" else params["layers"]
+        (x, aux), new_caches = jax.lax.scan(
+            body, (x, jnp.zeros((), jnp.float32)), xs,
+            unroll=self.n_periods if self.scan_unroll else 1,
+        )
+        return x, new_caches, aux
+
+    # -- embedding & frontends --------------------------------------------------
+
+    def _embed_inputs(
+        self, params: Params, tokens: jnp.ndarray,
+        prefix_embeds: Optional[jnp.ndarray],
+    ) -> jnp.ndarray:
+        x = L.embed(params["embed"], tokens)
+        if self.cfg.frontend != "none":
+            assert prefix_embeds is not None, "stub frontend needs prefix_embeds"
+            pre = (prefix_embeds.astype(self.dtype) @ params["frontend_proj"]["w"])
+            x = jnp.concatenate([pre, x], axis=1)
+        return self.constrain(x, "hidden")
+
+    # -- training forward / loss --------------------------------------------------
+
+    def forward(
+        self, params: Params, tokens: jnp.ndarray,
+        prefix_embeds: Optional[jnp.ndarray] = None,
+    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Full-sequence causal forward. Returns (logits f32, moe_aux)."""
+        x = self._embed_inputs(params, tokens, prefix_embeds)
+        x, _caches, aux = self._run_layers(params, x, None, "train", None)
+        x = L.rms_norm(params["final_norm"], x, self.cfg.norm_eps)
+        logits = L.lm_logits(params["lm_head"], x)
+        return self.constrain(logits, "logits"), aux
+
+    def loss(self, params: Params, batch: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+        """Next-token CE (+ MoE aux) over the token region.
+
+        The LM head + softmax-CE are FUSED and chunked over the sequence:
+        full (b, s, V) logits are never materialized (at jamba train_4k
+        scale they alone are ~268 GiB/chip — §Perf iteration 2)."""
+        tokens = batch["tokens"]
+        prefix = batch.get("prefix_embeds")
+        x = self._embed_inputs(params, tokens, prefix)
+        x, _caches, aux = self._run_layers(params, x, None, "train", None)
+        x = L.rms_norm(params["final_norm"], x, self.cfg.norm_eps)
+        P = self.cfg.prefix_len if self.cfg.frontend != "none" else 0
+        xs = x[:, P:-1]                      # (b, s_tok-1, d)
+        targets = tokens[:, 1:]              # (b, s_tok-1)
+        loss = _chunked_softmax_xent(params["lm_head"]["w"], xs, targets,
+                                     chunk=max(self.cfg.q_chunk, 16))
+        if self.cfg.n_experts:
+            loss = loss + 0.01 * aux
+        return loss
+
+    # -- serving -------------------------------------------------------------------
+
+    def init_caches(self, batch: int, max_len: int) -> list:
+        """Stacked decode caches (capacity max_len)."""
+        cfg = self.cfg
+        stacks = []
+        for o in range(self.period):
+            if cfg.layer_kind(o) == "attn":
+                c = {
+                    "k": jnp.zeros((self.n_periods, batch, max_len, self.KV, cfg.head_dim), self.dtype),
+                    "v": jnp.zeros((self.n_periods, batch, max_len, self.KV, cfg.head_dim), self.dtype),
+                    "len": jnp.zeros((self.n_periods, batch), jnp.int32),
+                }
+            else:
+                conv, ssm = init_ssd_cache(self.ssd_cfg, batch, self.dtype)
+                c = {
+                    "conv": jnp.broadcast_to(conv, (self.n_periods,) + conv.shape),
+                    "ssm": jnp.broadcast_to(ssm, (self.n_periods,) + ssm.shape),
+                }
+            stacks.append(c)
+        return stacks
+
+    def prefill(
+        self, params: Params, tokens: jnp.ndarray,
+        prefix_embeds: Optional[jnp.ndarray] = None,
+        max_len: Optional[int] = None,
+    ) -> Tuple[jnp.ndarray, list]:
+        """Run the prompt; returns (last-position logits, caches)."""
+        x = self._embed_inputs(params, tokens, prefix_embeds)
+        b, s, _ = x.shape
+        max_len = max_len or s
+        # prefill runs the full-sequence path and emits caches padded to
+        # max_len capacity (no pre-allocated cache input needed)
+        x, caches, _aux = self._run_layers(params, x, None, "prefill", None,
+                                           max_len=max_len)
+        x = L.rms_norm(params["final_norm"], x[:, -1:], self.cfg.norm_eps)
+        logits = L.lm_logits(params["lm_head"], x)
+        return logits, caches
+
+    def decode_step(
+        self, params: Params, token: jnp.ndarray, caches: list,
+    ) -> Tuple[jnp.ndarray, list]:
+        """One decode step. token: (b, 1) int32. Returns (logits, caches)."""
+        x = L.embed(params["embed"], token)
+        x = self.constrain(x, "hidden")
+        x, caches, _aux = self._run_layers(params, x, caches, "decode", None)
+        x = L.rms_norm(params["final_norm"], x, self.cfg.norm_eps)
+        logits = L.lm_logits(params["lm_head"], x)
+        return logits, caches
+
+
+def _chunked_softmax_xent(w: jnp.ndarray, x: jnp.ndarray, targets: jnp.ndarray,
+                          chunk: int) -> jnp.ndarray:
+    """Fused LM-head + cross-entropy, chunked over sequence positions so the
+    logits working set is (b, chunk, V) instead of (b, s, V)."""
+    b, s, d = x.shape
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)))
+    mask = (jnp.arange(x.shape[1]) < s)[None, :]         # (1, s+pad)
+    nc = x.shape[1] // chunk
+    xc = x.reshape(b, nc, chunk, d).swapaxes(0, 1)        # (nc, b, chunk, d)
+    tc = targets.reshape(b, nc, chunk).swapaxes(0, 1)
+    mc = jnp.broadcast_to(mask.reshape(1, nc, chunk).swapaxes(0, 1), tc.shape)
+
+    @jax.checkpoint
+    def one(args):
+        # checkpointed: WITHOUT remat the map's backward stacks every
+        # chunk's logits -> the full (b, s, V) tensor returns through the
+        # back door (measured; EXPERIMENTS.md §Perf It.3)
+        xi, ti, mi = args                                  # (b, chunk, ...)
+        logits = (xi @ w).astype(jnp.float32)              # (b, chunk, V)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(logits, ti[..., None], axis=-1)[..., 0]
+        return jnp.sum((lse - tgt) * mi)
+
+    totals = jax.lax.map(one, (xc, tc, mc))
+    return jnp.sum(totals) / (b * s)

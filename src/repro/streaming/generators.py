@@ -1,0 +1,135 @@
+"""Synthetic streaming-graph generators mirroring the paper's workloads
+(§5.1.2): SO-like (homogeneous, highly cyclic, 3 labels), LDBC-like
+(social-network interactions, skewed), Yago-like (rich schema, ~100 labels,
+sparse), and gMark-like (schema-driven with tunable recursion).
+
+All are deterministic in the seed, emit strictly increasing timestamps, and
+scale by (n_vertices, n_edges)."""
+from __future__ import annotations
+
+import random
+from typing import List, Optional, Sequence
+
+from .stream import SGT, Stream
+
+SO_LABELS = ["a2q", "c2a", "c2q"]
+LDBC_LABELS = ["knows", "replyOf", "hasCreator", "likes", "hasTag", "isLocatedIn",
+               "studyAt", "workAt"]
+
+
+def so_like(n_vertices: int, n_edges: int, seed: int = 0,
+            rate: float = 10.0) -> Stream:
+    """StackOverflow-style: one vertex type, 3 interaction labels, heavy
+    preferential attachment -> dense cyclic core."""
+    rng = random.Random(seed)
+    degree = [1] * n_vertices
+    tuples = []
+    t = 0.0
+    for _ in range(n_edges):
+        t += rng.expovariate(rate)
+        # preferential attachment on both endpoints
+        u = _weighted(rng, degree)
+        v = _weighted(rng, degree)
+        degree[u] += 1
+        degree[v] += 1
+        tuples.append(SGT(t, u, v, rng.choice(SO_LABELS)))
+    return Stream(tuples)
+
+
+def ldbc_like(n_persons: int, n_edges: int, seed: int = 0,
+              rate: float = 10.0) -> Stream:
+    """LDBC SNB-style update stream: persons + posts, 8 interaction types,
+    recursive relations (knows, replyOf) between same-kind vertices."""
+    rng = random.Random(seed)
+    n_posts = 3 * n_persons
+    tuples = []
+    t = 0.0
+    for _ in range(n_edges):
+        t += rng.expovariate(rate)
+        lab = rng.choice(LDBC_LABELS)
+        if lab == "knows":
+            u = ("p", rng.randrange(n_persons))
+            v = ("p", rng.randrange(n_persons))
+        elif lab == "replyOf":
+            u = ("m", rng.randrange(n_posts))
+            v = ("m", rng.randrange(n_posts))
+        elif lab in ("hasCreator", "likes"):
+            u = ("m", rng.randrange(n_posts))
+            v = ("p", rng.randrange(n_persons))
+            if lab == "likes":
+                u, v = v, u
+        else:
+            u = ("p", rng.randrange(n_persons))
+            v = ("org", rng.randrange(max(n_persons // 10, 1)))
+        tuples.append(SGT(t, u, v, lab))
+    return Stream(tuples)
+
+
+def yago_like(n_vertices: int, n_edges: int, n_labels: int = 100,
+              seed: int = 0, rate: float = 10.0) -> Stream:
+    """RDF-ish: many labels with Zipf label frequency, sparse structure.
+    Timestamps assigned at a fixed rate (paper's Yago2s windowing setup)."""
+    rng = random.Random(seed)
+    labels = [f"p{i}" for i in range(n_labels)]
+    weights = [1.0 / (i + 1) for i in range(n_labels)]
+    tuples = []
+    t = 0.0
+    for _ in range(n_edges):
+        t += 1.0 / rate  # fixed rate: equal #edges per window
+        u = rng.randrange(n_vertices)
+        v = rng.randrange(n_vertices)
+        tuples.append(SGT(t, u, v, rng.choices(labels, weights)[0]))
+    return Stream(tuples)
+
+
+def gmark_like(n_vertices: int, n_edges: int, labels: Sequence[str],
+               seed: int = 0, rate: float = 10.0,
+               cyclicity: float = 0.3) -> Stream:
+    """Schema-driven generator with a tunable fraction of cycle-closing
+    edges (the knob that stresses Kleene-star queries)."""
+    rng = random.Random(seed)
+    tuples = []
+    t = 0.0
+    recent: List[object] = []
+    for _ in range(n_edges):
+        t += rng.expovariate(rate)
+        if recent and rng.random() < cyclicity:
+            u = rng.choice(recent)
+            v = rng.choice(recent)
+        else:
+            u = rng.randrange(n_vertices)
+            v = rng.randrange(n_vertices)
+        recent.append(v)
+        if len(recent) > 64:
+            recent.pop(0)
+        tuples.append(SGT(t, u, v, rng.choice(list(labels))))
+    return Stream(tuples)
+
+
+def with_deletions(stream: Stream, ratio: float, seed: int = 0) -> Stream:
+    """Re-emit a fraction of previously inserted edges as negative tuples
+    (the paper's §5.4 protocol)."""
+    rng = random.Random(seed)
+    tuples: List[SGT] = []
+    inserted: List[SGT] = []
+    t_last = 0.0
+    for sgt in stream:
+        tuples.append(sgt)
+        inserted.append(sgt)
+        t_last = sgt.ts
+        if inserted and rng.random() < ratio:
+            victim = inserted.pop(rng.randrange(len(inserted)))
+            t_last += 1e-3
+            tuples.append(SGT(t_last, victim.src, victim.dst, victim.label, "-"))
+    return Stream(tuples)
+
+
+def _weighted(rng: random.Random, weights: List[int]) -> int:
+    total = sum(weights)
+    r = rng.random() * total
+    acc = 0
+    for i, w in enumerate(weights):
+        acc += w
+        if r <= acc:
+            return i
+    return len(weights) - 1

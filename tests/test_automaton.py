@@ -1,0 +1,198 @@
+"""Automaton pipeline tests: parser, Thompson NFA, DFA, Hopcroft, RSPQ meta."""
+import re as pyre
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import regex as rx
+from repro.core.automaton import compile_query, suffix_containment, thompson, determinize, hopcroft_minimize
+
+
+# ---------------------------------------------------------------------------
+# parser
+# ---------------------------------------------------------------------------
+
+def test_parse_paper_queries():
+    # Table 2 of the paper
+    qs = [
+        "a*",
+        "a . b*",
+        "a . b* . c*",
+        "(a1 + a2 + a3)*",
+        "a . b* . c",
+        "a* . b*",
+        "a . b . c*",
+        "a? . b*",
+        "(a1 + a2 + a3)+",
+        "(a1 + a2 + a3) . b*",
+        "a1 . a2 . a3",
+    ]
+    for q in qs:
+        ast = rx.parse(q)
+        assert ast.size() >= 1
+
+
+def test_parse_postfix_plus_vs_alternation():
+    ast = rx.parse("a+")
+    assert isinstance(ast, rx.Plus)
+    ast = rx.parse("a + b")
+    assert isinstance(ast, rx.Alt)
+    ast = rx.parse("(a + b)+")
+    assert isinstance(ast, rx.Plus)
+    assert isinstance(ast.inner, rx.Alt)
+
+
+def test_parse_juxtaposition_concat():
+    ast = rx.parse("a b c")
+    assert isinstance(ast, rx.Cat)
+
+
+def test_query_size_metric():
+    # |Q| counts labels plus * and + occurrences (paper §5.1.2)
+    assert rx.parse("a . b* . c*").size() == 5
+    assert rx.parse("a1 . a2 . a3").size() == 3
+
+
+# ---------------------------------------------------------------------------
+# DFA correctness vs Python's re on single-character label alphabets
+# ---------------------------------------------------------------------------
+
+def _to_pyre(expr: str) -> str:
+    """Map our syntax to a python re for single-char labels."""
+    out = expr.replace(" ", "").replace(".", "").replace("∘", "")
+    # '+' between atoms is alternation in our syntax; in test exprs below we
+    # only use '|' for alternation to keep the mapping unambiguous.
+    return out
+
+
+WORD_ALPHABET = "abc"
+
+# expressions using '|' for alternation and '.' for concatenation so the
+# mapping to python re (strip dots) is unambiguous
+RE_CASES = [
+    "a*",
+    "a.b*",
+    "a.b*.c*",
+    "(a|b|c)*",
+    "a.b*.c",
+    "a*.b*",
+    "a.b.c*",
+    "a?.b*",
+    "(a|b|c)+",
+    "(a|b).c*",
+    "a.b.c",
+    "(a.b)+",
+    "((a|b).c)*.a",
+    "a.(b|c)*.a?",
+]
+
+
+@pytest.mark.parametrize("expr", RE_CASES)
+def test_dfa_matches_python_re(expr):
+    dfa = compile_query(expr)
+    prog = pyre.compile(_to_pyre(expr) + r"\Z")
+    # exhaustive words up to length 6
+    from itertools import product
+    for n in range(0, 7):
+        for word in product(WORD_ALPHABET, repeat=n):
+            w = "".join(word)
+            assert dfa.accepts(list(word)) == bool(prog.match(w)), (expr, w)
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.data())
+def test_dfa_matches_python_re_random(data):
+    expr = data.draw(st.sampled_from(RE_CASES))
+    dfa = compile_query(expr)
+    prog = pyre.compile(_to_pyre(expr) + r"\Z")
+    word = data.draw(st.text(alphabet=WORD_ALPHABET, min_size=0, max_size=12))
+    assert dfa.accepts(list(word)) == bool(prog.match(word))
+
+
+def test_minimization_is_minimal_for_known_cases():
+    # (follows . mentions)+ from Fig. 1(c): 3 states
+    dfa = compile_query("(follows . mentions)+")
+    assert dfa.k == 3
+    assert dfa.start == 0
+    # a*: single accepting state
+    dfa = compile_query("a*")
+    assert dfa.k == 1
+    assert dfa.accepts_empty()
+    # fixed-length concat: k = len + 1
+    dfa = compile_query("a1 . a2 . a3")
+    assert dfa.k == 4
+
+
+def test_partial_dfa_has_no_dead_states():
+    dfa = compile_query("a . b")
+    # every state must reach a final state
+    from repro.core.automaton import _coreachable
+    co = _coreachable(dfa.delta, dfa.finals)
+    assert set(range(dfa.k)) <= co
+
+
+# ---------------------------------------------------------------------------
+# suffix-language containment (Definitions 14-15)
+# ---------------------------------------------------------------------------
+
+def test_containment_star():
+    # a*: single state, [0] ⊇ [0]
+    dfa = compile_query("a*")
+    assert dfa.containment[0, 0]
+    assert dfa.has_containment_property
+
+
+def test_containment_property_examples():
+    # Restricted expressions (paper §5.5): Q1 a*, Q4 (a|b)*, Q11 a.b.c are
+    # conflict-free on any graph; a* and (a|b)* have the containment property.
+    assert compile_query("a*").has_containment_property
+    assert compile_query("(a|b|c)*").has_containment_property
+    # (follows.mentions)+ does NOT have it: [s1] and [s2] alternate.
+    assert not compile_query("(a . b)+").has_containment_property
+
+
+def test_containment_matrix_semantics():
+    dfa = compile_query("a . b*")
+    # state after 'a' accepts b^i; start accepts a b^i.
+    # suffix language of accepting state = b*, of start = a b*.
+    C = dfa.containment
+    k = dfa.k
+    assert C.shape == (k, k)
+    # containment is reflexive
+    assert all(C[i, i] for i in range(k))
+
+
+def test_brute_force_containment_agreement():
+    """Compare the product-construction containment with brute-force word
+    enumeration on small automata."""
+    from itertools import product as iproduct
+    for expr in ["a . b*", "(a . b)+", "a* . b*", "a? . b*", "(a|b) . c*"]:
+        dfa = compile_query(expr)
+        words = [list(w) for n in range(0, 6) for w in iproduct(dfa.labels, repeat=n)]
+
+        def suffix_lang(s):
+            acc = set()
+            for w in words:
+                cur = s
+                ok = True
+                for ch in w:
+                    cur = dfa.step(cur, ch)
+                    if cur < 0:
+                        ok = False
+                        break
+                if ok and cur in dfa.finals:
+                    acc.add(tuple(w))
+            return acc
+
+        langs = [suffix_lang(s) for s in range(dfa.k)]
+        for s in range(dfa.k):
+            for t in range(dfa.k):
+                brute = langs[s] >= langs[t]
+                if dfa.containment[s, t]:
+                    # claimed containment must hold on sampled words
+                    assert brute, (expr, s, t)
+                else:
+                    # claimed non-containment must have a witness within
+                    # bounded length for these tiny automata
+                    assert not brute, (expr, s, t)

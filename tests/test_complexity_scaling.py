@@ -1,0 +1,64 @@
+"""Table 1 complexity checks + paper-behaviour micro-validations that are
+cheap enough for the default suite (the heavier scaling test lives in
+test_system.py)."""
+import math
+import random
+
+import pytest
+
+from repro.core import RAPQ, compile_query
+from repro.core.automaton import suffix_containment
+from repro.streaming.generators import gmark_like
+
+
+def test_insert_is_amortized_subquadratic_in_k():
+    """Amortized per-tuple cost is O(n*k^2): doubling k must not blow up
+    per-tuple work by more than ~4x (+ constant factors)."""
+    labels = ["a", "b"]
+    stream = gmark_like(48, 600, labels, seed=1, cyclicity=0.3)
+
+    def work(expr):
+        dfa = compile_query(expr)
+        eng = RAPQ(dfa, window=50.0)
+        # count Insert invocations via tree sizes as a proxy for work
+        for sgt in stream:
+            eng.insert(sgt.src, sgt.dst, sgt.label, sgt.ts)
+        _trees, nodes = eng.index_size()
+        return dfa.k, nodes
+
+    k1, n1 = work("a . b")          # k = 3
+    k2, n2 = work("a . b . a . b . a . b")  # k = 7
+    assert k2 > k1
+    # index population grows at most ~linearly with k (nodes <= n*k)
+    assert n2 <= (k2 / k1) * n1 * 3 + 100
+
+
+def test_monotone_timestamps_invariant():
+    """Lemma 1 invariant: stored node timestamps never exceed any ancestor's
+    (bottleneck consistency) after arbitrary interleavings."""
+    rng = random.Random(5)
+    dfa = compile_query("(a | b)*")
+    eng = RAPQ(dfa, window=40.0)
+    for i in range(300):
+        u, v = rng.randrange(10), rng.randrange(10)
+        eng.insert(u, v, rng.choice(["a", "b"]), float(i))
+        if i % 37 == 36:
+            eng.expire(float(i))
+    for tree in eng.delta.values():
+        for occ in tree.index.values():
+            if occ.parent is not None:
+                assert occ.ts <= occ.parent.ts + 1e-9
+
+
+def test_suffix_containment_transitivity():
+    """[s] ⊇ [t] and [t] ⊇ [r] implies [s] ⊇ [r] — sanity of the product
+    construction used for conflict detection."""
+    for expr in ["a . b*", "(a . b)+", "a* . b*", "a? . b*"]:
+        dfa = compile_query(expr)
+        C = dfa.containment
+        k = dfa.k
+        for s in range(k):
+            for t in range(k):
+                for r in range(k):
+                    if C[s, t] and C[t, r]:
+                        assert C[s, r], (expr, s, t, r)

@@ -1,0 +1,164 @@
+"""Dense engine vs paper-faithful reference: result-set equivalence on
+randomized streams (inserts, window expiry, explicit deletions)."""
+import random
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import RAPQ, batch_rapq, compile_query, snapshot_from_edges, streaming_oracle
+from repro.core.engine import DenseRPQEngine
+
+QUERIES = ["a*", "a . b*", "(a | b)*", "a . b* . c", "(a . b)+", "a . b . c"]
+LABELS = ["a", "b", "c"]
+
+
+def _random_stream(rng, n_vertices, n_edges, t_max):
+    ts = sorted(rng.sample(range(1, t_max), k=min(n_edges, t_max - 1)))
+    return [
+        (rng.randrange(n_vertices), rng.randrange(n_vertices), rng.choice(LABELS), float(t))
+        for t in ts
+    ]
+
+
+@pytest.mark.parametrize("query", QUERIES)
+@pytest.mark.parametrize("seed", [0, 1])
+def test_dense_matches_reference_b1(query, seed):
+    """Batch size 1: dense engine must match the reference tuple-for-tuple."""
+    rng = random.Random(seed)
+    dfa = compile_query(query)
+    window = 20.0
+    stream = _random_stream(rng, n_vertices=8, n_edges=30, t_max=90)
+    ref = RAPQ(dfa, window)
+    dense = DenseRPQEngine(dfa, window, n_slots=16, batch_size=1)
+    for (u, v, lab, ts) in stream:
+        r1 = ref.insert(u, v, lab, ts)
+        r2 = dense.insert(u, v, lab, ts)
+        assert r2 == r1, (query, seed, (u, v, lab, ts))
+    assert dense.results == ref.results
+
+
+@pytest.mark.parametrize("query", ["a . b*", "(a . b)+"])
+def test_dense_snapshot_view_matches_batch(query):
+    rng = random.Random(5)
+    dfa = compile_query(query)
+    window = 15.0
+    stream = _random_stream(rng, n_vertices=8, n_edges=40, t_max=100)
+    dense = DenseRPQEngine(dfa, window, n_slots=16, batch_size=1)
+    for i, (u, v, lab, ts) in enumerate(stream):
+        dense.insert(u, v, lab, ts)
+        if i % 7 == 6:
+            snap = snapshot_from_edges(stream[: i + 1], low=ts - window, high=ts)
+            assert dense.current_results() == batch_rapq(snap, dfa)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), query=st.sampled_from(QUERIES))
+def test_dense_property_random_with_expiry(seed, query):
+    rng = random.Random(seed)
+    dfa = compile_query(query)
+    window = rng.choice([8.0, 15.0, 40.0])
+    stream = _random_stream(rng, n_vertices=6, n_edges=25, t_max=60)
+    dense = DenseRPQEngine(dfa, window, n_slots=12, batch_size=1)
+    for i, (u, v, lab, ts) in enumerate(stream):
+        dense.insert(u, v, lab, ts)
+        if i % 6 == 5:
+            dense.expire(ts)  # lazy expiration + slot recycling
+    assert dense.results == streaming_oracle(stream, dfa, window)
+
+
+@pytest.mark.parametrize("query", ["a . b*", "a*"])
+def test_dense_batched_ingest_superset_safety(query):
+    """B > 1: batch-boundary semantics — reported results must be a subset
+    of the oracle (no spurious results) and must cover every pair that is
+    valid at a batch boundary."""
+    rng = random.Random(9)
+    dfa = compile_query(query)
+    window = 25.0
+    stream = _random_stream(rng, n_vertices=8, n_edges=40, t_max=100)
+    dense = DenseRPQEngine(dfa, window, n_slots=16, batch_size=8)
+    dense.insert_batch(stream)
+    oracle = streaming_oracle(stream, dfa, window)
+    assert dense.results <= oracle
+    # boundary coverage: final-snapshot validity is always caught
+    last_ts = stream[-1][3]
+    snap = snapshot_from_edges(stream, low=last_ts - window, high=last_ts)
+    assert batch_rapq(snap, dfa) <= dense.results
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_dense_explicit_deletions(seed):
+    rng = random.Random(seed)
+    dfa = compile_query("a . b*")
+    ref = RAPQ(dfa, window=10_000.0)
+    dense = DenseRPQEngine(dfa, 10_000.0, n_slots=12, batch_size=1)
+    live = {}
+    t = 0.0
+    for _ in range(25):
+        t += 1.0
+        if live and rng.random() < 0.3:
+            key = rng.choice(sorted(live))
+            u, v, lab = key
+            del live[key]
+            ref.delete(u, v, lab, t)
+            dense.delete(u, v, lab, t)
+        else:
+            u, v = rng.randrange(5), rng.randrange(5)
+            lab = rng.choice(LABELS)
+            live[(u, v, lab)] = t
+            ref.insert(u, v, lab, t)
+            dense.insert(u, v, lab, t)
+        assert dense.current_results() == ref.current_results()
+
+
+def test_dense_slot_recycling():
+    """Vertices cycle through a small slot budget across window slides."""
+    dfa = compile_query("a*")
+    dense = DenseRPQEngine(dfa, window=5.0, n_slots=8, batch_size=1)
+    t = 0.0
+    for wave in range(6):
+        u, v = f"u{wave}", f"v{wave}"
+        t += 10.0  # previous wave fully expired
+        dense.expire(t)
+        dense.insert(u, v, "a", t)
+        assert (u, v) in dense.results
+    # only the last wave's vertices occupy slots
+    assert len(dense.slot_of) <= 4
+
+
+def test_dense_simple_path_mode_conflict_flag():
+    """(a.b)+ on the Fig.1-style cycle: simple mode must flag the conflict;
+    a containment-property query must not."""
+    dfa = compile_query("(a . b)+")
+    eng = DenseRPQEngine(dfa, window=100.0, n_slots=8, batch_size=1,
+                         path_semantics="simple")
+    edges = [
+        ("x", "y", "a", 1.0), ("y", "u", "b", 2.0),
+        ("u", "v", "a", 3.0), ("v", "y", "b", 4.0),  # cycle through y
+    ]
+    for e in edges:
+        eng.insert(*e)
+    assert eng.conflicted
+
+    dfa2 = compile_query("(a | b)*")
+    assert dfa2.has_containment_property
+    eng2 = DenseRPQEngine(dfa2, window=100.0, n_slots=8, batch_size=1,
+                          path_semantics="simple")
+    for e in edges:
+        eng2.insert(*e)
+    assert not eng2.conflicted
+
+
+def test_dense_pallas_backend_matches_jnp():
+    rng = random.Random(2)
+    dfa = compile_query("a . b*")
+    stream = _random_stream(rng, n_vertices=6, n_edges=20, t_max=50)
+    e1 = DenseRPQEngine(dfa, 20.0, n_slots=8, batch_size=4, backend="jnp")
+    e2 = DenseRPQEngine(dfa, 20.0, n_slots=8, batch_size=4, backend="pallas")
+    e1.insert_batch(stream)
+    e2.insert_batch(stream)
+    assert e1.results == e2.results
+    np.testing.assert_allclose(
+        np.asarray(e1.arrays.dist), np.asarray(e2.arrays.dist)
+    )

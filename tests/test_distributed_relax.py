@@ -1,0 +1,79 @@
+"""Distributed relaxation schedules (dry-run §Perf variants) must compute
+the same round as the single-device reference. Runs in a subprocess with 8
+virtual devices (XLA_FLAGS must precede jax import)."""
+import subprocess
+import sys
+
+SCRIPT = r'''
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, "src")
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.core.automaton import compile_query
+from repro.core.semiring import NEG_INF, TransitionTable, relax_round
+from repro.launch.dryrun_rpq import (N_LEVELS, make_ring_round,
+                                     relax_round_mxu_bucket,
+                                     relax_round_vchunked)
+
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+dfa = compile_query("a . b*")
+tt = TransitionTable.from_dfa(dfa)
+N = 64
+rng = np.random.default_rng(0)
+dist = rng.uniform(0, 100, (N, N, dfa.k)).astype(np.float32)
+dist[rng.random(dist.shape) < 0.5] = -np.inf
+adj = rng.uniform(0, 100, (dfa.n_labels, N, N)).astype(np.float32)
+adj[rng.random(adj.shape) < 0.6] = -np.inf
+
+ref = np.asarray(relax_round(jnp.asarray(dist), jnp.asarray(adj), tt))
+
+# 1) v-chunked GSPMD baseline
+dist_sh = NamedSharding(mesh, P("data", "model", None))
+adj_sh = NamedSharding(mesh, P(None, None, "model"))
+with jax.set_mesh(mesh):
+    out = jax.jit(lambda d, a: relax_round_vchunked(d, a, tt, 16),
+                  in_shardings=(dist_sh, adj_sh))(jnp.asarray(dist), jnp.asarray(adj))
+np.testing.assert_allclose(np.asarray(out), ref)
+print("vchunked OK")
+
+# 2) ring schedule (shard_map). NOTE: the ring round omits the base term
+# (applied once per ingest outside the iterated round), so compare against
+# the round WITHOUT base: mask start transitions' base by feeding adj only
+# through the contraction — easiest is to compare rings vs vchunked with a
+# dist that already dominates the base.
+dist_hi = np.maximum(dist, np.nanmax(np.where(np.isfinite(adj), adj, np.nan)))
+ref_hi = np.asarray(relax_round(jnp.asarray(dist_hi), jnp.asarray(adj), tt))
+adj_ring_sh = NamedSharding(mesh, P(None, "model", None))
+ring = make_ring_round(mesh, tt, N, multi_pod=False)
+with jax.set_mesh(mesh):
+    out2 = jax.jit(ring, in_shardings=(dist_sh, adj_ring_sh),
+                   out_shardings=dist_sh)(jnp.asarray(dist_hi), jnp.asarray(adj))
+np.testing.assert_allclose(np.asarray(out2), ref_hi)
+print("ring OK")
+
+# 3) MXU bucket mode on quantized levels
+T = N_LEVELS
+lv = lambda x: np.where(np.isfinite(x), np.clip(np.ceil(x / (100.0 / T)), 0, T), 0).astype(np.int32)
+dist_lv, adj_lv = lv(dist), lv(adj)
+ref_lv = np.asarray(relax_round(jnp.asarray(dist_lv.astype(np.float32)),
+                                jnp.asarray(np.where(adj_lv > 0, adj_lv, -np.inf).astype(np.float32)), tt))
+ref_lv = np.where(np.isfinite(ref_lv), ref_lv, 0).astype(np.int32)
+with jax.set_mesh(mesh):
+    out3 = jax.jit(lambda d, a: relax_round_mxu_bucket(d, a, tt, T),
+                   in_shardings=(dist_sh, adj_sh))(jnp.asarray(dist_lv), jnp.asarray(adj_lv))
+np.testing.assert_array_equal(np.asarray(out3), ref_lv)
+print("mxu OK")
+'''
+
+
+def test_distributed_relax_schedules():
+    proc = subprocess.run(
+        [sys.executable, "-c", SCRIPT], capture_output=True, text=True,
+        timeout=900, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "vchunked OK" in proc.stdout
+    assert "ring OK" in proc.stdout
+    assert "mxu OK" in proc.stdout

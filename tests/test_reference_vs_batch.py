@@ -1,0 +1,246 @@
+"""Property tests: paper-faithful RAPQ/RSPQ engines vs batch oracles.
+
+Randomized streams (hypothesis) over small vertex sets exercise window
+expiry, timestamp improvements, re-insertion, and explicit deletions.
+"""
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    RAPQ,
+    RSPQ,
+    batch_rapq,
+    batch_rspq_bruteforce,
+    compile_query,
+    snapshot_from_edges,
+    streaming_oracle,
+)
+
+QUERIES = [
+    "a*",
+    "a . b*",
+    "(a | b)*",
+    "a . b* . c",
+    "(a . b)+",
+    "a . b . c",
+    "a? . b*",
+]
+
+LABELS = ["a", "b", "c"]
+
+
+def _random_stream(rng, n_vertices, n_edges, t_max):
+    """Edges with strictly increasing integer timestamps."""
+    ts = sorted(rng.sample(range(1, t_max), k=min(n_edges, t_max - 1)))
+    out = []
+    for t in ts:
+        u = rng.randrange(n_vertices)
+        v = rng.randrange(n_vertices)
+        lab = rng.choice(LABELS)
+        out.append((u, v, lab, float(t)))
+    return out
+
+
+@pytest.mark.parametrize("query", QUERIES)
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_rapq_monotone_result_set_matches_oracle(query, seed):
+    rng = random.Random(seed)
+    dfa = compile_query(query)
+    window = 20.0
+    stream = _random_stream(rng, n_vertices=8, n_edges=40, t_max=100)
+    eng = RAPQ(dfa, window)
+    for (u, v, lab, ts) in stream:
+        eng.insert(u, v, lab, ts)
+    oracle = streaming_oracle(stream, dfa, window)
+    assert eng.results == oracle, (query, seed)
+
+
+@pytest.mark.parametrize("query", QUERIES)
+def test_rapq_snapshot_results_after_expiry(query):
+    """After expiry at time tau, current_results == batch on the snapshot."""
+    rng = random.Random(7)
+    dfa = compile_query(query)
+    window = 15.0
+    stream = _random_stream(rng, n_vertices=7, n_edges=35, t_max=80)
+    eng = RAPQ(dfa, window)
+    for i, (u, v, lab, ts) in enumerate(stream):
+        eng.insert(u, v, lab, ts)
+        if i % 5 == 4:  # slide boundary: lazy expiration
+            eng.expire(ts)
+            snap = snapshot_from_edges(stream[: i + 1], low=ts - window, high=ts)
+            assert eng.current_results() == batch_rapq(snap, dfa)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    query=st.sampled_from(QUERIES),
+    window=st.sampled_from([5.0, 12.0, 30.0, 200.0]),
+)
+def test_rapq_property_random(seed, query, window):
+    rng = random.Random(seed)
+    dfa = compile_query(query)
+    stream = _random_stream(rng, n_vertices=6, n_edges=25, t_max=60)
+    eng = RAPQ(dfa, window)
+    for i, (u, v, lab, ts) in enumerate(stream):
+        eng.insert(u, v, lab, ts)
+        if i % 7 == 6:
+            eng.expire(ts)
+    assert eng.results == streaming_oracle(stream, dfa, window)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    query=st.sampled_from(QUERIES),
+)
+def test_rapq_explicit_deletions(seed, query):
+    """Interleave deletions; after each op the engine snapshot view must
+    match batch evaluation of the live edge set (window = inf isolates the
+    deletion machinery from expiry)."""
+    rng = random.Random(seed)
+    dfa = compile_query(query)
+    eng = RAPQ(dfa, window=10_000.0)
+    live = {}
+    t = 0.0
+    for _ in range(30):
+        t += 1.0
+        if live and rng.random() < 0.3:
+            key = rng.choice(sorted(live))
+            u, v, lab = key
+            del live[key]
+            eng.delete(u, v, lab, t)
+        else:
+            u = rng.randrange(5)
+            v = rng.randrange(5)
+            lab = rng.choice(LABELS)
+            live[(u, v, lab)] = t
+            eng.insert(u, v, lab, t)
+        snap = snapshot_from_edges([(u, v, l, ts) for (u, v, l), ts in live.items()])
+        assert eng.current_results() == batch_rapq(snap, dfa), (seed, query)
+
+
+# ---------------------------------------------------------------------------
+# RSPQ vs exhaustive simple-path enumeration
+# ---------------------------------------------------------------------------
+
+RSPQ_QUERIES = [
+    "a*",                # restricted: conflict-free everywhere
+    "(a | b)*",          # restricted
+    "a . b . c",         # fixed length: conflict-free
+    "a . b*",
+    "(a . b)+",          # conflicts on cyclic graphs (Fig. 1 example)
+    "a . b* . c",
+]
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    query=st.sampled_from(RSPQ_QUERIES),
+)
+def test_rspq_matches_bruteforce_simple_paths(seed, query):
+    rng = random.Random(seed)
+    dfa = compile_query(query)
+    window = 1000.0  # effectively no expiry: isolates simple-path logic
+    stream = _random_stream(rng, n_vertices=5, n_edges=18, t_max=50)
+    eng = RSPQ(dfa, window)
+    for (u, v, lab, ts) in stream:
+        eng.insert(u, v, lab, ts)
+    oracle = streaming_oracle(stream, dfa, window, simple=True)
+    assert eng.results == oracle, (seed, query)
+
+
+@pytest.mark.parametrize("query", ["a*", "(a | b)*", "a . b . c"])
+def test_rspq_windowed_matches_bruteforce(query):
+    rng = random.Random(3)
+    dfa = compile_query(query)
+    window = 12.0
+    stream = _random_stream(rng, n_vertices=5, n_edges=25, t_max=60)
+    eng = RSPQ(dfa, window)
+    for i, (u, v, lab, ts) in enumerate(stream):
+        eng.insert(u, v, lab, ts)
+        if i % 6 == 5:
+            eng.expire(ts)
+    assert eng.results == streaming_oracle(stream, dfa, window, simple=True)
+
+
+def test_rspq_fig1_example():
+    """The running example of the paper: (follows . mentions)+ on Fig. 1.
+
+    At t=18 the pair (x, y) must be reported under BOTH semantics: the
+    arbitrary path <x,y,u,v,y> and the simple path <x,z,u,v,y> exist.
+    RSPQ must detect the conflict at v and recover via Unmark (Example 4.2).
+    """
+    dfa = compile_query("(follows . mentions)+")
+    window = 15.0
+    # Fig. 1(a): timestamps reconstructed from the example narrative
+    edges = [
+        ("x", "y", "follows", 3.0),
+        ("y", "u", "mentions", 4.0),
+        ("x", "z", "follows", 8.0),
+        ("u", "v", "follows", 12.0),
+        ("x", "y", "follows", 13.0),  # re-insertion freshens the edge
+        ("z", "u", "mentions", 14.0),
+        ("v", "y", "mentions", 18.0),
+    ]
+    arb = RAPQ(dfa, window)
+    smp = RSPQ(dfa, window)
+    for (u, v, lab, ts) in edges:
+        arb.insert(u, v, lab, ts)
+        smp.insert(u, v, lab, ts)
+    assert ("x", "y") in arb.results
+    assert ("x", "y") in smp.results
+    # NOTE: with eager timestamp improvements (see reference.py Extend),
+    # the tree re-parents through the simple path <x,z,u,v> before edge
+    # (v,y) arrives, so no conflict fires here; the conflict machinery is
+    # exercised deterministically in test_rspq_conflict_machinery below.
+
+
+def test_rspq_conflict_machinery():
+    """Force a genuine conflict: when edge (v,y) arrives, the ONLY tree path
+    to (v,1) goes through y, so Extend must detect [1] !>= [2] at y, invoke
+    Unmark, and later recover the simple path when (z,u) arrives."""
+    dfa = compile_query("(f . m)+")
+    window = 30.0
+    smp = RSPQ(dfa, window)
+    arb = RAPQ(dfa, window)
+    edges = [
+        ("x", "y", "f", 3.0),
+        ("y", "u", "m", 4.0),
+        ("x", "z", "f", 8.0),
+        ("u", "v", "f", 12.0),
+        ("v", "y", "m", 13.0),  # conflict: path x,y,u,v revisits y
+        ("z", "u", "m", 14.0),  # completes the simple path x,z,u,v,y
+    ]
+    for i, (u, v, lab, ts) in enumerate(edges):
+        arb.insert(u, v, lab, ts)
+        smp.insert(u, v, lab, ts)
+        if i == 4:
+            # arbitrary semantics accepts the non-simple path already...
+            assert ("x", "y") in arb.results
+            # ...simple-path semantics must NOT (x,y,u,v,y revisits y)
+            assert ("x", "y") not in smp.results
+            assert smp.conflicts_detected > 0
+    # after (z,u): the simple path <x,z,u,v,y> exists -> both report it
+    assert ("x", "y") in smp.results
+    # cross-check against exhaustive enumeration
+    oracle = streaming_oracle(edges, dfa, window, simple=True)
+    assert smp.results == oracle
+
+
+def test_rspq_conflict_free_has_no_reexploration():
+    """For restricted expressions the RSPQ engine must behave like RAPQ:
+    no conflicts, each (v, t) visited at most once per tree."""
+    dfa = compile_query("(a | b)*")
+    assert dfa.has_containment_property
+    rng = random.Random(11)
+    eng = RSPQ(dfa, window=100.0)
+    for (u, v, lab, ts) in _random_stream(rng, 6, 30, 80):
+        eng.insert(u, v, lab, ts)
+    assert eng.conflicts_detected == 0
+    for tree in eng.delta.values():
+        for key, occs in tree.occs.items():
+            assert len(occs) == 1, key
