@@ -2,6 +2,7 @@
 CSV emission (``name,us_per_call,derived``)."""
 from __future__ import annotations
 
+import re
 import time
 from typing import Callable, Dict, Iterable, List
 
@@ -25,13 +26,13 @@ SO_LABEL_MAP = {"a": "a2q", "b": "c2a", "c": "c2q"}
 
 
 def so_queries() -> Dict[str, str]:
-    out = {}
-    for name, expr in PAPER_QUERIES.items():
-        q = expr
-        for sym, lab in SO_LABEL_MAP.items():
-            q = q.replace(sym, lab)
-        out[name] = q
-    return out
+    # simultaneous substitution: sequential str.replace would re-match the
+    # 'a'/'c' inside already-substituted labels ("c2a" -> "c2q2a", a phantom
+    # label that silently empties the query against the SO stream)
+    return {
+        name: re.sub(r"[abc]", lambda m: SO_LABEL_MAP[m.group(0)], expr)
+        for name, expr in PAPER_QUERIES.items()
+    }
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:

@@ -1,0 +1,119 @@
+"""Beyond-paper figure: multi-query scaling — Q persistent RPQs on ONE
+stream, batched shared-adjacency engine vs Q independent dense engines.
+
+This is the serving shape the paper's execution model implies (§2: many
+registered persistent queries, one sgt stream) at the throughput the
+ROADMAP asks for: the batched engine ingests each micro-batch with a
+single jitted dispatch for the whole workload, while Q independent
+engines each re-ingest the same edges and dispatch separately.
+
+Reported per configuration:
+    dispatches  -- total jitted ingest steps (batched: one per micro-batch)
+    agg_eps     -- aggregate throughput, Q x edges / wall-second
+    speedup     -- batched wall-clock advantage over independent engines
+
+Result-stream identity (every query, tuple-for-tuple at B=1) is asserted,
+not just reported.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from repro.core.automaton import compile_query
+from repro.core.engine import BatchedDenseRPQEngine, DenseRPQEngine, RegisteredQuery
+from repro.streaming.generators import so_like
+
+from .common import emit, so_queries
+
+
+def _drive(insert, expire, stream, slide: float) -> float:
+    """Eager evaluation / lazy expiration driver; returns wall seconds."""
+    next_exp = slide
+    t0 = time.perf_counter()
+    for sgt in stream:
+        if sgt.ts >= next_exp:
+            expire(sgt.ts)
+            while next_exp <= sgt.ts:
+                next_exp += slide
+        insert(sgt.src, sgt.dst, sgt.label, sgt.ts)
+    return time.perf_counter() - t0
+
+
+def run(n_queries: int = 8, n_edges: int = 600, n_vertices: int = 20,
+        n_slots: int = 24, window: float = 30.0, slide: float = 5.0) -> Dict:
+    """Default config = the per-tuple serving regime (B=1, window-bounded
+    vertex set): dispatch amortization dominates there, which is exactly
+    the axis the batched engine shares across queries. Larger n_slots
+    shifts the balance toward closure FLOPs, where both paths do the same
+    arithmetic and the ratio approaches 1 on CPU (on TPU the dispatch +
+    host-sync overhead per step is the bottleneck again)."""
+    assert n_queries >= 8, "multi-query point needs >= 8 registered RPQs"
+    exprs = list(so_queries().values())
+    exprs = (exprs * ((n_queries + len(exprs) - 1) // len(exprs)))[:n_queries]
+    dfas = [compile_query(e) for e in exprs]
+    stream = so_like(n_vertices, n_edges, seed=21)
+
+    # --- warm the jit caches (compilation excluded from both timings) ------
+    warm_stream = list(stream)[:3]
+    warm_group = BatchedDenseRPQEngine(
+        [RegisteredQuery(f"q{i}", d, window) for i, d in enumerate(dfas)],
+        n_slots=n_slots, batch_size=1)
+    warm_indep = [DenseRPQEngine(d, window, n_slots=n_slots, batch_size=1)
+                  for d in dfas]
+    for sgt in warm_stream:
+        warm_group.insert(sgt.src, sgt.dst, sgt.label, sgt.ts)
+        warm_group.expire(sgt.ts)
+        for eng in warm_indep:
+            eng.insert(sgt.src, sgt.dst, sgt.label, sgt.ts)
+            eng.expire(sgt.ts)
+
+    # --- Q independent engines (today's per-query serving path) ------------
+    indep: List[DenseRPQEngine] = [
+        DenseRPQEngine(d, window, n_slots=n_slots, batch_size=1) for d in dfas
+    ]
+
+    def ins_indep(u, v, lab, ts):
+        for eng in indep:
+            eng.insert(u, v, lab, ts)
+
+    def exp_indep(tau):
+        for eng in indep:
+            eng.expire(tau)
+
+    wall_indep = _drive(ins_indep, exp_indep, stream, slide)
+    disp_indep = sum(e.steps for e in indep)
+
+    # --- one batched engine over the shared adjacency ----------------------
+    group = BatchedDenseRPQEngine(
+        [RegisteredQuery(f"q{i}", d, window) for i, d in enumerate(dfas)],
+        n_slots=n_slots, batch_size=1)
+    wall_group = _drive(group.insert, group.expire, stream, slide)
+    disp_group = group.steps
+
+    # --- result-stream identity (the conformance bar, not a sample) --------
+    for qi, eng in enumerate(indep):
+        assert group.per_query_results[qi] == eng.results, (
+            f"query {qi} ({exprs[qi]}): batched != independent")
+    assert disp_group < disp_indep, (disp_group, disp_indep)
+
+    agg = n_queries * len(stream)
+    speedup = wall_indep / wall_group
+    emit(f"fig12/Q={n_queries}/independent", wall_indep / agg * 1e6,
+         f"agg_eps={agg / wall_indep:.0f} dispatches={disp_indep}")
+    emit(f"fig12/Q={n_queries}/batched", wall_group / agg * 1e6,
+         f"agg_eps={agg / wall_group:.0f} dispatches={disp_group} "
+         f"speedup={speedup:.2f}x")
+    return {
+        "speedup": speedup,
+        "dispatches": (disp_group, disp_indep),
+        "agg_eps": (agg / wall_group, agg / wall_indep),
+    }
+
+
+if __name__ == "__main__":
+    out = run()
+    assert out["speedup"] >= 2.0, (
+        f"batched engine speedup {out['speedup']:.2f}x below the 2x bar")
+    print(f"[ok] batched {out['speedup']:.2f}x over independent; "
+          f"dispatches {out['dispatches'][0]} vs {out['dispatches'][1]}")

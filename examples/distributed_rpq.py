@@ -16,6 +16,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import compile_query
 from repro.core.engine import DenseRPQEngine, EngineArrays
+from repro.launch.mesh import mesh_context
 from repro.streaming.generators import so_like
 
 
@@ -34,7 +35,7 @@ def main() -> None:
     # sharding-agnostic (GSPMD partitions the relaxation + inserts the
     # frontier collectives)
     eng = DenseRPQEngine(dfa, window=30.0, n_slots=64, batch_size=32)
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         eng.arrays = EngineArrays(
             adj=jax.device_put(eng.arrays.adj, NamedSharding(mesh, P(None, None, "model"))),
             dist=jax.device_put(eng.arrays.dist, NamedSharding(mesh, P("data", "model", None))),

@@ -19,15 +19,15 @@ from repro.streaming.stream import Stream
 
 
 def main() -> None:
-    stream = with_deletions(so_like(n_vertices=64, n_edges=2500, seed=42),
+    stream = with_deletions(so_like(n_vertices=48, n_edges=900, seed=42),
                             ratio=0.02, seed=1)
     print(f"stream: {len(stream)} sgts over {stream.span()[1]:.0f}s "
           f"(2% explicit deletions)")
 
     svc = PersistentQueryService(window=20.0, slide=2.0)
-    svc.register("notify", "a2q . c2a*", engine="dense", n_slots=128)
+    svc.register("notify", "a2q . c2a*", engine="dense", n_slots=96)
     svc.register("notify_simple", "a2q . c2a*", engine="dense",
-                 path_semantics="simple", n_slots=128)
+                 path_semantics="simple", n_slots=96)
     svc.register("reach_ref", "(a2q | c2a)+", engine="reference")
 
     tuples = list(stream)
@@ -39,9 +39,9 @@ def main() -> None:
     with tempfile.TemporaryDirectory() as ckpt_dir:
         svc.snapshot(ckpt_dir, step=half)
         svc2 = PersistentQueryService(window=20.0, slide=2.0)
-        svc2.register("notify", "a2q . c2a*", engine="dense", n_slots=128)
+        svc2.register("notify", "a2q . c2a*", engine="dense", n_slots=96)
         svc2.register("notify_simple", "a2q . c2a*", engine="dense",
-                      path_semantics="simple", n_slots=128)
+                      path_semantics="simple", n_slots=96)
         svc2.register("reach_ref", "(a2q | c2a)+", engine="reference")
         svc2.restore(ckpt_dir)
         assert svc2.results("notify") == svc.results("notify")

@@ -208,3 +208,30 @@ def restore(
 
 def _is_single_sharding(s: Any) -> bool:
     return isinstance(s, jax.sharding.Sharding)
+
+
+# ---------------------------------------------------------------------------
+# Opaque-object leaves: python engine state (e.g. the reference RPQ engines'
+# pointer trees) rides the same manifest/shard machinery as device arrays by
+# serializing to a uint8 leaf. Restore sites pass `pickle_like()` as the
+# `like` leaf (dtype uint8; stored shape wins at load).
+# ---------------------------------------------------------------------------
+
+
+def pickle_leaf(obj: Any) -> np.ndarray:
+    """Serialize an arbitrary python object into a checkpointable array."""
+    import pickle
+
+    return np.frombuffer(pickle.dumps(obj), dtype=np.uint8)
+
+
+def unpickle_leaf(arr: Any) -> Any:
+    """Inverse of :func:`pickle_leaf` (accepts np or device arrays)."""
+    import pickle
+
+    return pickle.loads(np.asarray(arr).tobytes())
+
+
+def pickle_like() -> np.ndarray:
+    """A `like` placeholder for a pickled leaf (shape comes from the file)."""
+    return np.zeros((0,), np.uint8)

@@ -4,10 +4,13 @@ Public API:
     compile_query(expr)            -- regex -> minimal DFA (+ RSPQ metadata)
     RAPQ / RSPQ                    -- paper-faithful pointer engines (oracle)
     DenseRPQEngine                 -- the TPU-native dense semiring engine
+    BatchedDenseRPQEngine          -- Q queries, one shared-adjacency step
+    RegisteredQuery                -- one query of a batched group
     batch_rapq / streaming_oracle  -- batch baselines
 """
 from .automaton import DFA, compile_query
 from .batch import batch_rapq, batch_rspq_bruteforce, snapshot_from_edges, streaming_oracle
+from .engine import BatchedDenseRPQEngine, DenseRPQEngine, RegisteredQuery
 from .reference import RAPQ, RSPQ, SnapshotGraph
 
 __all__ = [
@@ -16,6 +19,9 @@ __all__ = [
     "RAPQ",
     "RSPQ",
     "SnapshotGraph",
+    "BatchedDenseRPQEngine",
+    "DenseRPQEngine",
+    "RegisteredQuery",
     "batch_rapq",
     "batch_rspq_bruteforce",
     "snapshot_from_edges",

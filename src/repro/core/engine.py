@@ -1,24 +1,48 @@
-"""Dense TPU-native streaming RPQ engine (the paper's technique, tensorized).
+"""Dense TPU-native streaming RPQ engine (the paper's technique, tensorized),
+multi-query batched: Q persistent queries share ONE adjacency and step as one
+jitted program.
 
 State (all fixed-capacity, jit-static shapes):
-    adj     (L, N, N) f32   newest edge timestamp per (label, u, v); -inf none
-    dist    (N, N, K) f32   bottleneck closure D[x, v, s] (DESIGN.md §2)
-    emitted (N, N)   bool   pairs already reported (implicit-window monotone)
-    now     ()       f32    latest event time seen
+    adj     (L, N, N)    f32   newest edge timestamp per (label, u, v); -inf
+                               none. L = |union alphabet| of ALL registered
+                               queries — the stream is ingested ONCE, not
+                               re-ingested per query.
+    dist    (Q, N, N, K) f32   per-query bottleneck closure D[q, x, v, s]
+                               (DESIGN.md §2); K padded to max_q k_q, the
+                               padding states are inert (never scattered
+                               into, finals masks padded False).
+    emitted (Q, N, N)    bool  pairs already reported per query
+                               (implicit-window monotone)
+    now     ()           f32   latest event time seen (shared stream clock)
+
+The per-query DFA transition tables are flattened into one global list
+(semiring.BatchedTransitionTable): a relaxation round is a single
+gather → batched max-min contraction → segment-max scatter, so `ingest →
+relax → emit` for all Q queries is ONE dispatch per micro-batch instead of
+Q. Per-query windows are a (Q,) vector applied as read-time thresholds.
 
 Key property of the (max, min) formulation (beyond-paper, §Perf): *window
 expiry needs no index maintenance* — a pair is valid iff its bottleneck
-timestamp exceeds ``now - |W|``, so expiry is a threshold at read time. The
-paper's ExpiryRAPQ machinery is only needed for (a) explicit deletions
+timestamp exceeds ``now - |W_q|``, so expiry is a threshold at read time.
+The paper's ExpiryRAPQ machinery is only needed for (a) explicit deletions
 (closure re-computation, the paper's own uniform machinery) and (b) vertex
-slot recycling (python-side compaction).
+slot recycling (python-side compaction, thresholded at the LARGEST window
+of the group so no query loses live state).
 
-Semantics vs the paper:
-  * micro-batch ingest (batch B of sgts processed per step). With B = 1 the
-    result stream matches the paper tuple-for-tuple (tested); with B > 1
-    results are evaluated at batch boundaries (documented skew: a path valid
-    only strictly inside a batch interval is not reported).
+Semantics vs the paper (B = micro-batch size, Q = #queries):
+  * B = 1: the per-query result streams match the paper tuple-for-tuple for
+    every query in the group (tested) — a tuple outside query q's alphabet
+    steps q's closure with an unchanged adjacency, a no-op.
+  * B > 1: results are evaluated at batch boundaries (documented skew: a
+    path valid only strictly inside a batch interval is not reported).
+    Additionally, with Q > 1 the batch PACKING differs from Q independent
+    engines: independent engines drop out-of-alphabet tuples before filling
+    a batch, while the group packs every tuple in the union alphabet — so
+    batch boundaries (and hence which intra-batch paths are observable)
+    can differ per query from a solo run of that query. B = 1 has no skew.
   * implicit windows, eager evaluation, lazy expiration — as in the paper.
+  * closure rounds run until the SLOWEST query converges; converged queries
+    relax as no-ops (monotone, so results are unaffected).
 """
 from __future__ import annotations
 
@@ -30,122 +54,151 @@ import jax.numpy as jnp
 import numpy as np
 
 from .automaton import DFA
-from .semiring import NEG_INF, TransitionTable, closure, relax_round, valid_pairs
+from .semiring import (
+    NEG_INF,
+    BatchedTransitionTable,
+    TransitionTable,
+    batched_closure,
+    batched_valid_pairs,
+)
 
 Pair = Tuple[object, object]
 
 
 class EngineArrays(NamedTuple):
+    """Single-query view (legacy layout) — the Q=1 slice of the batched
+    state, kept as the public surface of :class:`DenseRPQEngine` so sharded
+    deployments can re-place individual leaves (examples/distributed_rpq)."""
+
     adj: jnp.ndarray      # (L, N, N) f32
     dist: jnp.ndarray     # (N, N, K) f32
     emitted: jnp.ndarray  # (N, N) bool
     now: jnp.ndarray      # () f32
 
 
+class BatchedEngineArrays(NamedTuple):
+    adj: jnp.ndarray      # (L, N, N) f32 shared
+    dist: jnp.ndarray     # (Q, N, N, K) f32
+    emitted: jnp.ndarray  # (Q, N, N) bool
+    now: jnp.ndarray      # () f32
+
+
 def init_arrays(n_slots: int, n_labels: int, k: int) -> EngineArrays:
-    return EngineArrays(
+    b = init_batched_arrays(n_slots, n_labels, 1, k)
+    return EngineArrays(b.adj, b.dist[0], b.emitted[0], b.now)
+
+
+def init_batched_arrays(
+    n_slots: int, n_labels: int, n_queries: int, k: int
+) -> BatchedEngineArrays:
+    return BatchedEngineArrays(
         adj=jnp.full((n_labels, n_slots, n_slots), NEG_INF, jnp.float32),
-        dist=jnp.full((n_slots, n_slots, k), NEG_INF, jnp.float32),
-        emitted=jnp.zeros((n_slots, n_slots), bool),
+        dist=jnp.full((n_queries, n_slots, n_slots, k), NEG_INF, jnp.float32),
+        emitted=jnp.zeros((n_queries, n_slots, n_slots), bool),
         now=jnp.asarray(NEG_INF, jnp.float32),
     )
 
 
 # ---------------------------------------------------------------------------
-# jitted step functions (pure; TransitionTable & co. passed as static/consts)
+# jitted step functions (pure; BatchedTransitionTable & co. passed as consts)
 # ---------------------------------------------------------------------------
 
 
 @functools.partial(jax.jit, static_argnames=("backend",), donate_argnums=(0,))
 def _ingest(
-    arrays: EngineArrays,
-    src: jnp.ndarray,        # (B,) int32 slot ids
-    dst: jnp.ndarray,        # (B,) int32
-    lab: jnp.ndarray,        # (B,) int32
-    ts: jnp.ndarray,         # (B,) f32
-    mask: jnp.ndarray,       # (B,) bool  (padding)
-    tt: TransitionTable,
-    finals_mask: jnp.ndarray,  # (K,) bool
-    window: jnp.ndarray,       # () f32
+    arrays: BatchedEngineArrays,
+    src: jnp.ndarray,          # (B,) int32 slot ids
+    dst: jnp.ndarray,          # (B,) int32
+    lab: jnp.ndarray,          # (B,) int32 shared-alphabet label ids
+    ts: jnp.ndarray,           # (B,) f32
+    mask: jnp.ndarray,         # (B,) bool  (padding)
+    btt: BatchedTransitionTable,
+    finals_mask: jnp.ndarray,  # (Q, K) bool
+    windows: jnp.ndarray,      # (Q,) f32
     backend: str = "jnp",
 ):
     eff_ts = jnp.where(mask, ts, NEG_INF)
     adj = arrays.adj.at[lab, src, dst].max(eff_ts, mode="drop")
     now = jnp.maximum(arrays.now, jnp.max(eff_ts))
-    dist, rounds = closure(arrays.dist, adj, tt, backend)
-    low = now - window
-    valid = valid_pairs(dist, finals_mask, low)
+    dist, rounds = batched_closure(arrays.dist, adj, btt, backend)
+    low = now - windows
+    valid = batched_valid_pairs(dist, finals_mask, low)
     new = jnp.logical_and(valid, jnp.logical_not(arrays.emitted))
     emitted = jnp.logical_or(arrays.emitted, valid)
-    return EngineArrays(adj, dist, emitted, now), new, rounds
+    return BatchedEngineArrays(adj, dist, emitted, now), new, rounds
 
 
 @functools.partial(jax.jit, static_argnames=("backend",), donate_argnums=(0,))
 def _delete(
-    arrays: EngineArrays,
-    src: jnp.ndarray,        # (B,) int32
+    arrays: BatchedEngineArrays,
+    src: jnp.ndarray,          # (B,) int32
     dst: jnp.ndarray,
     lab: jnp.ndarray,
     mask: jnp.ndarray,
-    ts_now: jnp.ndarray,     # () f32 event time of the negative tuple(s)
-    tt: TransitionTable,
+    ts_now: jnp.ndarray,       # () f32 event time of the negative tuple(s)
+    btt: BatchedTransitionTable,
     finals_mask: jnp.ndarray,
-    window: jnp.ndarray,
+    windows: jnp.ndarray,
     backend: str = "jnp",
 ):
     """Explicit deletion (negative tuple): clear adjacency entries and
-    recompute the closure from scratch — the paper's uniform machinery
-    (Delete -> ExpiryRAPQ re-derivation) in dense form."""
+    recompute every query's closure from scratch — the paper's uniform
+    machinery (Delete -> ExpiryRAPQ re-derivation) in dense batched form."""
     now = jnp.maximum(arrays.now, ts_now)
-    low = now - window
-    valid_before = valid_pairs(arrays.dist, finals_mask, low)
+    low = now - windows
+    valid_before = batched_valid_pairs(arrays.dist, finals_mask, low)
     drop = jnp.where(mask, jnp.asarray(NEG_INF, jnp.float32), arrays.adj[lab, src, dst])
     adj = arrays.adj.at[lab, src, dst].set(drop, mode="drop")
     dist0 = jnp.full_like(arrays.dist, NEG_INF)
-    dist, rounds = closure(dist0, adj, tt, backend)
-    valid_after = valid_pairs(dist, finals_mask, low)
+    dist, rounds = batched_closure(dist0, adj, btt, backend)
+    valid_after = batched_valid_pairs(dist, finals_mask, low)
     invalidated = jnp.logical_and(valid_before, jnp.logical_not(valid_after))
-    return EngineArrays(adj, dist, arrays.emitted, now), invalidated, rounds
+    return BatchedEngineArrays(adj, dist, arrays.emitted, now), invalidated, rounds
 
 
 @jax.jit
-def _expire(arrays: EngineArrays, tau: jnp.ndarray, window: jnp.ndarray):
+def _expire(arrays: BatchedEngineArrays, tau: jnp.ndarray, max_window: jnp.ndarray):
     """Lazy expiration at slide boundaries: mask dead adjacency entries and
-    report per-slot liveness for python-side slot recycling. dist needs no
-    update (stale entries are below the validity threshold by construction)."""
+    report per-slot liveness for python-side slot recycling. Thresholded at
+    the group's LARGEST window (an edge live for any query stays); dist
+    needs no update (stale entries fall below each query's own read-time
+    validity threshold by construction)."""
     now = jnp.maximum(arrays.now, tau)
-    low = now - window
+    low = now - max_window
     adj = jnp.where(arrays.adj > low, arrays.adj, NEG_INF)
     incident = jnp.maximum(
         jnp.max(adj, axis=(0, 2)),  # outgoing per u
         jnp.max(adj, axis=(0, 1)),  # incoming per v
     )
     live = incident > low
-    return EngineArrays(adj, arrays.dist, arrays.emitted, now), live
+    return BatchedEngineArrays(adj, arrays.dist, arrays.emitted, now), live
 
 
 @jax.jit
-def _clear_slots(arrays: EngineArrays, slots: jnp.ndarray):
-    """Zero out rows/cols of recycled slots (−inf / False)."""
+def _clear_slots(arrays: BatchedEngineArrays, slots: jnp.ndarray):
+    """Zero out rows/cols of recycled slots (−inf / False) for ALL queries."""
     adj = arrays.adj.at[:, slots, :].set(NEG_INF, mode="drop")
     adj = adj.at[:, :, slots].set(NEG_INF, mode="drop")
-    dist = arrays.dist.at[slots, :, :].set(NEG_INF, mode="drop")
-    dist = dist.at[:, slots, :].set(NEG_INF, mode="drop")
-    emitted = arrays.emitted.at[slots, :].set(False, mode="drop")
-    emitted = emitted.at[:, slots].set(False, mode="drop")
-    return EngineArrays(adj, dist, emitted, arrays.now)
+    dist = arrays.dist.at[:, slots, :, :].set(NEG_INF, mode="drop")
+    dist = dist.at[:, :, slots, :].set(NEG_INF, mode="drop")
+    emitted = arrays.emitted.at[:, slots, :].set(False, mode="drop")
+    emitted = emitted.at[:, :, slots].set(False, mode="drop")
+    return BatchedEngineArrays(adj, dist, emitted, arrays.now)
 
 
 @jax.jit
 def _conflict_possible(
-    dist: jnp.ndarray, not_contained: jnp.ndarray, low: jnp.ndarray
+    dist: jnp.ndarray,           # (Q, N, N, K)
+    not_contained: jnp.ndarray,  # (Q, K, K), 1 where [s] !>= [t]
+    low: jnp.ndarray,            # (Q,)
 ) -> jnp.ndarray:
-    """Over-approximate RSPQ conflict detection (Definition 16): some root
-    reaches some vertex v in states s and t with [s] ⊉ [t]. Ancestorship is
-    over-approximated by co-reachability (sound: never misses a conflict)."""
-    p = (dist > low).astype(jnp.float32)  # (N, N, K)
-    m = not_contained.astype(jnp.float32)  # (K, K), 1 where [s] !>= [t]
-    cnt = jnp.einsum("xvs,st,xvt->", p, m, p)
+    """Over-approximate RSPQ conflict detection (Definition 16), per query:
+    some root reaches some vertex v in states s and t with [s] ⊉ [t].
+    Ancestorship is over-approximated by co-reachability (sound: never
+    misses a conflict)."""
+    p = (dist > low[:, None, None, None]).astype(jnp.float32)  # (Q, N, N, K)
+    m = not_contained.astype(jnp.float32)
+    cnt = jnp.einsum("qxvs,qst,qxvt->q", p, m, p)
     return cnt > 0
 
 
@@ -154,52 +207,84 @@ def _conflict_possible(
 # ---------------------------------------------------------------------------
 
 
-class DenseRPQEngine:
-    """Streaming RPQ engine over fixed-capacity dense state.
+class RegisteredQuery(NamedTuple):
+    """One persistent query of a batched group."""
 
-    path_semantics: "arbitrary" (RAPQ) or "simple" (RSPQ). Simple-path mode
-    uses the Mendelzon–Wood tractable class: if the automaton has the suffix
-    containment property the dense answer set is provably identical under
-    both semantics (DESIGN.md §2); otherwise runtime conflict detection
-    flags windows where the dense answer may over-report, and
-    ``conflicted`` exposes it (the service layer falls back to the
-    reference RSPQ for exactness — the paper's exponential case).
+    name: str
+    dfa: DFA
+    window: float
+    path_semantics: str = "arbitrary"  # arbitrary | simple
+
+
+class BatchedDenseRPQEngine:
+    """Q persistent RPQs over ONE stream, stepped as one jitted program.
+
+    All queries share the vertex interner and the (L, N, N) adjacency over
+    the union label alphabet; per-query closure state is stacked along the
+    leading Q axis. Per-query ``path_semantics`` follows the single-engine
+    contract: "simple" (RSPQ) uses the Mendelzon–Wood tractable class and
+    flags possibly-over-reporting windows in :attr:`per_query_conflicted`.
     """
 
     def __init__(
         self,
-        dfa: DFA,
-        window: float,
+        queries: Sequence[RegisteredQuery],
         n_slots: int = 128,
         batch_size: int = 32,
         backend: str = "jnp",
-        path_semantics: str = "arbitrary",
     ):
-        if dfa.containment is None:
-            raise ValueError("compile the query with compile_query()")
-        self.dfa = dfa
-        self.window = float(window)
+        if not queries:
+            raise ValueError("register at least one query")
+        for q in queries:
+            if q.dfa.containment is None:
+                raise ValueError(f"compile query {q.name!r} with compile_query()")
+        self.query_specs: List[RegisteredQuery] = list(queries)
+        self.n_queries = len(self.query_specs)
         self.n_slots = n_slots
         self.batch_size = batch_size
         self.backend = backend
-        self.path_semantics = path_semantics
-        self.tt = TransitionTable.from_dfa(dfa)
-        fm = np.zeros((dfa.k,), bool)
-        for f in dfa.finals:
-            fm[f] = True
+        # shared alphabet = union over queries, sorted for determinism
+        self.labels: Tuple[str, ...] = tuple(
+            sorted(set().union(*[set(q.dfa.labels) for q in self.query_specs]))
+        )
+        self._label_index = {lab: i for i, lab in enumerate(self.labels)}
+        self.btt = BatchedTransitionTable.from_dfas(
+            [q.dfa for q in self.query_specs], self.labels
+        )
+        self.k = self.btt.k
+        qn, k = self.n_queries, self.k
+        fm = np.zeros((qn, k), bool)
+        nc = np.zeros((qn, k, k), bool)
+        self._simple = np.zeros((qn,), bool)
+        self._check_conflict = np.zeros((qn,), bool)
+        windows = np.zeros((qn,), np.float32)
+        for qi, spec in enumerate(self.query_specs):
+            dfa = spec.dfa
+            for f in dfa.finals:
+                fm[qi, f] = True
+            nc[qi, : dfa.k, : dfa.k] = ~dfa.containment
+            windows[qi] = spec.window
+            self._simple[qi] = spec.path_semantics == "simple"
+            self._check_conflict[qi] = (
+                spec.path_semantics == "simple" and not dfa.has_containment_property
+            )
         self.finals_mask = jnp.asarray(fm)
-        self.not_contained = jnp.asarray(~dfa.containment)
-        self.arrays = init_arrays(n_slots, dfa.n_labels, dfa.k)
-        # vertex interning
+        self.not_contained = jnp.asarray(nc)
+        self.windows = jnp.asarray(windows)
+        self.max_window = float(windows.max())
+        # label axis rounded up so alphabet-size changes reuse compiled steps
+        n_label_slots = max(len(self.labels) + (-len(self.labels)) % 4, 4)
+        self.batched_arrays = init_batched_arrays(n_slots, n_label_slots, qn, k)
+        # vertex interning (shared across queries: the stream is one graph)
         self.slot_of: Dict[object, int] = {}
         self.vertex_of: List[Optional[object]] = [None] * n_slots
         self.free: List[int] = list(range(n_slots - 1, -1, -1))
-        # results
-        self.results: Set[Pair] = set()
-        self.result_log: List[Tuple[float, Pair]] = []
-        self.conflicted = False
+        # per-query results
+        self.per_query_results: List[Set[Pair]] = [set() for _ in range(qn)]
+        self.per_query_log: List[List[Tuple[float, Pair]]] = [[] for _ in range(qn)]
+        self.per_query_conflicted: List[bool] = [False] * qn
         self.total_rounds = 0
-        self.steps = 0
+        self.steps = 0  # jitted ingest/delete dispatches (the Q-sharing win)
 
     # -- interning ----------------------------------------------------------
 
@@ -219,18 +304,23 @@ class DenseRPQEngine:
 
     # -- public API ----------------------------------------------------------
 
-    def insert(self, u: object, v: object, label: str, ts: float) -> Set[Pair]:
+    def insert(self, u: object, v: object, label: str, ts: float) -> List[Set[Pair]]:
         return self.insert_batch([(u, v, label, ts)])
 
-    def insert_batch(self, edges: Sequence[Tuple[object, object, str, float]]) -> Set[Pair]:
-        """Ingest a micro-batch of append sgts (timestamp-ordered)."""
-        out: Set[Pair] = set()
+    def insert_batch(
+        self, edges: Sequence[Tuple[object, object, str, float]]
+    ) -> List[Set[Pair]]:
+        """Ingest a micro-batch of append sgts (timestamp-ordered). Returns
+        the NEW result pairs per query (list indexed like query_specs)."""
+        out: List[Set[Pair]] = [set() for _ in range(self.n_queries)]
         B = self.batch_size
         for i in range(0, len(edges), B):
-            out |= self._ingest_chunk(edges[i : i + B])
+            fresh = self._ingest_chunk(edges[i : i + B])
+            for qi in range(self.n_queries):
+                out[qi] |= fresh[qi]
         return out
 
-    def _ingest_chunk(self, edges) -> Set[Pair]:
+    def _ingest_chunk(self, edges) -> List[Set[Pair]]:
         B = self.batch_size
         src = np.zeros((B,), np.int32)
         dst = np.zeros((B,), np.int32)
@@ -239,11 +329,12 @@ class DenseRPQEngine:
         mask = np.zeros((B,), bool)
         j = 0
         for (u, v, label, t) in edges:
-            if label not in self.dfa.labels:
-                continue  # outside Sigma_Q: discarded (paper §5.2)
+            li = self._label_index.get(label)
+            if li is None:
+                continue  # outside the union Sigma_Q: discarded (paper §5.2)
             src[j] = self._slot(u)
             dst[j] = self._slot(v)
-            lab[j] = self.dfa.labels.index(label)
+            lab[j] = li
             ts[j] = t
             mask[j] = True
             j += 1
@@ -251,52 +342,66 @@ class DenseRPQEngine:
             # still advance the clock
             times = [t for (_u, _v, _l, t) in edges]
             if times:
-                self.arrays = self.arrays._replace(
-                    now=jnp.maximum(self.arrays.now, jnp.asarray(max(times), jnp.float32))
+                self.batched_arrays = self.batched_arrays._replace(
+                    now=jnp.maximum(
+                        self.batched_arrays.now,
+                        jnp.asarray(max(times), jnp.float32),
+                    )
                 )
-            return set()
-        self.arrays, new, rounds = _ingest(
-            self.arrays,
+            return [set() for _ in range(self.n_queries)]
+        self.batched_arrays, new, rounds = _ingest(
+            self.batched_arrays,
             jnp.asarray(src), jnp.asarray(dst), jnp.asarray(lab),
             jnp.asarray(ts), jnp.asarray(mask),
-            self.tt, self.finals_mask,
-            jnp.asarray(self.window, jnp.float32),
+            self.btt, self.finals_mask, self.windows,
             backend=self.backend,
         )
         self.total_rounds += int(rounds)
         self.steps += 1
-        if self.path_semantics == "simple" and not self.dfa.has_containment_property:
-            low = self.arrays.now - self.window
-            if bool(_conflict_possible(self.arrays.dist, self.not_contained, low)):
-                self.conflicted = True
+        if self._check_conflict.any():
+            low = self.batched_arrays.now - self.windows
+            flags = np.asarray(
+                _conflict_possible(self.batched_arrays.dist, self.not_contained, low)
+            )
+            for qi in np.nonzero(flags & self._check_conflict)[0]:
+                self.per_query_conflicted[int(qi)] = True
         return self._decode_new(new)
 
-    def delete(self, u: object, v: object, label: str, ts: float) -> Set[Pair]:
-        """Explicit deletion (negative tuple). Returns invalidated pairs."""
-        if label not in self.dfa.labels or u not in self.slot_of or v not in self.slot_of:
-            self.arrays = self.arrays._replace(
-                now=jnp.maximum(self.arrays.now, jnp.asarray(ts, jnp.float32))
+    def delete(self, u: object, v: object, label: str, ts: float) -> List[Set[Pair]]:
+        """Explicit deletion (negative tuple). Returns invalidated pairs
+        per query."""
+        li = self._label_index.get(label)
+        if li is None or u not in self.slot_of or v not in self.slot_of:
+            self.batched_arrays = self.batched_arrays._replace(
+                now=jnp.maximum(self.batched_arrays.now, jnp.asarray(ts, jnp.float32))
             )
-            return set()
-        B = 1
+            return [set() for _ in range(self.n_queries)]
         src = jnp.asarray([self.slot_of[u]], jnp.int32)
         dst = jnp.asarray([self.slot_of[v]], jnp.int32)
-        lab = jnp.asarray([self.dfa.labels.index(label)], jnp.int32)
+        labj = jnp.asarray([li], jnp.int32)
         mask = jnp.asarray([True])
-        self.arrays, invalidated, rounds = _delete(
-            self.arrays, src, dst, lab, mask,
+        self.batched_arrays, invalidated, rounds = _delete(
+            self.batched_arrays, src, dst, labj, mask,
             jnp.asarray(ts, jnp.float32),
-            self.tt, self.finals_mask,
-            jnp.asarray(self.window, jnp.float32),
+            self.btt, self.finals_mask, self.windows,
             backend=self.backend,
         )
         self.total_rounds += int(rounds)
-        return self._decode_pairs(np.asarray(invalidated))
+        self.steps += 1
+        inv = np.asarray(invalidated)
+        return [
+            self._decode_pairs(inv[qi], bool(self._simple[qi]))
+            for qi in range(self.n_queries)
+        ]
 
     def expire(self, tau: Optional[float] = None) -> None:
         """Slide-boundary maintenance: adjacency masking + slot recycling."""
-        t = jnp.asarray(tau if tau is not None else float(self.arrays.now), jnp.float32)
-        self.arrays, live = _expire(self.arrays, t, jnp.asarray(self.window, jnp.float32))
+        t = jnp.asarray(
+            tau if tau is not None else float(self.batched_arrays.now), jnp.float32
+        )
+        self.batched_arrays, live = _expire(
+            self.batched_arrays, t, jnp.asarray(self.max_window, jnp.float32)
+        )
         self._recycle(np.asarray(live))
 
     def compact(self) -> None:
@@ -309,7 +414,9 @@ class DenseRPQEngine:
         ]
         if not dead_slots:
             return
-        self.arrays = _clear_slots(self.arrays, jnp.asarray(dead_slots, jnp.int32))
+        self.batched_arrays = _clear_slots(
+            self.batched_arrays, jnp.asarray(dead_slots, jnp.int32)
+        )
         for s in dead_slots:
             vtx = self.vertex_of[s]
             self.vertex_of[s] = None
@@ -318,10 +425,9 @@ class DenseRPQEngine:
 
     # -- result decoding ------------------------------------------------------
 
-    def _decode_pairs(self, mat: np.ndarray) -> Set[Pair]:
+    def _decode_pairs(self, mat: np.ndarray, simple: bool) -> Set[Pair]:
         pairs: Set[Pair] = set()
         xs, vs = np.nonzero(mat)
-        simple = self.path_semantics == "simple"
         for x, v in zip(xs.tolist(), vs.tolist()):
             if simple and x == v:
                 continue  # a simple path never revisits its source
@@ -331,30 +437,173 @@ class DenseRPQEngine:
                 pairs.add((xv, vv))
         return pairs
 
-    def _decode_new(self, new: jnp.ndarray) -> Set[Pair]:
-        """Returns only pairs NEW to the monotone result set: after slot
-        recycling the emitted matrix forgets old occupants, so the device
-        diff may resurface already-reported pairs — the python-side set is
+    def _decode_new(self, new: jnp.ndarray) -> List[Set[Pair]]:
+        """Per-query pairs NEW to the monotone result set: after slot
+        recycling the emitted matrices forget old occupants, so the device
+        diff may resurface already-reported pairs — the python-side sets are
         the source of truth for implicit-window monotonicity."""
-        pairs = self._decode_pairs(np.asarray(new))
-        t = float(self.arrays.now)
-        fresh: Set[Pair] = set()
-        for p in pairs:
-            if p not in self.results:
-                self.results.add(p)
-                self.result_log.append((t, p))
-                fresh.add(p)
+        arr = np.asarray(new)  # (Q, N, N) bool
+        t = float(self.batched_arrays.now)
+        fresh: List[Set[Pair]] = [set() for _ in range(self.n_queries)]
+        qs, xs, vs = np.nonzero(arr)
+        for q, x, v in zip(qs.tolist(), xs.tolist(), vs.tolist()):
+            if self._simple[q] and x == v:
+                continue
+            xv = self.vertex_of[x]
+            vv = self.vertex_of[v]
+            if xv is None or vv is None:
+                continue
+            p = (xv, vv)
+            if p not in self.per_query_results[q]:
+                self.per_query_results[q].add(p)
+                self.per_query_log[q].append((t, p))
+                fresh[q].add(p)
         return fresh
 
+    def current_results(self, qi: int = 0) -> Set[Pair]:
+        """Snapshot view (explicit-window semantics) for query `qi`."""
+        low = self.batched_arrays.now - self.windows
+        valid = batched_valid_pairs(self.batched_arrays.dist, self.finals_mask, low)
+        return self._decode_pairs(np.asarray(valid[qi]), bool(self._simple[qi]))
+
+    def index_size(self, qi: Optional[int] = None) -> Tuple[int, int]:
+        """(active roots, populated (x,v,s) entries) — Fig. 5 analogue.
+        `qi=None` aggregates over the whole group."""
+        low = np.asarray(self.batched_arrays.now - self.windows)  # (Q,)
+        pop = np.asarray(self.batched_arrays.dist) > low[:, None, None, None]
+        if qi is not None:
+            pop = pop[qi : qi + 1]
+        roots = int(pop.any(axis=(2, 3)).sum())
+        return roots, int(pop.sum())
+
+    # -- state persistence (checkpoint/ckpt.py rides this) --------------------
+
+    def state_arrays(self) -> Dict[str, jnp.ndarray]:
+        """The device state as one pytree (checkpointable as-is)."""
+        a = self.batched_arrays
+        return {"adj": a.adj, "dist": a.dist, "emitted": a.emitted, "now": a.now}
+
+    def load_state_arrays(self, state: Dict[str, jnp.ndarray]) -> None:
+        self.batched_arrays = BatchedEngineArrays(
+            state["adj"], state["dist"], state["emitted"], state["now"]
+        )
+
+    def interner_state(self) -> Dict[str, int]:
+        """Vertex interner as JSON-able metadata (str-keyed, like the
+        checkpoint manifest)."""
+        return {str(k): v for k, v in self.slot_of.items()}
+
+    def load_interner(self, slot_of: Dict[str, int]) -> None:
+        self.slot_of = {_maybe_int(k): v for k, v in slot_of.items()}
+        self.vertex_of = [None] * self.n_slots
+        for vtx, slot in self.slot_of.items():
+            self.vertex_of[slot] = vtx
+        used = set(self.slot_of.values())
+        self.free = [s for s in range(self.n_slots - 1, -1, -1) if s not in used]
+
+    def results_state(self) -> Dict[str, object]:
+        return {
+            "results": {
+                spec.name: sorted(map(list, self.per_query_results[qi]))
+                for qi, spec in enumerate(self.query_specs)
+            },
+            "conflicted": {
+                spec.name: self.per_query_conflicted[qi]
+                for qi, spec in enumerate(self.query_specs)
+            },
+        }
+
+    def load_results_state(self, state: Dict[str, object]) -> None:
+        for qi, spec in enumerate(self.query_specs):
+            self.per_query_results[qi] = {
+                tuple(p) for p in state["results"][spec.name]
+            }
+            self.per_query_log[qi] = []
+            self.per_query_conflicted[qi] = bool(state["conflicted"][spec.name])
+
+
+def _maybe_int(s: str):
+    try:
+        return int(s)
+    except ValueError:
+        return s
+
+
+class DenseRPQEngine(BatchedDenseRPQEngine):
+    """Streaming RPQ engine over fixed-capacity dense state — the thin Q=1
+    view over the batched core (one registered query).
+
+    path_semantics: "arbitrary" (RAPQ) or "simple" (RSPQ). Simple-path mode
+    uses the Mendelzon–Wood tractable class: if the automaton has the suffix
+    containment property the dense answer set is provably identical under
+    both semantics (DESIGN.md §2); otherwise runtime conflict detection
+    flags windows where the dense answer may over-report, and
+    ``conflicted`` exposes it (the service layer falls back to the
+    reference RSPQ for exactness — the paper's exponential case).
+    """
+
+    def __init__(
+        self,
+        dfa: DFA,
+        window: float,
+        n_slots: int = 128,
+        batch_size: int = 32,
+        backend: str = "jnp",
+        path_semantics: str = "arbitrary",
+    ):
+        super().__init__(
+            [RegisteredQuery("q0", dfa, float(window), path_semantics)],
+            n_slots=n_slots, batch_size=batch_size, backend=backend,
+        )
+        self.dfa = dfa
+        self.window = float(window)
+        self.path_semantics = path_semantics
+        self.tt = TransitionTable.from_dfa(dfa)  # legacy consumers (dryrun)
+
+    # -- Q=1 adapters --------------------------------------------------------
+
+    @property
+    def arrays(self) -> EngineArrays:
+        b = self.batched_arrays
+        return EngineArrays(b.adj, b.dist[0], b.emitted[0], b.now)
+
+    @arrays.setter
+    def arrays(self, a: EngineArrays) -> None:
+        self.batched_arrays = BatchedEngineArrays(
+            a.adj, a.dist[None], a.emitted[None], a.now
+        )
+
+    @property
+    def results(self) -> Set[Pair]:
+        return self.per_query_results[0]
+
+    @results.setter
+    def results(self, value: Set[Pair]) -> None:
+        self.per_query_results[0] = set(value)
+
+    @property
+    def result_log(self) -> List[Tuple[float, Pair]]:
+        return self.per_query_log[0]
+
+    @property
+    def conflicted(self) -> bool:
+        return self.per_query_conflicted[0]
+
+    @conflicted.setter
+    def conflicted(self, value: bool) -> None:
+        self.per_query_conflicted[0] = bool(value)
+
+    def insert(self, u: object, v: object, label: str, ts: float) -> Set[Pair]:
+        return super().insert_batch([(u, v, label, ts)])[0]
+
+    def insert_batch(self, edges) -> Set[Pair]:
+        return super().insert_batch(edges)[0]
+
+    def delete(self, u: object, v: object, label: str, ts: float) -> Set[Pair]:
+        return super().delete(u, v, label, ts)[0]
+
     def current_results(self) -> Set[Pair]:
-        """Snapshot view (explicit-window semantics): currently valid pairs."""
-        low = self.arrays.now - self.window
-        valid = valid_pairs(self.arrays.dist, self.finals_mask, low)
-        return self._decode_pairs(np.asarray(valid))
+        return super().current_results(0)
 
     def index_size(self) -> Tuple[int, int]:
-        """(active roots, populated (x,v,s) entries) — Fig. 5 analogue."""
-        low = self.arrays.now - self.window
-        pop = np.asarray(self.arrays.dist > low)
-        roots = int((pop.any(axis=(1, 2))).sum())
-        return roots, int(pop.sum())
+        return super().index_size(0)

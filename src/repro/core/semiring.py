@@ -22,7 +22,7 @@ Three interchangeable contraction back-ends:
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -150,3 +150,148 @@ def valid_pairs(
     acc = jnp.where(finals[None, None, :], dist, NEG_INF)
     best = jnp.max(acc, axis=2)
     return best > low
+
+
+# ---------------------------------------------------------------------------
+# Multi-query batched formulation
+#
+# All registered queries share one (L, N, N) adjacency over the UNION label
+# alphabet; per-query closure state is stacked into dist (Q, N, N, K) with K
+# padded to max_q k_q (padding states are inert: no transition ever scatters
+# into them and finals masks are padded False). The per-query DFA transition
+# tables are flattened into ONE global transition list — `qidx` names the
+# owning query, `lab` indexes the shared alphabet — so a relaxation round is
+# a single gather -> batched max-min contraction -> segment-max scatter, and
+# one jitted step evaluates every query.
+# ---------------------------------------------------------------------------
+
+
+class BatchedTransitionTable(NamedTuple):
+    """Flattened transition arrays of Q stacked DFAs (built at registration).
+
+    J = total transitions across all queries, rounded UP to a bucket
+    multiple so different query mixes reuse the same compiled step (J and K
+    are trace-time shapes; without bucketing every registration set would
+    recompile the closure). Padding rows are inert (`active` False -> their
+    contribution is -inf, the semiring zero); padded K states are inert
+    because no transition scatters into them and finals masks pad False.
+    Queries with an empty language contribute no rows.
+    """
+
+    qidx: jnp.ndarray        # (J,) int32 owning query
+    src: jnp.ndarray         # (J,) int32 source DFA state (< k_q)
+    lab: jnp.ndarray         # (J,) int32 label index in the SHARED alphabet
+    dst: jnp.ndarray         # (J,) int32 destination DFA state
+    start_mask: jnp.ndarray  # (J,) bool: src == s0 of the owning query
+    active: jnp.ndarray      # (J,) bool: False for shape-padding rows
+    n_queries: int
+    k: int                   # K_max (padded per-query state count)
+    n_labels: int            # |union alphabet|
+
+    @staticmethod
+    def from_dfas(
+        dfas: Sequence, labels: Sequence[str],
+        j_bucket: int = 8, k_bucket: int = 2,
+    ) -> "BatchedTransitionTable":
+        """Stack per-query DFAs over a shared (sorted) label alphabet."""
+        labels = tuple(labels)
+        lab_index = {lab: i for i, lab in enumerate(labels)}
+        k_max = max([d.k for d in dfas] + [1])
+        k_max += (-k_max) % k_bucket
+        qidx, src, lab, dst, start = [], [], [], [], []
+        for q, dfa in enumerate(dfas):
+            for (s, li, t) in dfa.transitions():
+                qidx.append(q)
+                src.append(s)
+                lab.append(lab_index[dfa.labels[li]])
+                dst.append(t)
+                start.append(s == dfa.start)
+        n_active = len(qidx)
+        n_rows = max(n_active + (-n_active) % j_bucket, j_bucket)
+        pad = n_rows - n_active
+        qidx += [0] * pad
+        src += [0] * pad
+        lab += [0] * pad
+        dst += [0] * pad
+        start += [False] * pad
+        return BatchedTransitionTable(
+            qidx=jnp.asarray(np.array(qidx, np.int32)),
+            src=jnp.asarray(np.array(src, np.int32)),
+            lab=jnp.asarray(np.array(lab, np.int32)),
+            dst=jnp.asarray(np.array(dst, np.int32)),
+            start_mask=jnp.asarray(np.array(start, bool)),
+            active=jnp.asarray(np.array([True] * n_active + [False] * pad)),
+            n_queries=len(dfas),
+            k=k_max,
+            n_labels=max(len(labels), 1),
+        )
+
+
+def _contract_batched(d: jnp.ndarray, a: jnp.ndarray, backend: str) -> jnp.ndarray:
+    """Batched maxmin over u: d (J,N,N)[x,u] x a (J,N,N)[u,v] -> (J,N,N)."""
+    if backend == "pallas":
+        interp = jax.default_backend() != "tpu"
+        return jax.vmap(lambda x, y: maxmin_matmul(x, y, interpret=interp))(d, a)
+    return jax.vmap(maxmin_matmul_ref)(d, a)
+
+
+def batched_relax_round(
+    dist: jnp.ndarray,          # (Q, N, N, K) f32
+    adj: jnp.ndarray,           # (L, N, N) f32 shared adjacency
+    btt: BatchedTransitionTable,
+    backend: str = "jnp",
+) -> jnp.ndarray:
+    """One relaxation round over ALL queries' transitions at once."""
+    q, n, _, k = dist.shape
+    d_s = dist[btt.qidx, :, :, btt.src]               # (J, N, N) [x, u]
+    a_l = adj[btt.lab]                                # (J, N, N) [u, v]
+    contrib = _contract_batched(d_s, a_l, backend)    # (J, N, N) [x, v]
+    # base term: seed (x, x, s0) = +inf => min(+inf, adj[l, x, v]) = adj
+    contrib = jnp.where(btt.start_mask[:, None, None],
+                        jnp.maximum(contrib, a_l), contrib)
+    # shape-padding rows contribute the semiring zero
+    contrib = jnp.where(btt.active[:, None, None], contrib, NEG_INF)
+    # scatter-max into (query, dst-state) slices; empty segments fill -inf
+    seg = btt.qidx * k + btt.dst                      # (J,)
+    scat = jax.ops.segment_max(contrib, seg, num_segments=q * k)
+    upd = jnp.transpose(scat.reshape(q, k, n, n), (0, 2, 3, 1))
+    return jnp.maximum(dist, upd)
+
+
+def batched_closure(
+    dist: jnp.ndarray,
+    adj: jnp.ndarray,
+    btt: BatchedTransitionTable,
+    backend: str = "jnp",
+    max_rounds: int = 0,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Iterate batched relaxation until NO query changes. Returns
+    (dist, rounds_used). Rounds = max over queries of the per-query round
+    count; converged queries relax as no-ops until the slowest finishes."""
+    _q, n, _, k = dist.shape
+    bound = max_rounds if max_rounds > 0 else n * k + 1
+
+    def cond(carry):
+        _d, changed, it = carry
+        return jnp.logical_and(changed, it < bound)
+
+    def body(carry):
+        d, _changed, it = carry
+        nd = batched_relax_round(d, adj, btt, backend)
+        return nd, jnp.any(nd > d), it + 1
+
+    dist0 = batched_relax_round(dist, adj, btt, backend)
+    dist_f, _, rounds = jax.lax.while_loop(
+        cond, body, (dist0, jnp.asarray(True), jnp.asarray(1, jnp.int32))
+    )
+    return dist_f, rounds
+
+
+def batched_valid_pairs(
+    dist: jnp.ndarray, finals: jnp.ndarray, low: jnp.ndarray
+) -> jnp.ndarray:
+    """(Q, N, N) bool validity per query: finals is (Q, K), low is (Q,)
+    (per-query window thresholds applied at read time)."""
+    acc = jnp.where(finals[:, None, None, :], dist, NEG_INF)
+    best = jnp.max(acc, axis=3)
+    return best > low[:, None, None]

@@ -14,10 +14,14 @@ from jax import lax
 
 def maxmin_matmul_ref(a: jnp.ndarray, b: jnp.ndarray, *, chunk: int = 128) -> jnp.ndarray:
     """Reference (max, min) matmul; chunked over k to bound the (m, k, n)
-    broadcast intermediate. Shapes: a (m, k), b (k, n) -> (m, n)."""
+    broadcast intermediate. Shapes: a (m, k), b (k, n) -> (m, n).
+
+    The chunk adapts downward for small k (32-aligned): padding a k=24
+    engine to a 128-wide chunk would be >5x wasted inner-dim work."""
     m, k = a.shape
     k2, n = b.shape
     assert k == k2, (a.shape, b.shape)
+    chunk = min(chunk, k + (-k) % 32)
     neg = jnp.asarray(-jnp.inf, a.dtype)
     out = jnp.full((m, n), neg, dtype=a.dtype)
     # pad k to a multiple of chunk with -inf columns (identity for max-min)

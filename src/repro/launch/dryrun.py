@@ -34,7 +34,8 @@ from ..distributed.sharding import (
     make_constrain,
     params_shardings,
 )
-from ..launch.mesh import make_production_mesh
+from ..launch.mesh import make_production_mesh, mesh_context
+from .dryrun_rpq import _cost_dict
 from ..launch.specs import abstract_opt_state, abstract_params, decode_specs, token_specs
 from ..launch.train import make_train_step
 from ..models.transformer import Model
@@ -140,7 +141,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
             in_shardings=(p_shard, o_shard, b_shard),
             donate_argnums=(0, 1),
         )
-        with jax.set_mesh(mesh):
+        with mesh_context(mesh):
             lowered = jitted.lower(p_abs, o_abs, batch)
         state_bytes = (_tree_bytes(p_abs) + _tree_bytes(o_abs)) / chips
     elif shape.kind == "prefill":
@@ -151,7 +152,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
             return model.prefill(params, batch["tokens"], batch.get("prefix_embeds"))
 
         jitted = jax.jit(prefill_step, in_shardings=(p_shard, b_shard))
-        with jax.set_mesh(mesh):
+        with mesh_context(mesh):
             lowered = jitted.lower(p_abs, batch)
         state_bytes = _tree_bytes(p_abs) / chips
     else:  # decode
@@ -167,7 +168,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
             in_shardings=(p_shard, t_shard, c_shard),
             donate_argnums=(2,),
         )
-        with jax.set_mesh(mesh):
+        with mesh_context(mesh):
             lowered = jitted.lower(p_abs, token, caches)
         state_bytes = (_tree_bytes(p_abs) + _tree_bytes(caches)) / chips
 
@@ -287,14 +288,14 @@ def probe_period_costs(arch: str, shape_name: str, multi_pod: bool,
                                     n_layers=npd * cfg.period,
                                     serving_sharding=serving_sharding)
         compiled = lowered.compile()
-        ca = compiled.cost_analysis() or {}
+        ca = _cost_dict(compiled.cost_analysis())
         colls = scrape_collectives(compiled.as_text())
         out[npd] = {
             "flops": ca.get("flops", 0.0),
             "bytes": ca.get("bytes accessed", 0.0),
             "wire": sum(c["wire_bytes"] for c in colls),
             "by_kind": _sum_by_kind(colls),
-            "global_flops": lowered.cost_analysis().get("flops", 0.0),
+            "global_flops": _cost_dict(lowered.cost_analysis()).get("flops", 0.0),
         }
     n_periods = cfg.n_layers // cfg.period
     per = {k: out[2][k] - out[1][k] for k in ("flops", "bytes", "wire", "global_flops")}
@@ -339,13 +340,13 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     t_lower = time.monotonic() - t0
     if serving_sharding:
         meta["arch"] = tag
-    global_flops = lowered.cost_analysis().get("flops", 0.0)
+    global_flops = _cost_dict(lowered.cost_analysis()).get("flops", 0.0)
 
     t0 = time.monotonic()
     compiled = lowered.compile()
     t_compile = time.monotonic() - t0
 
-    ca = compiled.cost_analysis() or {}
+    ca = _cost_dict(compiled.cost_analysis())
     ma = compiled.memory_analysis()
     hlo = compiled.as_text()
     colls = scrape_collectives(hlo)

@@ -26,7 +26,8 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..core.automaton import compile_query
-from ..core.semiring import NEG_INF, TransitionTable
+from ..core.semiring import (NEG_INF, BatchedTransitionTable, TransitionTable,
+                             batched_relax_round)
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                            "benchmarks", "results", "dryrun")
@@ -40,6 +41,20 @@ RPQ_CELLS = [
 
 N_LEVELS = 8  # |W|/beta buckets for the MXU mode (paper: 1-month/1-day ~ 30;
               # 8 keeps the napkin conservative)
+
+# multi-query serving cell (mode="batched"): the Table-2 workload stacked
+# into ONE (Q, N, N, K) relaxation — the BatchedDenseRPQEngine's round on
+# the production mesh
+BATCHED_QUERIES = ["a*", "a . b*", "a . b* . c*", "(a | b | c)*", "a . b* . c",
+                   "a* . b*", "a . b . c*", "a? . b*"]
+
+
+def _cost_dict(ca):
+    """jax version compat: cost_analysis() returns a dict (>=0.5) or a
+    one-element list of dicts (0.4.x)."""
+    if isinstance(ca, (list, tuple)):
+        return ca[0] if ca else {}
+    return ca or {}
 
 
 def relax_round_mxu_bucket(dist_lvl, adj_lvl, tt: TransitionTable, n_levels: int):
@@ -176,7 +191,7 @@ def run_rpq_cell(name: str, n_slots: int, query: str, v_chunk: int,
                  multi_pod: bool, force: bool = False,
                  mode: str = "baseline") -> Dict[str, Any]:
     from .dryrun import scrape_collectives  # shares the HLO scraper
-    from .mesh import make_production_mesh
+    from .mesh import make_production_mesh, mesh_context
 
     os.makedirs(RESULTS_DIR, exist_ok=True)
     mesh_tag = "multipod" if multi_pod else "pod"
@@ -192,13 +207,40 @@ def run_rpq_cell(name: str, n_slots: int, query: str, v_chunk: int,
     xa = ("pod", "data") if multi_pod else "data"
 
     dtype = jnp.int32 if mode == "mxu" else jnp.float32
-    dist_spec = jax.ShapeDtypeStruct((n_slots, n_slots, dfa.k), dtype)
-    adj_spec = jax.ShapeDtypeStruct((dfa.n_labels, n_slots, n_slots), dtype)
-    dist_sh = NamedSharding(mesh, P(xa, "model", None))
-    if mode == "ring":
+    # analytic metadata (semiring ops, k, alphabet, query tag) must describe
+    # the program actually lowered — the batched mode stacks BATCHED_QUERIES,
+    # not the cell's single query
+    query_tag, meta_k, meta_labels = query, dfa.k, dfa.n_labels
+    n_transitions = len(dfa.transitions())
+    if mode == "batched":
+        # Q stacked queries, shared adjacency: dist (Q, x, u, K) with x over
+        # data and u over model (same frontier layout per query; the Q axis
+        # is replicated — queries are data-parallel over their own closure)
+        dfas = [compile_query(q) for q in BATCHED_QUERIES]
+        labels = sorted(set().union(*[set(d.labels) for d in dfas]))
+        btt = BatchedTransitionTable.from_dfas(dfas, labels)
+        query_tag = f"batched[{len(dfas)}]: " + " ; ".join(BATCHED_QUERIES)
+        meta_k, meta_labels = btt.k, len(labels)
+        n_transitions = sum(len(d.transitions()) for d in dfas)
+        dist_spec = jax.ShapeDtypeStruct(
+            (len(dfas), n_slots, n_slots, btt.k), dtype)
+        adj_spec = jax.ShapeDtypeStruct((len(labels), n_slots, n_slots), dtype)
+        dist_sh = NamedSharding(mesh, P(None, xa, "model", None))
+        adj_sh = NamedSharding(mesh, P(None, None, "model"))
+
+        def round_fn(dist, adj):
+            out = batched_relax_round(dist, adj, btt, backend="jnp")
+            return jax.lax.with_sharding_constraint(out, dist_sh)
+    elif mode == "ring":
+        dist_spec = jax.ShapeDtypeStruct((n_slots, n_slots, dfa.k), dtype)
+        adj_spec = jax.ShapeDtypeStruct((dfa.n_labels, n_slots, n_slots), dtype)
+        dist_sh = NamedSharding(mesh, P(xa, "model", None))
         adj_sh = NamedSharding(mesh, P(None, "model", None))  # u co-sharded
         round_fn = make_ring_round(mesh, tt, n_slots, multi_pod)
-    else:
+    else:  # baseline | mxu
+        dist_spec = jax.ShapeDtypeStruct((n_slots, n_slots, dfa.k), dtype)
+        adj_spec = jax.ShapeDtypeStruct((dfa.n_labels, n_slots, n_slots), dtype)
+        dist_sh = NamedSharding(mesh, P(xa, "model", None))
         adj_sh = NamedSharding(mesh, P(None, None, "model"))
 
         def round_fn(dist, adj):
@@ -209,13 +251,13 @@ def run_rpq_cell(name: str, n_slots: int, query: str, v_chunk: int,
             return jax.lax.with_sharding_constraint(out, dist_sh)
 
     t0 = time.monotonic()
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         lowered = jax.jit(round_fn, in_shardings=(dist_sh, adj_sh),
                           out_shardings=dist_sh).lower(dist_spec, adj_spec)
-    global_flops = lowered.cost_analysis().get("flops", 0.0)
+    global_flops = _cost_dict(lowered.cost_analysis()).get("flops", 0.0)
     compiled = lowered.compile()
     t_total = time.monotonic() - t0
-    ca = compiled.cost_analysis() or {}
+    ca = _cost_dict(compiled.cost_analysis())
     ma = compiled.memory_analysis()
     colls = scrape_collectives(compiled.as_text())
     state_bytes = (np.prod(dist_spec.shape) * 4 + np.prod(adj_spec.shape) * 4) / chips
@@ -228,7 +270,7 @@ def run_rpq_cell(name: str, n_slots: int, query: str, v_chunk: int,
         "engine_mode": mode,
         "mesh": "2x16x16" if multi_pod else "16x16",
         "chips": chips, "kind": "rpq",
-        "query": query, "k": dfa.k, "n_labels": dfa.n_labels,
+        "query": query_tag, "k": meta_k, "n_labels": meta_labels,
         "n_slots": n_slots,
         "ok": True,
         "compile_s": round(t_total, 2),
@@ -253,7 +295,7 @@ def run_rpq_cell(name: str, n_slots: int, query: str, v_chunk: int,
         * ((mesh.shape["model"] - 1) if mode == "ring" else 1),
         "collectives_by_kind_extrap": by_kind,
         # semiring ops (max+min per MAC-equivalent) for the analytic term:
-        "semiring_ops": 2.0 * len(dfa.transitions()) * n_slots**3,
+        "semiring_ops": 2.0 * n_transitions * n_slots**3,
         "n_levels": N_LEVELS if mode == "mxu" else 0,
     }
     with open(path, "w") as f:
@@ -265,7 +307,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--cell", default="")
     ap.add_argument("--mesh", default="both", choices=["pod", "multipod", "both"])
-    ap.add_argument("--modes", default="baseline,mxu,ring")
+    ap.add_argument("--modes", default="baseline,mxu,ring,batched")
     ap.add_argument("--force", action="store_true")
     args = ap.parse_args()
     meshes = {"pod": [False], "multipod": [True], "both": [False, True]}[args.mesh]

@@ -23,3 +23,12 @@ def make_host_mesh(model_axis: int = 2):
     n = len(jax.devices())
     data = max(n // model_axis, 1)
     return jax.make_mesh((data, model_axis), ("data", "model"))
+
+
+def mesh_context(mesh):
+    """`jax.set_mesh(mesh)` where it exists (jax >= 0.5); the legacy
+    `with mesh:` context otherwise. All in-repo mesh-scoped blocks go
+    through here so one jax upgrade path touches one line."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh

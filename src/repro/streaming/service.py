@@ -5,9 +5,21 @@ ordered sgt stream with eager evaluation and lazy expiration (slide
 interval β), and emit an append-only result stream per query — exactly the
 paper's execution model (§2, §5.1).
 
-Fault tolerance: the service checkpoints engine state (dense engines are
-pytrees + a python interner) via checkpoint/ckpt.py and can re-attach after
-a crash (tested in tests/test_fault.py).
+Multi-query execution: every query registered with ``engine="dense"`` is
+folded into ONE :class:`~repro.core.engine.BatchedDenseRPQEngine` sharing
+the labeled adjacency and the vertex interner, so each arriving sgt costs a
+single jitted dispatch for the whole dense workload instead of one per
+query (benchmarks/fig12_multi_query.py measures the win). Reference
+engines (the paper-faithful pointer oracles) stay on the per-query path.
+The dense group is materialized lazily at first ingest; registering more
+dense queries after ingestion has begun raises (re-padding live device
+state is not supported — snapshot, re-register, restore instead).
+
+Fault tolerance: the service checkpoints engine state via
+checkpoint/ckpt.py — the batched dense group as one pytree of device
+arrays + interner/result metadata in the manifest, reference engines as
+pickled leaves — and can re-attach after a crash (tests/test_fault.py
+drives crash → restore → identical result stream).
 """
 from __future__ import annotations
 
@@ -16,9 +28,8 @@ import time
 from typing import Dict, List, Optional, Set, Tuple
 
 from ..core.automaton import compile_query
-from ..core.engine import DenseRPQEngine
+from ..core.engine import BatchedDenseRPQEngine, RegisteredQuery
 from ..core.reference import RAPQ, RSPQ
-from .stream import SGT, Stream
 
 
 @dataclasses.dataclass
@@ -35,9 +46,24 @@ class PersistentQueryService:
     def __init__(self, window: float, slide: float):
         self.window = float(window)
         self.slide = float(slide)
-        self.queries: Dict[str, object] = {}
+        # reference (pointer) engines, one per query
+        self._ref_engines: Dict[str, object] = {}
+        # dense queries: name -> registration kwargs; grouped lazily
+        self._dense_specs: Dict[str, Dict] = {}
+        self._group: Optional[BatchedDenseRPQEngine] = None
+        self._group_order: List[str] = []
+        self._ingest_started = False
         self.stats: Dict[str, QueryStats] = {}
         self._next_expiry = slide
+
+    @property
+    def queries(self) -> Dict[str, object]:
+        """name -> engine handling it (the batched group for dense queries)."""
+        self._ensure_group()
+        out: Dict[str, object] = dict(self._ref_engines)
+        for name in self._dense_specs:
+            out[name] = self._group
+        return out
 
     def register(
         self,
@@ -51,27 +77,74 @@ class PersistentQueryService:
     ) -> None:
         dfa = compile_query(expr)
         if engine == "dense":
-            eng = DenseRPQEngine(dfa, self.window, n_slots=n_slots,
-                                 batch_size=batch_size, backend=backend,
-                                 path_semantics=path_semantics)
+            if self._ingest_started:
+                raise RuntimeError(
+                    "cannot add dense queries after ingestion started: the "
+                    "batched group state is live; snapshot, re-register, restore"
+                )
+            self._dense_specs[name] = dict(
+                dfa=dfa, path_semantics=path_semantics, n_slots=n_slots,
+                batch_size=batch_size, backend=backend,
+            )
+            self._group = None  # rebuilt (empty) at next ingest/snapshot
         elif path_semantics == "simple":
-            eng = RSPQ(dfa, self.window)
+            self._ref_engines[name] = RSPQ(dfa, self.window)
         else:
-            eng = RAPQ(dfa, self.window)
-        self.queries[name] = eng
+            self._ref_engines[name] = RAPQ(dfa, self.window)
         self.stats[name] = QueryStats(latencies_us=[])
 
-    def ingest(self, stream: Stream, record_latency: bool = False) -> Dict[str, Set[Tuple]]:
+    def _ensure_group(self) -> None:
+        if self._group is not None or not self._dense_specs:
+            return
+        backends = {s["backend"] for s in self._dense_specs.values()}
+        if len(backends) > 1:
+            raise ValueError(f"dense queries must share one backend, got {backends}")
+        specs = [
+            RegisteredQuery(name, s["dfa"], self.window, s["path_semantics"])
+            for name, s in self._dense_specs.items()
+        ]
+        self._group = BatchedDenseRPQEngine(
+            specs,
+            n_slots=max(s["n_slots"] for s in self._dense_specs.values()),
+            # exactness dominates: the smallest requested micro-batch bounds
+            # the group's batch-boundary skew for every member query
+            batch_size=min(s["batch_size"] for s in self._dense_specs.values()),
+            backend=backends.pop(),
+        )
+        self._group_order = list(self._dense_specs)
+
+    def ingest(self, stream, record_latency: bool = False) -> Dict[str, Set[Tuple]]:
         """Feed the whole stream; returns new result pairs per query."""
-        new_results: Dict[str, Set[Tuple]] = {name: set() for name in self.queries}
+        self._ensure_group()
+        self._ingest_started = True
+        new_results: Dict[str, Set[Tuple]] = {name: set() for name in self.stats}
         for sgt in stream:
             # lazy expiration at slide boundaries (eager evaluation)
             if sgt.ts >= self._next_expiry:
-                for eng in self.queries.values():
+                if self._group is not None:
+                    self._group.expire(sgt.ts)
+                for eng in self._ref_engines.values():
                     eng.expire(sgt.ts)
                 while self._next_expiry <= sgt.ts:
                     self._next_expiry += self.slide
-            for name, eng in self.queries.items():
+            if self._group is not None:
+                t0 = time.perf_counter_ns() if record_latency else 0
+                if sgt.op == "+":
+                    fresh = self._group.insert(sgt.src, sgt.dst, sgt.label, sgt.ts)
+                else:
+                    self._group.delete(sgt.src, sgt.dst, sgt.label, sgt.ts)
+                    fresh = None
+                dt = (time.perf_counter_ns() - t0) / 1e3 if record_latency else 0.0
+                for qi, name in enumerate(self._group_order):
+                    st = self.stats[name]
+                    st.tuples += 1
+                    if fresh is not None:
+                        new_results[name] |= fresh[qi]
+                    if record_latency:
+                        # one dispatch serves the whole group; each member
+                        # observes the group's step latency
+                        st.latencies_us.append(dt)
+            for name, eng in self._ref_engines.items():
                 t0 = time.perf_counter_ns() if record_latency else 0
                 if sgt.op == "+":
                     res = eng.insert(sgt.src, sgt.dst, sgt.label, sgt.ts)
@@ -82,67 +155,73 @@ class PersistentQueryService:
                 st.tuples += 1
                 if record_latency:
                     st.latencies_us.append((time.perf_counter_ns() - t0) / 1e3)
-        for name, eng in self.queries.items():
+        for name in self.stats:
             st = self.stats[name]
-            st.results = len(eng.results)
-            st.conflicted = bool(getattr(eng, "conflicted", False))
+            st.results = len(self.results(name))
+            st.conflicted = self._conflicted(name)
             if st.latencies_us:
                 lat = sorted(st.latencies_us)
                 st.p99_us = lat[min(int(0.99 * len(lat)), len(lat) - 1)]
         return new_results
 
     def results(self, name: str) -> Set[Tuple]:
-        return set(self.queries[name].results)
+        if name in self._dense_specs:
+            self._ensure_group()
+            qi = self._group_order.index(name)
+            return set(self._group.per_query_results[qi])
+        return set(self._ref_engines[name].results)
+
+    def _conflicted(self, name: str) -> bool:
+        if name in self._dense_specs and self._group is not None:
+            return bool(self._group.per_query_conflicted[self._group_order.index(name)])
+        eng = self._ref_engines.get(name)
+        return bool(getattr(eng, "conflicts_detected", 0)) if eng else False
 
     # -- state persistence ----------------------------------------------------
 
     def snapshot(self, directory: str, step: int) -> None:
         from ..checkpoint import ckpt
 
-        state = {}
-        extra = {"step": step, "queries": {}}
-        for name, eng in self.queries.items():
-            if isinstance(eng, DenseRPQEngine):
-                state[name] = {
-                    "adj": eng.arrays.adj, "dist": eng.arrays.dist,
-                    "emitted": eng.arrays.emitted, "now": eng.arrays.now,
-                }
-                extra["queries"][name] = {
-                    "slot_of": {str(k): v for k, v in eng.slot_of.items()},
-                    "results": sorted(map(list, eng.results)),
-                }
+        self._ensure_group()
+        state: Dict[str, object] = {}
+        extra: Dict[str, object] = {
+            "step": step,
+            "next_expiry": self._next_expiry,
+            "reference": sorted(self._ref_engines),
+        }
+        if self._group is not None:
+            state["dense_group"] = self._group.state_arrays()
+            extra["dense"] = {
+                "order": self._group_order,
+                "interner": self._group.interner_state(),
+                **self._group.results_state(),
+            }
+        for name, eng in self._ref_engines.items():
+            state[f"refeng.{name}"] = ckpt.pickle_leaf(eng)
         ckpt.save(directory, step, state, extra=extra)
 
     def restore(self, directory: str) -> int:
         from ..checkpoint import ckpt
-        from ..core.engine import EngineArrays
 
-        like = {}
-        for name, eng in self.queries.items():
-            if isinstance(eng, DenseRPQEngine):
-                like[name] = {
-                    "adj": eng.arrays.adj, "dist": eng.arrays.dist,
-                    "emitted": eng.arrays.emitted, "now": eng.arrays.now,
-                }
+        self._ensure_group()
+        like: Dict[str, object] = {}
+        if self._group is not None:
+            like["dense_group"] = self._group.state_arrays()
+        for name in self._ref_engines:
+            like[f"refeng.{name}"] = ckpt.pickle_like()
         state, extra = ckpt.restore(directory, like=like)
-        for name, eng in self.queries.items():
-            if isinstance(eng, DenseRPQEngine):
-                s = state[name]
-                eng.arrays = EngineArrays(s["adj"], s["dist"], s["emitted"], s["now"])
-                q = extra["queries"][name]
-                # interner: vertex ids serialize as strings in the manifest
-                eng.slot_of = {_maybe_int(k): v for k, v in q["slot_of"].items()}
-                eng.vertex_of = [None] * eng.n_slots
-                for vtx, slot in eng.slot_of.items():
-                    eng.vertex_of[slot] = vtx
-                used = set(eng.slot_of.values())
-                eng.free = [s for s in range(eng.n_slots - 1, -1, -1) if s not in used]
-                eng.results = {tuple(p) for p in q["results"]}
+        if self._group is not None:
+            meta = extra["dense"]
+            if meta["order"] != self._group_order:
+                raise ValueError(
+                    f"checkpointed query set {meta['order']} does not match "
+                    f"registration order {self._group_order}"
+                )
+            self._group.load_state_arrays(state["dense_group"])
+            self._group.load_interner(meta["interner"])
+            self._group.load_results_state(meta)
+        for name in self._ref_engines:
+            self._ref_engines[name] = ckpt.unpickle_leaf(state[f"refeng.{name}"])
+        self._next_expiry = float(extra.get("next_expiry", self.slide))
+        self._ingest_started = True
         return int(extra["step"])
-
-
-def _maybe_int(s: str):
-    try:
-        return int(s)
-    except ValueError:
-        return s

@@ -1,0 +1,62 @@
+"""Import shim so the tier-1 suite collects on a bare interpreter.
+
+``hypothesis`` drives the property tests but is not part of the runtime
+dependency set; on machines without it (fresh containers, CI images before
+``pip install -r requirements-dev.txt``) the suite previously died at
+collection with ImportError. Test modules import ``given``/``settings``/
+``st`` from HERE instead of from ``hypothesis``:
+
+* with hypothesis installed, the real objects are re-exported unchanged;
+* without it, ``given`` wraps the test in a skip with a clear reason (the
+  wrapper deliberately exposes a ``(*args, **kwargs)`` signature so pytest
+  does not mistake the property-test arguments for fixtures), ``settings``
+  becomes a no-op decorator, and ``st.*`` return inert placeholders.
+
+Deterministic (parametrized) tests in the same modules still run either
+way — only the randomized property tests are skipped.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on bare interpreters
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+    _REASON = ("property test skipped: hypothesis not installed "
+               "(pip install -r requirements-dev.txt)")
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            def wrapper(*args, **kwargs):
+                pytest.skip(_REASON)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+
+        return deco
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+
+        return deco
+
+    class _Strategy:
+        """Inert placeholder accepted anywhere a SearchStrategy is."""
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+    class _StrategiesStub:
+        def __getattr__(self, name):
+            return _Strategy()
+
+    st = _StrategiesStub()

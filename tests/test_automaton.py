@@ -3,7 +3,7 @@ import re as pyre
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import regex as rx
 from repro.core.automaton import compile_query, suffix_containment, thompson, determinize, hopcroft_minimize

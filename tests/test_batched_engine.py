@@ -1,0 +1,220 @@
+"""Conformance: the multi-query BatchedDenseRPQEngine vs Q independent
+DenseRPQEngines vs the core/batch.py oracles, on randomized streams with
+inserts, window expiry, and explicit deletions, under both path semantics.
+
+B=1 everywhere: at batch size 1 the batched group is specified to match
+every member query tuple-for-tuple (core/engine.py module docstring); the
+B>1 / Q>1 boundary skew is covered by the superset-safety test below.
+"""
+import random
+
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.core import (
+    RAPQ,
+    batch_rapq,
+    batch_rspq_bruteforce,
+    compile_query,
+    snapshot_from_edges,
+    streaming_oracle,
+)
+from repro.core.engine import BatchedDenseRPQEngine, DenseRPQEngine, RegisteredQuery
+
+QUERIES = ["a*", "a . b*", "(a | b)*", "a . b* . c", "(a . b)+", "a . b . c"]
+LABELS = ["a", "b", "c"]
+
+
+def _random_stream(rng, n_vertices, n_edges, t_max):
+    ts = sorted(rng.sample(range(1, t_max), k=min(n_edges, t_max - 1)))
+    return [
+        (rng.randrange(n_vertices), rng.randrange(n_vertices), rng.choice(LABELS), float(t))
+        for t in ts
+    ]
+
+
+def _make_group(rng, n_queries, window, n_slots=16):
+    """Q random queries (mixed arbitrary/simple; simple only for automata
+    where the dense answer is provably exact, i.e. containment property)."""
+    specs = []
+    for qi in range(n_queries):
+        expr = rng.choice(QUERIES)
+        dfa = compile_query(expr)
+        semantics = "arbitrary"
+        if dfa.has_containment_property and rng.random() < 0.4:
+            semantics = "simple"
+        specs.append(RegisteredQuery(f"q{qi}", dfa, window, semantics))
+    group = BatchedDenseRPQEngine(specs, n_slots=n_slots, batch_size=1)
+    indep = [
+        DenseRPQEngine(s.dfa, window, n_slots=n_slots, batch_size=1,
+                       path_semantics=s.path_semantics)
+        for s in specs
+    ]
+    return specs, group, indep
+
+
+def _check_stream(seed, n_queries=3, with_deletions=False, with_expiry=True):
+    rng = random.Random(seed)
+    window = rng.choice([8.0, 15.0, 40.0])
+    specs, group, indep = _make_group(rng, n_queries, window)
+    stream = _random_stream(rng, n_vertices=6, n_edges=20, t_max=60)
+    live = {}
+    events = []  # (op, u, v, lab, ts)
+    for i, (u, v, lab, ts) in enumerate(stream):
+        if with_deletions and live and rng.random() < 0.25:
+            du, dv, dl = rng.choice(sorted(live))
+            del live[(du, dv, dl)]
+            events.append(("-", du, dv, dl, ts))
+        else:
+            live[(u, v, lab)] = ts
+            events.append(("+", u, v, lab, ts))
+    for i, (op, u, v, lab, ts) in enumerate(events):
+        if op == "+":
+            fresh = group.insert(u, v, lab, ts)
+            for qi, eng in enumerate(indep):
+                f1 = eng.insert(u, v, lab, ts)
+                assert fresh[qi] == f1, (seed, i, qi, fresh[qi] ^ f1)
+        else:
+            inv = group.delete(u, v, lab, ts)
+            for qi, eng in enumerate(indep):
+                i1 = eng.delete(u, v, lab, ts)
+                assert inv[qi] == i1, (seed, i, qi)
+        if with_expiry and i % 7 == 6:
+            group.expire(ts)
+            for eng in indep:
+                eng.expire(ts)
+        # snapshot view agrees with the batch oracle on the live window
+        if i % 9 == 8:
+            for qi, spec in enumerate(specs):
+                cur = group.current_results(qi)
+                assert cur == indep[qi].current_results(), (seed, i, qi)
+    return specs, group, indep, events
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_batched_matches_independent_inserts_only(seed):
+    """Insert-only streams: per-event result streams AND the final monotone
+    sets match Q independent engines and the streaming oracle."""
+    specs, group, indep, events = _check_stream(seed, n_queries=3,
+                                                with_deletions=False)
+    edges = [(u, v, lab, ts) for (_op, u, v, lab, ts) in events]
+    for qi, spec in enumerate(specs):
+        assert group.per_query_results[qi] == indep[qi].results
+        oracle = streaming_oracle(edges, spec.dfa, spec.window,
+                                  simple=spec.path_semantics == "simple")
+        if spec.path_semantics == "simple":
+            # dense simple mode never reports the diagonal
+            oracle = {p for p in oracle if p[0] != p[1]}
+        assert group.per_query_results[qi] == oracle, (seed, qi, spec)
+
+
+@pytest.mark.parametrize("seed", range(6, 9))
+def test_batched_matches_independent_with_deletions(seed):
+    _check_stream(seed, n_queries=3, with_deletions=True)
+
+
+def test_batched_snapshot_matches_batch_oracle():
+    """Explicit-window view vs product-BFS / simple-path DFS on the window
+    content, for an arbitrary- and a simple-semantics query side by side."""
+    rng = random.Random(4)
+    window = 15.0
+    d_arb = compile_query("a . b*")
+    d_smp = compile_query("(a | b)*")
+    assert d_smp.has_containment_property
+    group = BatchedDenseRPQEngine(
+        [RegisteredQuery("arb", d_arb, window, "arbitrary"),
+         RegisteredQuery("smp", d_smp, window, "simple")],
+        n_slots=16, batch_size=1,
+    )
+    stream = _random_stream(rng, n_vertices=7, n_edges=30, t_max=80)
+    for i, (u, v, lab, ts) in enumerate(stream):
+        group.insert(u, v, lab, ts)
+        if i % 6 == 5:
+            snap = snapshot_from_edges(stream[: i + 1], low=ts - window, high=ts)
+            assert group.current_results(0) == batch_rapq(snap, d_arb)
+            expect = {p for p in batch_rspq_bruteforce(snap, d_smp)
+                      if p[0] != p[1]}
+            assert group.current_results(1) == expect
+
+
+def test_batched_b1_matches_reference_per_tuple():
+    """The whole group matches paper-faithful RAPQ tuple-for-tuple at B=1."""
+    rng = random.Random(11)
+    window = 20.0
+    exprs = ["a . b*", "(a | b)*", "a*"]
+    specs = [RegisteredQuery(f"q{i}", compile_query(e), window)
+             for i, e in enumerate(exprs)]
+    group = BatchedDenseRPQEngine(specs, n_slots=16, batch_size=1)
+    refs = [RAPQ(s.dfa, window) for s in specs]
+    for (u, v, lab, ts) in _random_stream(rng, 8, 35, 90):
+        fresh = group.insert(u, v, lab, ts)
+        for qi, ref in enumerate(refs):
+            assert fresh[qi] == ref.insert(u, v, lab, ts), (qi, (u, v, lab, ts))
+    for qi, ref in enumerate(refs):
+        assert group.per_query_results[qi] == ref.results
+
+
+def test_batched_b8_superset_safety():
+    """B > 1 group: no spurious results (subset of the oracle) and full
+    coverage of everything valid at the final batch boundary."""
+    rng = random.Random(9)
+    window = 25.0
+    exprs = ["a . b*", "a*"]
+    specs = [RegisteredQuery(f"q{i}", compile_query(e), window)
+             for i, e in enumerate(exprs)]
+    group = BatchedDenseRPQEngine(specs, n_slots=16, batch_size=8)
+    stream = _random_stream(rng, n_vertices=8, n_edges=40, t_max=100)
+    group.insert_batch(stream)
+    last_ts = stream[-1][3]
+    snap = snapshot_from_edges(stream, low=last_ts - window, high=last_ts)
+    for qi, spec in enumerate(specs):
+        oracle = streaming_oracle(stream, spec.dfa, window)
+        assert group.per_query_results[qi] <= oracle
+        assert batch_rapq(snap, spec.dfa) <= group.per_query_results[qi]
+
+
+def test_batched_shares_dispatches():
+    """The whole point: Q queries, ONE jitted dispatch per micro-batch."""
+    rng = random.Random(1)
+    window = 30.0
+    specs = [RegisteredQuery(f"q{i}", compile_query(e), window)
+             for i, e in enumerate(QUERIES[:4])]
+    group = BatchedDenseRPQEngine(specs, n_slots=16, batch_size=1)
+    indep = [DenseRPQEngine(s.dfa, window, n_slots=16, batch_size=1)
+             for s in specs]
+    stream = _random_stream(rng, 8, 30, 90)
+    for (u, v, lab, ts) in stream:
+        group.insert(u, v, lab, ts)
+        for eng in indep:
+            eng.insert(u, v, lab, ts)
+    assert group.steps == len(stream)
+    assert sum(e.steps for e in indep) > group.steps
+    for qi, eng in enumerate(indep):
+        assert group.per_query_results[qi] == eng.results
+
+
+def test_batched_conflict_flags_are_per_query():
+    """A conflicting simple-path query must not contaminate its neighbors'
+    flags (per-query (Q,K,K) containment masks)."""
+    window = 100.0
+    d_conf = compile_query("(a . b)+")    # no containment property
+    d_safe = compile_query("(a | b)*")    # containment property holds
+    group = BatchedDenseRPQEngine(
+        [RegisteredQuery("conf", d_conf, window, "simple"),
+         RegisteredQuery("safe", d_safe, window, "simple")],
+        n_slots=8, batch_size=1,
+    )
+    for e in [("x", "y", "a", 1.0), ("y", "u", "b", 2.0),
+              ("u", "v", "a", 3.0), ("v", "y", "b", 4.0)]:
+        group.insert(*e)
+    assert group.per_query_conflicted[0]
+    assert not group.per_query_conflicted[1]
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_batched_property_random_streams(seed):
+    """Property form of the conformance check (runs when hypothesis is
+    installed; skipped with a clear reason otherwise)."""
+    _check_stream(seed, n_queries=3,
+                  with_deletions=bool(seed % 2), with_expiry=True)

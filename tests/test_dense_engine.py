@@ -4,7 +4,7 @@ import random
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import RAPQ, batch_rapq, compile_query, snapshot_from_edges, streaming_oracle
 from repro.core.engine import DenseRPQEngine

@@ -4,6 +4,10 @@ virtual devices (XLA_FLAGS must precede jax import)."""
 import subprocess
 import sys
 
+import pytest
+
+pytestmark = pytest.mark.slow  # multi-minute: 8-device subprocess compile
+
 SCRIPT = r'''
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -13,6 +17,7 @@ import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core.automaton import compile_query
 from repro.core.semiring import NEG_INF, TransitionTable, relax_round
+from repro.launch.mesh import mesh_context
 from repro.launch.dryrun_rpq import (N_LEVELS, make_ring_round,
                                      relax_round_mxu_bucket,
                                      relax_round_vchunked)
@@ -32,7 +37,7 @@ ref = np.asarray(relax_round(jnp.asarray(dist), jnp.asarray(adj), tt))
 # 1) v-chunked GSPMD baseline
 dist_sh = NamedSharding(mesh, P("data", "model", None))
 adj_sh = NamedSharding(mesh, P(None, None, "model"))
-with jax.set_mesh(mesh):
+with mesh_context(mesh):
     out = jax.jit(lambda d, a: relax_round_vchunked(d, a, tt, 16),
                   in_shardings=(dist_sh, adj_sh))(jnp.asarray(dist), jnp.asarray(adj))
 np.testing.assert_allclose(np.asarray(out), ref)
@@ -47,7 +52,7 @@ dist_hi = np.maximum(dist, np.nanmax(np.where(np.isfinite(adj), adj, np.nan)))
 ref_hi = np.asarray(relax_round(jnp.asarray(dist_hi), jnp.asarray(adj), tt))
 adj_ring_sh = NamedSharding(mesh, P(None, "model", None))
 ring = make_ring_round(mesh, tt, N, multi_pod=False)
-with jax.set_mesh(mesh):
+with mesh_context(mesh):
     out2 = jax.jit(ring, in_shardings=(dist_sh, adj_ring_sh),
                    out_shardings=dist_sh)(jnp.asarray(dist_hi), jnp.asarray(adj))
 np.testing.assert_allclose(np.asarray(out2), ref_hi)
@@ -60,7 +65,7 @@ dist_lv, adj_lv = lv(dist), lv(adj)
 ref_lv = np.asarray(relax_round(jnp.asarray(dist_lv.astype(np.float32)),
                                 jnp.asarray(np.where(adj_lv > 0, adj_lv, -np.inf).astype(np.float32)), tt))
 ref_lv = np.where(np.isfinite(ref_lv), ref_lv, 0).astype(np.int32)
-with jax.set_mesh(mesh):
+with mesh_context(mesh):
     out3 = jax.jit(lambda d, a: relax_round_mxu_bucket(d, a, tt, T),
                    in_shardings=(dist_sh, adj_sh))(jnp.asarray(dist_lv), jnp.asarray(adj_lv))
 np.testing.assert_array_equal(np.asarray(out3), ref_lv)

@@ -4,7 +4,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels.maxmin.maxmin import maxmin_matmul
 from repro.kernels.maxmin.ref import maxmin_matmul_naive, maxmin_matmul_ref

@@ -6,7 +6,7 @@ expiry, timestamp improvements, re-insertion, and explicit deletions.
 import random
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (
     RAPQ,

@@ -162,7 +162,7 @@ def test_service_end_to_end_with_expiry_and_ckpt():
 
     stream = so_like(n_vertices=24, n_edges=150, seed=3, rate=10.0)
     svc = PersistentQueryService(window=5.0, slide=1.0)
-    svc.register("q1", "a2q . c2a*", engine="dense", n_slots=64)
+    svc.register("q1", "a2q . c2a*", engine="dense", n_slots=48)
     svc.register("q1_ref", "a2q . c2a*", engine="reference")
     svc.ingest(stream)
     assert svc.results("q1") == svc.results("q1_ref")
@@ -172,6 +172,6 @@ def test_service_end_to_end_with_expiry_and_ckpt():
         svc.snapshot(d, step=1)
         # new service instance re-attaches to the persisted state
         svc2 = PersistentQueryService(window=5.0, slide=1.0)
-        svc2.register("q1", "a2q . c2a*", engine="dense", n_slots=64)
+        svc2.register("q1", "a2q . c2a*", engine="dense", n_slots=48)
         svc2.restore(d)
         assert svc2.results("q1") == svc.results("q1")

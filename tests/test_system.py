@@ -14,12 +14,12 @@ from repro.streaming.service import PersistentQueryService
 
 
 def test_service_mixed_workload_and_deletions():
-    stream = with_deletions(so_like(32, 400, seed=11), ratio=0.05, seed=2)
+    stream = with_deletions(so_like(28, 260, seed=11), ratio=0.05, seed=2)
     svc = PersistentQueryService(window=15.0, slide=3.0)
-    svc.register("arb", "a2q . c2a*", engine="dense", n_slots=96)
+    svc.register("arb", "a2q . c2a*", engine="dense", n_slots=48)
     svc.register("arb_ref", "a2q . c2a*", engine="reference")
     svc.register("smp", "(a2q | c2a | c2q)*", engine="dense",
-                 path_semantics="simple", n_slots=96)
+                 path_semantics="simple", n_slots=48)
     svc.ingest(stream)
     assert svc.results("arb") == svc.results("arb_ref")
     # containment-property query: dense simple == dense arbitrary minus diag
@@ -32,7 +32,7 @@ def test_monotone_result_stream():
     """Implicit windows: the emitted result stream never retracts (Def. 9)."""
     stream = so_like(24, 300, seed=5)
     svc = PersistentQueryService(window=10.0, slide=2.0)
-    svc.register("q", "a2q . c2a*", engine="dense", n_slots=64)
+    svc.register("q", "a2q . c2a*", engine="dense", n_slots=48)
     seen = set()
     for batch in stream.batches(25):
         from repro.streaming.stream import Stream
@@ -64,6 +64,7 @@ def test_complexity_scaling_insert_cost():
     assert costs[128] < 16 * costs[32], costs
 
 
+@pytest.mark.slow
 def test_distributed_engine_subprocess():
     """8 fake devices: sharded dense engine == single-device results (the
     example as a test; subprocess so XLA_FLAGS applies before jax init)."""
@@ -76,6 +77,7 @@ def test_distributed_engine_subprocess():
     assert "sharded == single-device" in proc.stdout
 
 
+@pytest.mark.slow
 def test_dryrun_machinery_smoke():
     """Full dry-run protocol on one cell in a subprocess (512 host devices):
     lower + compile + memory/cost/collective scrape must all succeed."""
