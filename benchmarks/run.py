@@ -15,7 +15,8 @@ def main() -> None:
 
     from . import (fig4_throughput, fig5_index_size, fig6_window,
                    fig7_query_size, fig10_deletions, fig11_vs_batch,
-                   fig12_multi_query, roofline, table4_rspq)
+                   fig12_multi_query, fig13_query_churn, roofline,
+                   table4_rspq)
 
     scale = 0.4 if args.fast else 1.0
     modules = [
@@ -27,6 +28,7 @@ def main() -> None:
         ("table4", lambda: table4_rspq.run(n_edges=int(900 * scale))),
         ("fig11", lambda: fig11_vs_batch.run(n_edges=int(400 * scale))),
         ("fig12", lambda: fig12_multi_query.run(n_edges=int(600 * scale))),
+        ("fig13", lambda: fig13_query_churn.run(n_edges=int(450 * scale))),
         ("roofline", roofline.run),
     ]
     print("name,us_per_call,derived")

@@ -144,6 +144,18 @@ def latest_step_dir(directory: str) -> Optional[str]:
     return step_dir
 
 
+def manifest_extra(directory: str) -> Dict[str, Any]:
+    """The `extra` metadata of the latest committed checkpoint WITHOUT
+    restoring any arrays — e.g. to inspect the recorded live query set of a
+    persistent-query service (`extra["dense"]["order"]`) before deciding
+    what to re-register."""
+    step_dir = latest_step_dir(directory)
+    if step_dir is None:
+        raise FileNotFoundError(f"no committed checkpoint under {directory}")
+    with open(os.path.join(step_dir, "manifest.json")) as f:
+        return json.load(f)["extra"]
+
+
 def restore(
     directory: str,
     like: Any,
@@ -155,6 +167,12 @@ def restore(
     — this is where ELASTIC re-sharding happens: the checkpoint stores
     logical arrays, so restoring onto a different mesh shape just means
     different shardings here.
+
+    `like` fixes the tree STRUCTURE and leaf dtypes only; leaf shapes come
+    from the file. Restorers whose capacities legitimately differ from the
+    writer's (e.g. a dense query group with a different bucketed-Q/K/label
+    padding history) therefore get the writer's arrays back verbatim and
+    re-pad them onto their own layout (engine.adopt_state).
     """
     step_dir = latest_step_dir(directory)
     if step_dir is None:

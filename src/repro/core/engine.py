@@ -1,8 +1,10 @@
 """Dense TPU-native streaming RPQ engine (the paper's technique, tensorized),
 multi-query batched: Q persistent queries share ONE adjacency and step as one
-jitted program.
+jitted program, and the query set is LIVE — queries register and deregister
+while the stream keeps flowing (the paper's persistent-query execution
+model, §2).
 
-State (all fixed-capacity, jit-static shapes):
+State (all fixed-capacity, jit-static shapes between lifecycle events):
     adj     (L, N, N)    f32   newest edge timestamp per (label, u, v); -inf
                                none. L = |union alphabet| of ALL registered
                                queries — the stream is ingested ONCE, not
@@ -13,7 +15,9 @@ State (all fixed-capacity, jit-static shapes):
                                into, finals masks padded False).
     emitted (Q, N, N)    bool  pairs already reported per query
                                (implicit-window monotone)
-    now     ()           f32   latest event time seen (shared stream clock)
+    now     ()           f32   latest event time seen (shared stream clock;
+                               EVERY event timestamp advances it, including
+                               tuples outside the union alphabet)
 
 The per-query DFA transition tables are flattened into one global list
 (semiring.BatchedTransitionTable): a relaxation round is a single
@@ -21,13 +25,39 @@ gather → batched max-min contraction → segment-max scatter, so `ingest →
 relax → emit` for all Q queries is ONE dispatch per micro-batch instead of
 Q. Per-query windows are a (Q,) vector applied as read-time thresholds.
 
+Query lifecycle (beyond-paper, PR 2): the Q axis is a set of LANES.
+:meth:`register_query` works at any point of the stream — it re-pads device
+state in place (Q grows in buckets of 4, K to the new ``max_q k_q``, the
+label axis when the union alphabet expands; all growth is append-only so
+existing state keeps its indices and the jit cache is reused within a
+bucket), then seeds the new lane with one ``batched_closure`` pass over the
+EXISTING shared adjacency, so the query immediately answers over the live
+window (its initial valid pairs are returned and count as emitted).
+:meth:`deregister_query` clears the lane to inert padding; the next
+registration reclaims it. Capacities never shrink.
+
+Per-query convergence masking: ``batched_closure`` masks each query out of
+the relaxation as soon as its own round produces no change (sound: a
+transition only ever reads its owning query's slices), so a converged
+query's lane settles — its slices pass through untouched and its round
+count stops accruing — instead of relaxing as a no-op until the slowest
+member finishes. On this dense single-device path the contraction itself
+is shape-static (the masked rows are computed then zeroed), so the
+realized win is ``total_query_rounds`` (sum of per-query ACTIVE rounds,
+reported by fig12 against the unmasked ``n_queries * total_rounds``
+regime) plus bounded closure work at registration (seeding relaxes only
+the new lane); the mask is also the hook the planned Q-sharded deployment
+needs to skip a converged lane's contraction for real.
+
 Key property of the (max, min) formulation (beyond-paper, §Perf): *window
 expiry needs no index maintenance* — a pair is valid iff its bottleneck
 timestamp exceeds ``now - |W_q|``, so expiry is a threshold at read time.
 The paper's ExpiryRAPQ machinery is only needed for (a) explicit deletions
 (closure re-computation, the paper's own uniform machinery) and (b) vertex
 slot recycling (python-side compaction, thresholded at the LARGEST window
-of the group so no query loses live state).
+of the group so no query loses live state; with no live queries the last
+retention threshold is kept so the shared graph survives an empty interval
+of the query set).
 
 Semantics vs the paper (B = micro-batch size, Q = #queries):
   * B = 1: the per-query result streams match the paper tuple-for-tuple for
@@ -41,8 +71,10 @@ Semantics vs the paper (B = micro-batch size, Q = #queries):
     batch boundaries (and hence which intra-batch paths are observable)
     can differ per query from a solo run of that query. B = 1 has no skew.
   * implicit windows, eager evaluation, lazy expiration — as in the paper.
-  * closure rounds run until the SLOWEST query converges; converged queries
-    relax as no-ops (monotone, so results are unaffected).
+  * a query registered mid-stream answers over the CURRENT window content
+    from its first instant: its result stream is identical to a freshly
+    built group fed the retained graph and then the tail of the stream
+    (benchmarks/fig13_query_churn.py asserts this).
 """
 from __future__ import annotations
 
@@ -63,6 +95,22 @@ from .semiring import (
 )
 
 Pair = Tuple[object, object]
+
+Q_BUCKET = 4        # lane-capacity growth quantum (compile-cache reuse)
+LABEL_BUCKET = 4    # label-axis rounding (absorbs small alphabet growth)
+
+
+def _round_up(n: int, b: int) -> int:
+    return max(n + (-n) % b, b)
+
+
+# a lane with no registered query: empty language, no transitions, k=1
+_INERT_DFA = DFA(
+    labels=(),
+    delta=np.full((1, 0), -1, np.int32),
+    start=0,
+    finals=frozenset(),
+)
 
 
 class EngineArrays(NamedTuple):
@@ -112,20 +160,26 @@ def _ingest(
     lab: jnp.ndarray,          # (B,) int32 shared-alphabet label ids
     ts: jnp.ndarray,           # (B,) f32
     mask: jnp.ndarray,         # (B,) bool  (padding)
+    ts_floor: jnp.ndarray,     # () f32 max event time of the WHOLE chunk
+                               # (incl. out-of-alphabet tuples: the stream
+                               # clock must not lag on mixed chunks)
     btt: BatchedTransitionTable,
     finals_mask: jnp.ndarray,  # (Q, K) bool
     windows: jnp.ndarray,      # (Q,) f32
+    live_mask: jnp.ndarray,    # (Q,) bool: False for inert padding lanes
     backend: str = "jnp",
 ):
     eff_ts = jnp.where(mask, ts, NEG_INF)
     adj = arrays.adj.at[lab, src, dst].max(eff_ts, mode="drop")
-    now = jnp.maximum(arrays.now, jnp.max(eff_ts))
-    dist, rounds = batched_closure(arrays.dist, adj, btt, backend)
+    now = jnp.maximum(arrays.now, jnp.maximum(jnp.max(eff_ts), ts_floor))
+    dist, rounds, qrounds = batched_closure(
+        arrays.dist, adj, btt, backend, query_mask=live_mask
+    )
     low = now - windows
     valid = batched_valid_pairs(dist, finals_mask, low)
     new = jnp.logical_and(valid, jnp.logical_not(arrays.emitted))
     emitted = jnp.logical_or(arrays.emitted, valid)
-    return BatchedEngineArrays(adj, dist, emitted, now), new, rounds
+    return BatchedEngineArrays(adj, dist, emitted, now), new, rounds, qrounds
 
 
 @functools.partial(jax.jit, static_argnames=("backend",), donate_argnums=(0,))
@@ -139,6 +193,7 @@ def _delete(
     btt: BatchedTransitionTable,
     finals_mask: jnp.ndarray,
     windows: jnp.ndarray,
+    live_mask: jnp.ndarray,    # (Q,) bool
     backend: str = "jnp",
 ):
     """Explicit deletion (negative tuple): clear adjacency entries and
@@ -150,10 +205,13 @@ def _delete(
     drop = jnp.where(mask, jnp.asarray(NEG_INF, jnp.float32), arrays.adj[lab, src, dst])
     adj = arrays.adj.at[lab, src, dst].set(drop, mode="drop")
     dist0 = jnp.full_like(arrays.dist, NEG_INF)
-    dist, rounds = batched_closure(dist0, adj, btt, backend)
+    dist, rounds, qrounds = batched_closure(
+        dist0, adj, btt, backend, query_mask=live_mask
+    )
     valid_after = batched_valid_pairs(dist, finals_mask, low)
     invalidated = jnp.logical_and(valid_before, jnp.logical_not(valid_after))
-    return BatchedEngineArrays(adj, dist, arrays.emitted, now), invalidated, rounds
+    return (BatchedEngineArrays(adj, dist, arrays.emitted, now),
+            invalidated, rounds, qrounds)
 
 
 @jax.jit
@@ -203,7 +261,7 @@ def _conflict_possible(
 
 
 # ---------------------------------------------------------------------------
-# Python orchestration: vertex interning, result decoding
+# Python orchestration: vertex interning, query lifecycle, result decoding
 # ---------------------------------------------------------------------------
 
 
@@ -221,9 +279,16 @@ class BatchedDenseRPQEngine:
 
     All queries share the vertex interner and the (L, N, N) adjacency over
     the union label alphabet; per-query closure state is stacked along the
-    leading Q axis. Per-query ``path_semantics`` follows the single-engine
-    contract: "simple" (RSPQ) uses the Mendelzon–Wood tractable class and
-    flags possibly-over-reporting windows in :attr:`per_query_conflicted`.
+    leading Q axis as LANES. The lane list (``lane_specs``) may contain
+    ``None`` holes — inert padding left by :meth:`deregister_query` or by
+    bucketed Q growth — which the next :meth:`register_query` reclaims.
+    Per-lane accessors (``per_query_results``, ``current_results``, the
+    lists returned by :meth:`insert_batch` / :meth:`delete`) are indexed by
+    lane; :meth:`lane_of` maps a query name to its lane.
+
+    Per-query ``path_semantics`` follows the single-engine contract:
+    "simple" (RSPQ) uses the Mendelzon–Wood tractable class and flags
+    possibly-over-reporting windows in :attr:`per_query_conflicted`.
     """
 
     def __init__(
@@ -233,32 +298,93 @@ class BatchedDenseRPQEngine:
         batch_size: int = 32,
         backend: str = "jnp",
     ):
+        queries = list(queries)
         if not queries:
             raise ValueError("register at least one query")
         for q in queries:
             if q.dfa.containment is None:
                 raise ValueError(f"compile query {q.name!r} with compile_query()")
-        self.query_specs: List[RegisteredQuery] = list(queries)
-        self.n_queries = len(self.query_specs)
+        names = [q.name for q in queries]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate query names: {names}")
+        self.lane_specs: List[Optional[RegisteredQuery]] = list(queries)
         self.n_slots = n_slots
         self.batch_size = batch_size
         self.backend = backend
-        # shared alphabet = union over queries, sorted for determinism
+        # shared alphabet = union over queries; sorted at construction, new
+        # labels APPEND at live registration (existing adj rows keep their
+        # index — the ×4-rounded label slots absorb small growth)
         self.labels: Tuple[str, ...] = tuple(
-            sorted(set().union(*[set(q.dfa.labels) for q in self.query_specs]))
+            sorted(set().union(*[set(q.dfa.labels) for q in queries]))
         )
         self._label_index = {lab: i for i, lab in enumerate(self.labels)}
-        self.btt = BatchedTransitionTable.from_dfas(
-            [q.dfa for q in self.query_specs], self.labels
+        self.k = 0           # padded state count; set by _rebuild_tables
+        self.max_window = 0.0
+        self._rebuild_tables()
+        n_label_slots = _round_up(len(self.labels), LABEL_BUCKET)
+        self.batched_arrays = init_batched_arrays(
+            n_slots, n_label_slots, self.q_cap, self.k
         )
+        # vertex interning (shared across queries: the stream is one graph)
+        self.slot_of: Dict[object, int] = {}
+        self.vertex_of: List[Optional[object]] = [None] * n_slots
+        self.free: List[int] = list(range(n_slots - 1, -1, -1))
+        # slots referenced by the chunk currently being packed: compaction
+        # triggered mid-chunk must not recycle them (they may have no
+        # adjacency yet and would otherwise look dead)
+        self._chunk_pinned: Set[int] = set()
+        # per-lane results
+        self.per_query_results: List[Set[Pair]] = [set() for _ in range(self.q_cap)]
+        self.per_query_log: List[List[Tuple[float, Pair]]] = [[] for _ in range(self.q_cap)]
+        self.per_query_conflicted: List[bool] = [False] * self.q_cap
+        self.total_rounds = 0        # global closure iterations (max over queries)
+        self.total_query_rounds = 0  # sum over queries of ACTIVE rounds (masked)
+        self.steps = 0  # jitted ingest/delete dispatches (the Q-sharing win)
+
+    # -- lane bookkeeping ----------------------------------------------------
+
+    @property
+    def q_cap(self) -> int:
+        """Allocated lane capacity (the Q axis of the device arrays)."""
+        return len(self.lane_specs)
+
+    @property
+    def n_queries(self) -> int:
+        """Number of LIVE queries (non-inert lanes)."""
+        return sum(1 for s in self.lane_specs if s is not None)
+
+    @property
+    def query_specs(self) -> List[RegisteredQuery]:
+        """Live query specs in lane order (back-compat view)."""
+        return [s for s in self.lane_specs if s is not None]
+
+    def live_items(self) -> List[Tuple[int, RegisteredQuery]]:
+        return [(qi, s) for qi, s in enumerate(self.lane_specs) if s is not None]
+
+    def lane_of(self, name: str) -> int:
+        for qi, s in enumerate(self.lane_specs):
+            if s is not None and s.name == name:
+                return qi
+        raise KeyError(f"no live query named {name!r}")
+
+    def _rebuild_tables(self) -> None:
+        """Recompute the flattened transition table and per-lane metadata
+        from the current lane list (inert lanes contribute nothing). K and
+        max_window never shrink below live device state / the last retention
+        threshold."""
+        dfas = [s.dfa if s is not None else _INERT_DFA for s in self.lane_specs]
+        self.btt = BatchedTransitionTable.from_dfas(dfas, self.labels, k_min=self.k)
         self.k = self.btt.k
-        qn, k = self.n_queries, self.k
-        fm = np.zeros((qn, k), bool)
-        nc = np.zeros((qn, k, k), bool)
-        self._simple = np.zeros((qn,), bool)
-        self._check_conflict = np.zeros((qn,), bool)
-        windows = np.zeros((qn,), np.float32)
-        for qi, spec in enumerate(self.query_specs):
+        qc = self.q_cap
+        fm = np.zeros((qc, self.k), bool)
+        nc = np.zeros((qc, self.k, self.k), bool)
+        self._simple = np.zeros((qc,), bool)
+        self._check_conflict = np.zeros((qc,), bool)
+        windows = np.zeros((qc,), np.float32)
+        live = np.zeros((qc,), bool)
+        for qi, spec in enumerate(self.lane_specs):
+            if spec is None:
+                continue
             dfa = spec.dfa
             for f in dfa.finals:
                 fm[qi, f] = True
@@ -268,23 +394,146 @@ class BatchedDenseRPQEngine:
             self._check_conflict[qi] = (
                 spec.path_semantics == "simple" and not dfa.has_containment_property
             )
+            live[qi] = True
         self.finals_mask = jnp.asarray(fm)
         self.not_contained = jnp.asarray(nc)
         self.windows = jnp.asarray(windows)
-        self.max_window = float(windows.max())
-        # label axis rounded up so alphabet-size changes reuse compiled steps
-        n_label_slots = max(len(self.labels) + (-len(self.labels)) % 4, 4)
-        self.batched_arrays = init_batched_arrays(n_slots, n_label_slots, qn, k)
-        # vertex interning (shared across queries: the stream is one graph)
-        self.slot_of: Dict[object, int] = {}
-        self.vertex_of: List[Optional[object]] = [None] * n_slots
-        self.free: List[int] = list(range(n_slots - 1, -1, -1))
-        # per-query results
-        self.per_query_results: List[Set[Pair]] = [set() for _ in range(qn)]
-        self.per_query_log: List[List[Tuple[float, Pair]]] = [[] for _ in range(qn)]
-        self.per_query_conflicted: List[bool] = [False] * qn
-        self.total_rounds = 0
-        self.steps = 0  # jitted ingest/delete dispatches (the Q-sharing win)
+        self.live_mask = jnp.asarray(live)
+        if live.any():
+            self.max_window = float(windows[live].max())
+        # else: keep the previous retention threshold — with no live queries
+        # the shared graph is retained at the last group policy so a future
+        # registration still answers over the live window
+
+    def _repad_arrays(self) -> None:
+        """Grow device state in place to the current (q_cap, label-slot, K)
+        capacities. Growth only — inert padding is reclaimable, never
+        reshaped away — and append-only, so existing lanes/labels/states
+        keep their indices and compiled steps are reused within a bucket."""
+        a = self.batched_arrays
+        n = self.n_slots
+        adj, dist, emitted = a.adj, a.dist, a.emitted
+        l_need = _round_up(len(self.labels), LABEL_BUCKET)
+        if l_need > adj.shape[0]:
+            adj = jnp.concatenate(
+                [adj, jnp.full((l_need - adj.shape[0], n, n), NEG_INF, jnp.float32)],
+                axis=0,
+            )
+        if self.k > dist.shape[3]:
+            dist = jnp.concatenate(
+                [dist, jnp.full(
+                    (dist.shape[0], n, n, self.k - dist.shape[3]),
+                    NEG_INF, jnp.float32)],
+                axis=3,
+            )
+        if self.q_cap > dist.shape[0]:
+            grow = self.q_cap - dist.shape[0]
+            dist = jnp.concatenate(
+                [dist, jnp.full((grow, n, n, dist.shape[3]), NEG_INF, jnp.float32)],
+                axis=0,
+            )
+            emitted = jnp.concatenate(
+                [emitted, jnp.zeros((grow, n, n), bool)], axis=0
+            )
+        self.batched_arrays = BatchedEngineArrays(adj, dist, emitted, a.now)
+
+    # -- query lifecycle -----------------------------------------------------
+
+    def register_query(self, spec: RegisteredQuery) -> Set[Pair]:
+        """Add a persistent query to the LIVE group (works mid-stream).
+
+        Re-pads device state in place (Q bucketed to multiples of 4, K to
+        the new ``max_q k_q``, label axis on union-alphabet growth), then
+        seeds the new lane's closure with one ``batched_closure`` pass over
+        the existing shared adjacency — only the new lane relaxes; converged
+        lanes stay masked. Returns the query's INITIAL result pairs (valid
+        over the current window), which are recorded as emitted: the
+        subsequent result stream is identical to a freshly built group fed
+        the retained graph and then the tail of the stream.
+        """
+        if spec.dfa.containment is None:
+            raise ValueError(f"compile query {spec.name!r} with compile_query()")
+        if any(s is not None and s.name == spec.name for s in self.lane_specs):
+            raise ValueError(f"query {spec.name!r} already registered")
+        # union alphabet growth: append-only
+        for lab in sorted(spec.dfa.labels):
+            if lab not in self._label_index:
+                self._label_index[lab] = len(self.labels)
+                self.labels = self.labels + (lab,)
+        # lane: reclaim an inert hole, else grow the Q axis to the next bucket
+        lane = next((i for i, s in enumerate(self.lane_specs) if s is None), None)
+        if lane is None:
+            lane = len(self.lane_specs)
+            new_cap = _round_up(lane + 1, Q_BUCKET)
+            grow = new_cap - lane
+            self.lane_specs.extend([None] * grow)
+            self.per_query_results.extend(set() for _ in range(grow))
+            self.per_query_log.extend([] for _ in range(grow))
+            self.per_query_conflicted.extend([False] * grow)
+        self.lane_specs[lane] = spec
+        self._rebuild_tables()
+        self._repad_arrays()
+        # the lane may be a reclaimed hole: make sure it starts inert
+        a = self.batched_arrays
+        self.batched_arrays = BatchedEngineArrays(
+            a.adj,
+            a.dist.at[lane].set(NEG_INF),
+            a.emitted.at[lane].set(False),
+            a.now,
+        )
+        self.per_query_results[lane] = set()
+        self.per_query_log[lane] = []
+        self.per_query_conflicted[lane] = False
+        if not self.slot_of:
+            return set()  # nothing ingested yet: nothing to seed
+        # seed: one closure pass over the EXISTING shared adjacency, only
+        # the new lane unmasked (every other lane is already at fixpoint)
+        lane_mask = np.zeros((self.q_cap,), bool)
+        lane_mask[lane] = True
+        a = self.batched_arrays
+        dist, rounds, qrounds = batched_closure(
+            a.dist, a.adj, self.btt, self.backend,
+            query_mask=jnp.asarray(lane_mask),
+        )
+        self.total_rounds += int(rounds)
+        self.total_query_rounds += int(qrounds.sum())
+        low = a.now - self.windows
+        valid = batched_valid_pairs(dist, self.finals_mask, low)
+        self.batched_arrays = BatchedEngineArrays(
+            a.adj, dist, a.emitted.at[lane].set(valid[lane]), a.now
+        )
+        if self._check_conflict[lane]:
+            flags = np.asarray(_conflict_possible(dist, self.not_contained, low))
+            if flags[lane]:
+                self.per_query_conflicted[lane] = True
+        initial = self._decode_pairs(np.asarray(valid[lane]), bool(self._simple[lane]))
+        t = float(self.batched_arrays.now)
+        for p in sorted(initial, key=repr):
+            self.per_query_results[lane].add(p)
+            self.per_query_log[lane].append((t, p))
+        return initial
+
+    def deregister_query(self, name: str) -> None:
+        """Remove a live query: its lane becomes inert padding (dist/emitted
+        cleared, no transitions, window 0) reclaimable by the next
+        :meth:`register_query`. Other lanes are untouched — their result
+        streams are unaffected by the departure (tested). Capacities (Q, K,
+        labels) never shrink; if the departing query held the group's
+        largest window, the retention threshold tightens to the remaining
+        queries' maximum."""
+        lane = self.lane_of(name)
+        self.lane_specs[lane] = None
+        a = self.batched_arrays
+        self.batched_arrays = BatchedEngineArrays(
+            a.adj,
+            a.dist.at[lane].set(NEG_INF),
+            a.emitted.at[lane].set(False),
+            a.now,
+        )
+        self.per_query_results[lane] = set()
+        self.per_query_log[lane] = []
+        self.per_query_conflicted[lane] = False
+        self._rebuild_tables()
 
     # -- interning ----------------------------------------------------------
 
@@ -311,12 +560,12 @@ class BatchedDenseRPQEngine:
         self, edges: Sequence[Tuple[object, object, str, float]]
     ) -> List[Set[Pair]]:
         """Ingest a micro-batch of append sgts (timestamp-ordered). Returns
-        the NEW result pairs per query (list indexed like query_specs)."""
-        out: List[Set[Pair]] = [set() for _ in range(self.n_queries)]
+        the NEW result pairs per lane (list indexed like lane_specs)."""
+        out: List[Set[Pair]] = [set() for _ in range(self.q_cap)]
         B = self.batch_size
         for i in range(0, len(edges), B):
             fresh = self._ingest_chunk(edges[i : i + B])
-            for qi in range(self.n_queries):
+            for qi in range(self.q_cap):
                 out[qi] |= fresh[qi]
         return out
 
@@ -327,36 +576,51 @@ class BatchedDenseRPQEngine:
         lab = np.zeros((B,), np.int32)
         ts = np.full((B,), NEG_INF, np.float32)
         mask = np.zeros((B,), bool)
+        # the stream clock advances from EVERY event in the chunk, packed or
+        # not: a mixed chunk whose trailing tuples are out-of-alphabet must
+        # not evaluate window validity against a stale `now`
+        chunk_now = max(t for (_u, _v, _l, t) in edges)
         j = 0
-        for (u, v, label, t) in edges:
-            li = self._label_index.get(label)
-            if li is None:
-                continue  # outside the union Sigma_Q: discarded (paper §5.2)
-            src[j] = self._slot(u)
-            dst[j] = self._slot(v)
-            lab[j] = li
-            ts[j] = t
-            mask[j] = True
-            j += 1
-        if j == 0:
-            # still advance the clock
-            times = [t for (_u, _v, _l, t) in edges]
-            if times:
+        self._chunk_pinned.clear()
+        try:
+            for (u, v, label, t) in edges:
+                li = self._label_index.get(label)
+                if li is None:
+                    continue  # outside the union Sigma_Q: discarded (paper §5.2)
+                # pin each slot as soon as it is interned: _slot() may
+                # compact mid-chunk, and a chunk-local vertex with no
+                # adjacency yet must not be recycled before its edge lands
+                si = self._slot(u)
+                self._chunk_pinned.add(si)
+                di = self._slot(v)
+                self._chunk_pinned.add(di)
+                src[j] = si
+                dst[j] = di
+                lab[j] = li
+                ts[j] = t
+                mask[j] = True
+                j += 1
+            if j == 0:
+                # still advance the clock
                 self.batched_arrays = self.batched_arrays._replace(
                     now=jnp.maximum(
                         self.batched_arrays.now,
-                        jnp.asarray(max(times), jnp.float32),
+                        jnp.asarray(chunk_now, jnp.float32),
                     )
                 )
-            return [set() for _ in range(self.n_queries)]
-        self.batched_arrays, new, rounds = _ingest(
-            self.batched_arrays,
-            jnp.asarray(src), jnp.asarray(dst), jnp.asarray(lab),
-            jnp.asarray(ts), jnp.asarray(mask),
-            self.btt, self.finals_mask, self.windows,
-            backend=self.backend,
-        )
+                return [set() for _ in range(self.q_cap)]
+            self.batched_arrays, new, rounds, qrounds = _ingest(
+                self.batched_arrays,
+                jnp.asarray(src), jnp.asarray(dst), jnp.asarray(lab),
+                jnp.asarray(ts), jnp.asarray(mask),
+                jnp.asarray(chunk_now, jnp.float32),
+                self.btt, self.finals_mask, self.windows, self.live_mask,
+                backend=self.backend,
+            )
+        finally:
+            self._chunk_pinned.clear()
         self.total_rounds += int(rounds)
+        self.total_query_rounds += int(qrounds.sum())
         self.steps += 1
         if self._check_conflict.any():
             low = self.batched_arrays.now - self.windows
@@ -369,29 +633,30 @@ class BatchedDenseRPQEngine:
 
     def delete(self, u: object, v: object, label: str, ts: float) -> List[Set[Pair]]:
         """Explicit deletion (negative tuple). Returns invalidated pairs
-        per query."""
+        per lane."""
         li = self._label_index.get(label)
         if li is None or u not in self.slot_of or v not in self.slot_of:
             self.batched_arrays = self.batched_arrays._replace(
                 now=jnp.maximum(self.batched_arrays.now, jnp.asarray(ts, jnp.float32))
             )
-            return [set() for _ in range(self.n_queries)]
+            return [set() for _ in range(self.q_cap)]
         src = jnp.asarray([self.slot_of[u]], jnp.int32)
         dst = jnp.asarray([self.slot_of[v]], jnp.int32)
         labj = jnp.asarray([li], jnp.int32)
         mask = jnp.asarray([True])
-        self.batched_arrays, invalidated, rounds = _delete(
+        self.batched_arrays, invalidated, rounds, qrounds = _delete(
             self.batched_arrays, src, dst, labj, mask,
             jnp.asarray(ts, jnp.float32),
-            self.btt, self.finals_mask, self.windows,
+            self.btt, self.finals_mask, self.windows, self.live_mask,
             backend=self.backend,
         )
         self.total_rounds += int(rounds)
+        self.total_query_rounds += int(qrounds.sum())
         self.steps += 1
         inv = np.asarray(invalidated)
         return [
             self._decode_pairs(inv[qi], bool(self._simple[qi]))
-            for qi in range(self.n_queries)
+            for qi in range(self.q_cap)
         ]
 
     def expire(self, tau: Optional[float] = None) -> None:
@@ -411,6 +676,7 @@ class BatchedDenseRPQEngine:
         dead_slots = [
             s for s, vtx in enumerate(self.vertex_of)
             if vtx is not None and not bool(live[s])
+            and s not in self._chunk_pinned  # chunk-local: edge not landed yet
         ]
         if not dead_slots:
             return
@@ -438,13 +704,13 @@ class BatchedDenseRPQEngine:
         return pairs
 
     def _decode_new(self, new: jnp.ndarray) -> List[Set[Pair]]:
-        """Per-query pairs NEW to the monotone result set: after slot
+        """Per-lane pairs NEW to the monotone result set: after slot
         recycling the emitted matrices forget old occupants, so the device
         diff may resurface already-reported pairs — the python-side sets are
         the source of truth for implicit-window monotonicity."""
         arr = np.asarray(new)  # (Q, N, N) bool
         t = float(self.batched_arrays.now)
-        fresh: List[Set[Pair]] = [set() for _ in range(self.n_queries)]
+        fresh: List[Set[Pair]] = [set() for _ in range(self.q_cap)]
         qs, xs, vs = np.nonzero(arr)
         for q, x, v in zip(qs.tolist(), xs.tolist(), vs.tolist()):
             if self._simple[q] and x == v:
@@ -461,10 +727,32 @@ class BatchedDenseRPQEngine:
         return fresh
 
     def current_results(self, qi: int = 0) -> Set[Pair]:
-        """Snapshot view (explicit-window semantics) for query `qi`."""
+        """Snapshot view (explicit-window semantics) for lane `qi`."""
         low = self.batched_arrays.now - self.windows
         valid = batched_valid_pairs(self.batched_arrays.dist, self.finals_mask, low)
         return self._decode_pairs(np.asarray(valid[qi]), bool(self._simple[qi]))
+
+    def retained_edges(self) -> List[Tuple[object, object, str, float]]:
+        """The shared graph's current content as (u, v, label, ts) tuples in
+        timestamp order — everything a newly registered query's seeding
+        closure sees. Feeding these into a fresh engine (and syncing its
+        clock to this engine's `now`) reproduces this engine's dist for any
+        query, because the closure fixpoint depends only on the final
+        adjacency: the oracle construction of the churn conformance tests
+        and benchmarks/fig13_query_churn.py."""
+        adj = np.asarray(self.batched_arrays.adj)
+        out: List[Tuple[object, object, str, float]] = []
+        ls, us, vs = np.nonzero(adj > NEG_INF)
+        for l, u, v in zip(ls.tolist(), us.tolist(), vs.tolist()):
+            if l >= len(self.labels):
+                continue
+            uu = self.vertex_of[u]
+            vv = self.vertex_of[v]
+            if uu is None or vv is None:
+                continue
+            out.append((uu, vv, self.labels[l], float(adj[l, u, v])))
+        out.sort(key=lambda e: e[3])
+        return out
 
     def index_size(self, qi: Optional[int] = None) -> Tuple[int, int]:
         """(active roots, populated (x,v,s) entries) — Fig. 5 analogue.
@@ -484,17 +772,88 @@ class BatchedDenseRPQEngine:
         return {"adj": a.adj, "dist": a.dist, "emitted": a.emitted, "now": a.now}
 
     def load_state_arrays(self, state: Dict[str, jnp.ndarray]) -> None:
+        """Exact-shape reload (same capacities). For checkpoints written by
+        a group with a different churn history (other Q/K/label padding),
+        use :meth:`adopt_state`."""
         self.batched_arrays = BatchedEngineArrays(
             state["adj"], state["dist"], state["emitted"], state["now"]
         )
 
-    def interner_state(self) -> Dict[str, int]:
-        """Vertex interner as JSON-able metadata (str-keyed, like the
-        checkpoint manifest)."""
-        return {str(k): v for k, v in self.slot_of.items()}
+    def adopt_state(
+        self,
+        state: Dict[str, jnp.ndarray],
+        lane_names: Sequence[Optional[str]],
+        labels: Sequence[str],
+    ) -> None:
+        """Load checkpointed device arrays whose Q/K/label capacities may
+        differ from this engine's (bucketed-Q padding, different churn
+        history). Lanes are matched by query NAME, adjacency rows by label
+        NAME; the live query sets must agree. Labels present only in the
+        checkpoint (e.g. retained from queries deregistered pre-snapshot)
+        are appended so the shared graph survives intact."""
+        adj_ck = np.asarray(state["adj"])
+        dist_ck = np.asarray(state["dist"])
+        emitted_ck = np.asarray(state["emitted"])
+        if adj_ck.shape[1] != self.n_slots:
+            raise ValueError(
+                f"checkpoint n_slots {adj_ck.shape[1]} != engine {self.n_slots}"
+            )
+        ours = {spec.name: qi for qi, spec in self.live_items()}
+        theirs = {name: qi for qi, name in enumerate(lane_names) if name is not None}
+        if set(ours) != set(theirs):
+            raise ValueError(
+                f"checkpointed query set {sorted(theirs)} does not match "
+                f"registered set {sorted(ours)}"
+            )
+        for lab in labels:
+            if lab not in self._label_index:
+                self._label_index[lab] = len(self.labels)
+                self.labels = self.labels + (lab,)
+        self._rebuild_tables()
+        self._repad_arrays()
+        a = self.batched_arrays
+        n = self.n_slots
+        adj = np.full(tuple(a.adj.shape), NEG_INF, np.float32)
+        for li_ck, lab in enumerate(labels):
+            adj[self._label_index[lab]] = adj_ck[li_ck]
+        dist = np.full(tuple(a.dist.shape), NEG_INF, np.float32)
+        emitted = np.zeros(tuple(a.emitted.shape), bool)
+        # states beyond a lane's own dfa.k are provably -inf padding (no
+        # transition ever scatters into them), so the K prefix carries
+        # everything real in either direction
+        kk = min(dist_ck.shape[3], self.k)
+        for name, qi in ours.items():
+            dist[qi, :, :, :kk] = dist_ck[theirs[name], :, :, :kk]
+            emitted[qi] = emitted_ck[theirs[name]]
+        self.batched_arrays = BatchedEngineArrays(
+            jnp.asarray(adj), jnp.asarray(dist), jnp.asarray(emitted),
+            jnp.asarray(np.float32(np.asarray(state["now"]))),
+        )
 
-    def load_interner(self, slot_of: Dict[str, int]) -> None:
-        self.slot_of = {_maybe_int(k): v for k, v in slot_of.items()}
+    def interner_state(self) -> Dict[str, object]:
+        """Vertex interner as JSON-able metadata with TYPE TAGS: string ids
+        like "42" and int ids like 42 both survive a snapshot → restore
+        round trip (the untyped v1 format guessed int() on load and turned
+        numeric-string vertices into ints)."""
+        return {
+            "format": 2,
+            "entries": [
+                [_encode_vertex(v), int(slot)]
+                for v, slot in sorted(self.slot_of.items(), key=lambda kv: kv[1])
+            ],
+        }
+
+    def load_interner(self, state: Dict) -> None:
+        # v2 detection must not be fooled by a LEGACY checkpoint whose
+        # stream contained vertices literally named "format"/"entries"
+        # (v1 values are all int slots, never a list)
+        if (isinstance(state, dict) and state.get("format") == 2
+                and isinstance(state.get("entries"), list)):
+            self.slot_of = {
+                _decode_vertex(enc): int(slot) for enc, slot in state["entries"]
+            }
+        else:  # legacy v1 checkpoints: untyped str keys, int guessed on load
+            self.slot_of = {_maybe_int(k): v for k, v in state.items()}
         self.vertex_of = [None] * self.n_slots
         for vtx, slot in self.slot_of.items():
             self.vertex_of[slot] = vtx
@@ -503,26 +862,75 @@ class BatchedDenseRPQEngine:
 
     def results_state(self) -> Dict[str, object]:
         return {
+            "format": 2,
             "results": {
-                spec.name: sorted(map(list, self.per_query_results[qi]))
-                for qi, spec in enumerate(self.query_specs)
+                spec.name: [
+                    [_encode_vertex(a), _encode_vertex(b)]
+                    for (a, b) in sorted(self.per_query_results[qi], key=repr)
+                ]
+                for qi, spec in self.live_items()
             },
             "conflicted": {
                 spec.name: self.per_query_conflicted[qi]
-                for qi, spec in enumerate(self.query_specs)
+                for qi, spec in self.live_items()
             },
         }
 
     def load_results_state(self, state: Dict[str, object]) -> None:
-        for qi, spec in enumerate(self.query_specs):
-            self.per_query_results[qi] = {
-                tuple(p) for p in state["results"][spec.name]
-            }
+        tagged = state.get("format", 1) >= 2
+        for qi, spec in self.live_items():
+            pairs = state["results"][spec.name]
+            if tagged:
+                self.per_query_results[qi] = {
+                    (_decode_vertex(a), _decode_vertex(b)) for a, b in pairs
+                }
+            else:
+                self.per_query_results[qi] = {tuple(p) for p in pairs}
             self.per_query_log[qi] = []
             self.per_query_conflicted[qi] = bool(state["conflicted"][spec.name])
 
 
+def _encode_vertex(v: object) -> List:
+    """Type-tagged JSON-able encoding of a vertex id (satellite fix: the
+    checkpoint must not guess types on load)."""
+    if isinstance(v, bool):  # before int: bool is an int subclass
+        return ["b", bool(v)]
+    if isinstance(v, int):
+        return ["i", int(v)]
+    if isinstance(v, float):
+        return ["f", float(v)]
+    if isinstance(v, str):
+        return ["s", v]
+    if isinstance(v, tuple):
+        return ["t", [_encode_vertex(x) for x in v]]
+    import base64
+    import pickle
+
+    return ["p", base64.b64encode(pickle.dumps(v)).decode("ascii")]
+
+
+def _decode_vertex(enc: Sequence) -> object:
+    tag, val = enc
+    if tag == "b":
+        return bool(val)
+    if tag == "i":
+        return int(val)
+    if tag == "f":
+        return float(val)
+    if tag == "s":
+        return str(val)
+    if tag == "t":
+        return tuple(_decode_vertex(x) for x in val)
+    if tag == "p":
+        import base64
+        import pickle
+
+        return pickle.loads(base64.b64decode(val))
+    raise ValueError(f"unknown vertex tag {tag!r}")
+
+
 def _maybe_int(s: str):
+    """Legacy v1 interner decoding (type-guessing; kept for old manifests)."""
     try:
         return int(s)
     except ValueError:
@@ -607,3 +1015,37 @@ class DenseRPQEngine(BatchedDenseRPQEngine):
 
     def index_size(self) -> Tuple[int, int]:
         return super().index_size(0)
+
+
+def make_churn_oracle(
+    dfa: DFA,
+    live_group: BatchedDenseRPQEngine,
+    window: float,
+    n_slots: int,
+    path_semantics: str = "arbitrary",
+) -> Tuple[DenseRPQEngine, Set[Pair]]:
+    """Fresh-engine oracle for a query registered mid-stream — the single
+    construction tests/test_query_churn.py and benchmarks/fig13_query_churn
+    assert against. Exact by this recipe, in this order:
+
+    1. sync the fresh engine's clock to the live group's `now` BEFORE
+       seeding (expire() on the empty engine), so the seed's emitted
+       baseline is "valid over the current window" — the same baseline
+       :meth:`BatchedDenseRPQEngine.register_query` records;
+    2. feed the group's :meth:`~BatchedDenseRPQEngine.retained_edges` as
+       ONE batch — exact because the closure fixpoint depends only on the
+       final adjacency, and a single evaluation at the synced clock emits
+       exactly the live-window-valid pairs (per-tuple replay would also
+       emit pairs only valid at interior instants);
+    3. replay the tail per-tuple (batch_size=1: no boundary skew).
+
+    Returns (oracle, seed_results); seed_results must equal the live
+    registration's initial answer set."""
+    retained = live_group.retained_edges()
+    oracle = DenseRPQEngine(dfa, window, n_slots=n_slots,
+                            batch_size=max(1, len(retained)),
+                            path_semantics=path_semantics)
+    oracle.expire(float(live_group.batched_arrays.now))
+    seed = oracle.insert_batch(retained) if retained else set()
+    oracle.batch_size = 1
+    return oracle, seed

@@ -22,7 +22,7 @@ Three interchangeable contraction back-ends:
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Sequence, Tuple
+from typing import NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -191,12 +191,18 @@ class BatchedTransitionTable(NamedTuple):
     @staticmethod
     def from_dfas(
         dfas: Sequence, labels: Sequence[str],
-        j_bucket: int = 8, k_bucket: int = 2,
+        j_bucket: int = 8, k_bucket: int = 2, k_min: int = 1,
     ) -> "BatchedTransitionTable":
-        """Stack per-query DFAs over a shared (sorted) label alphabet."""
+        """Stack per-query DFAs over a shared label alphabet.
+
+        ``k_min`` floors the padded state count: a live engine whose device
+        state already has K state slots passes ``k_min=K`` so deregistering
+        its deepest query never *shrinks* the table below the allocated dist
+        axis (the extra states are inert padding either way).
+        """
         labels = tuple(labels)
         lab_index = {lab: i for i, lab in enumerate(labels)}
-        k_max = max([d.k for d in dfas] + [1])
+        k_max = max([d.k for d in dfas] + [1, k_min])
         k_max += (-k_max) % k_bucket
         qidx, src, lab, dst, start = [], [], [], [], []
         for q, dfa in enumerate(dfas):
@@ -240,22 +246,41 @@ def batched_relax_round(
     adj: jnp.ndarray,           # (L, N, N) f32 shared adjacency
     btt: BatchedTransitionTable,
     backend: str = "jnp",
+    query_mask: Optional[jnp.ndarray] = None,   # (Q,) bool, True = relax
 ) -> jnp.ndarray:
-    """One relaxation round over ALL queries' transitions at once."""
+    """One relaxation round over ALL queries' transitions at once.
+
+    ``query_mask`` is the per-query convergence mask: rows owned by a masked
+    (False) query contribute the semiring zero and the query's dist slices
+    pass through untouched, so an already-converged (or inert padding) lane
+    stops participating in the round instead of relaxing as a no-op.
+    Transitions only ever read their OWN query's dist slices, so masking one
+    lane cannot perturb another (the soundness condition for early per-query
+    convergence in :func:`batched_closure`). Note the dense round is
+    shape-static: masked rows are still contracted, then zeroed — the mask
+    buys exact per-query round accounting (and, on a Q-sharded deployment,
+    the signal to skip a converged lane's contraction entirely), not fewer
+    FLOPs on a single device."""
     q, n, _, k = dist.shape
+    active = btt.active
+    if query_mask is not None:
+        active = jnp.logical_and(active, query_mask[btt.qidx])
     d_s = dist[btt.qidx, :, :, btt.src]               # (J, N, N) [x, u]
     a_l = adj[btt.lab]                                # (J, N, N) [u, v]
     contrib = _contract_batched(d_s, a_l, backend)    # (J, N, N) [x, v]
     # base term: seed (x, x, s0) = +inf => min(+inf, adj[l, x, v]) = adj
     contrib = jnp.where(btt.start_mask[:, None, None],
                         jnp.maximum(contrib, a_l), contrib)
-    # shape-padding rows contribute the semiring zero
-    contrib = jnp.where(btt.active[:, None, None], contrib, NEG_INF)
+    # shape-padding rows / converged queries contribute the semiring zero
+    contrib = jnp.where(active[:, None, None], contrib, NEG_INF)
     # scatter-max into (query, dst-state) slices; empty segments fill -inf
     seg = btt.qidx * k + btt.dst                      # (J,)
     scat = jax.ops.segment_max(contrib, seg, num_segments=q * k)
     upd = jnp.transpose(scat.reshape(q, k, n, n), (0, 2, 3, 1))
-    return jnp.maximum(dist, upd)
+    out = jnp.maximum(dist, upd)
+    if query_mask is not None:
+        out = jnp.where(query_mask[:, None, None, None], out, dist)
+    return out
 
 
 def batched_closure(
@@ -264,27 +289,49 @@ def batched_closure(
     btt: BatchedTransitionTable,
     backend: str = "jnp",
     max_rounds: int = 0,
-) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Iterate batched relaxation until NO query changes. Returns
-    (dist, rounds_used). Rounds = max over queries of the per-query round
-    count; converged queries relax as no-ops until the slowest finishes."""
-    _q, n, _, k = dist.shape
+    query_mask: Optional[jnp.ndarray] = None,   # (Q,) bool initial mask
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Iterate batched relaxation with per-query convergence masking.
+
+    Each round relaxes only the queries still changing: once a query's round
+    produces no update it is at its fixpoint (its transitions read only its
+    own slices and the shared adjacency, which is constant during the
+    closure), so it is masked out of every subsequent round. The loop ends
+    when the slowest query converges.
+
+    ``query_mask`` optionally restricts which queries participate at all
+    (inert padding lanes of a live engine, or a single lane being seeded at
+    registration); masked-from-the-start queries count zero rounds.
+
+    Returns ``(dist, rounds, query_rounds)``: ``rounds`` is the global
+    iteration count (max over participating queries; identical to the
+    unmasked regime — the loop still runs until the slowest member
+    settles), ``query_rounds`` is the (Q,) int32 per-query count of rounds
+    the query actively relaxed. ``query_rounds.sum()`` vs Q * ``rounds``
+    (benchmarks/fig12_multi_query.py) quantifies how much of the group's
+    relaxation is no-op tail a Q-sharded execution could skip."""
+    q, n, _, k = dist.shape
     bound = max_rounds if max_rounds > 0 else n * k + 1
+    mask0 = (jnp.ones((q,), bool) if query_mask is None
+             else jnp.asarray(query_mask, bool))
 
     def cond(carry):
-        _d, changed, it = carry
-        return jnp.logical_and(changed, it < bound)
+        _d, mask, it, _qr = carry
+        return jnp.logical_and(jnp.any(mask), it < bound)
 
     def body(carry):
-        d, _changed, it = carry
-        nd = batched_relax_round(d, adj, btt, backend)
-        return nd, jnp.any(nd > d), it + 1
+        d, mask, it, qr = carry
+        nd = batched_relax_round(d, adj, btt, backend, query_mask=mask)
+        changed = jnp.any(nd > d, axis=(1, 2, 3))     # (Q,) per-query
+        return nd, jnp.logical_and(mask, changed), it + 1, qr + mask
 
-    dist0 = batched_relax_round(dist, adj, btt, backend)
-    dist_f, _, rounds = jax.lax.while_loop(
-        cond, body, (dist0, jnp.asarray(True), jnp.asarray(1, jnp.int32))
+    dist0 = batched_relax_round(dist, adj, btt, backend, query_mask=mask0)
+    changed0 = jnp.logical_and(mask0, jnp.any(dist0 > dist, axis=(1, 2, 3)))
+    qr0 = mask0.astype(jnp.int32)
+    dist_f, _, rounds, query_rounds = jax.lax.while_loop(
+        cond, body, (dist0, changed0, jnp.asarray(1, jnp.int32), qr0)
     )
-    return dist_f, rounds
+    return dist_f, rounds, query_rounds
 
 
 def batched_valid_pairs(

@@ -215,7 +215,10 @@ def run_rpq_cell(name: str, n_slots: int, query: str, v_chunk: int,
     if mode == "batched":
         # Q stacked queries, shared adjacency: dist (Q, x, u, K) with x over
         # data and u over model (same frontier layout per query; the Q axis
-        # is replicated — queries are data-parallel over their own closure)
+        # is replicated — queries are data-parallel over their own closure).
+        # The per-query convergence mask rides along as a (Q,) input — the
+        # production round the BatchedDenseRPQEngine iterates: converged
+        # queries are masked out instead of relaxing as no-ops.
         dfas = [compile_query(q) for q in BATCHED_QUERIES]
         labels = sorted(set().union(*[set(d.labels) for d in dfas]))
         btt = BatchedTransitionTable.from_dfas(dfas, labels)
@@ -225,23 +228,32 @@ def run_rpq_cell(name: str, n_slots: int, query: str, v_chunk: int,
         dist_spec = jax.ShapeDtypeStruct(
             (len(dfas), n_slots, n_slots, btt.k), dtype)
         adj_spec = jax.ShapeDtypeStruct((len(labels), n_slots, n_slots), dtype)
+        mask_spec = jax.ShapeDtypeStruct((len(dfas),), jnp.bool_)
         dist_sh = NamedSharding(mesh, P(None, xa, "model", None))
         adj_sh = NamedSharding(mesh, P(None, None, "model"))
+        mask_sh = NamedSharding(mesh, P())  # replicated, like the Q axis
+        arg_specs = (dist_spec, adj_spec, mask_spec)
+        arg_shardings = (dist_sh, adj_sh, mask_sh)
 
-        def round_fn(dist, adj):
-            out = batched_relax_round(dist, adj, btt, backend="jnp")
+        def round_fn(dist, adj, query_mask):
+            out = batched_relax_round(dist, adj, btt, backend="jnp",
+                                      query_mask=query_mask)
             return jax.lax.with_sharding_constraint(out, dist_sh)
     elif mode == "ring":
         dist_spec = jax.ShapeDtypeStruct((n_slots, n_slots, dfa.k), dtype)
         adj_spec = jax.ShapeDtypeStruct((dfa.n_labels, n_slots, n_slots), dtype)
         dist_sh = NamedSharding(mesh, P(xa, "model", None))
         adj_sh = NamedSharding(mesh, P(None, "model", None))  # u co-sharded
+        arg_specs = (dist_spec, adj_spec)
+        arg_shardings = (dist_sh, adj_sh)
         round_fn = make_ring_round(mesh, tt, n_slots, multi_pod)
     else:  # baseline | mxu
         dist_spec = jax.ShapeDtypeStruct((n_slots, n_slots, dfa.k), dtype)
         adj_spec = jax.ShapeDtypeStruct((dfa.n_labels, n_slots, n_slots), dtype)
         dist_sh = NamedSharding(mesh, P(xa, "model", None))
         adj_sh = NamedSharding(mesh, P(None, None, "model"))
+        arg_specs = (dist_spec, adj_spec)
+        arg_shardings = (dist_sh, adj_sh)
 
         def round_fn(dist, adj):
             if mode == "mxu":
@@ -252,8 +264,8 @@ def run_rpq_cell(name: str, n_slots: int, query: str, v_chunk: int,
 
     t0 = time.monotonic()
     with mesh_context(mesh):
-        lowered = jax.jit(round_fn, in_shardings=(dist_sh, adj_sh),
-                          out_shardings=dist_sh).lower(dist_spec, adj_spec)
+        lowered = jax.jit(round_fn, in_shardings=arg_shardings,
+                          out_shardings=dist_sh).lower(*arg_specs)
     global_flops = _cost_dict(lowered.cost_analysis()).get("flops", 0.0)
     compiled = lowered.compile()
     t_total = time.monotonic() - t0

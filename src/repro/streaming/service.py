@@ -11,15 +11,33 @@ the labeled adjacency and the vertex interner, so each arriving sgt costs a
 single jitted dispatch for the whole dense workload instead of one per
 query (benchmarks/fig12_multi_query.py measures the win). Reference
 engines (the paper-faithful pointer oracles) stay on the per-query path.
-The dense group is materialized lazily at first ingest; registering more
-dense queries after ingestion has begun raises (re-padding live device
-state is not supported — snapshot, re-register, restore instead).
+
+Query lifecycle is LIVE (PR 2): :meth:`PersistentQueryService.register`
+works before OR after ingestion has started — a late dense registration
+re-pads the running group's device state in place and seeds the new
+query's closure over the retained graph, so it immediately answers over
+the current window (the initial result pairs are returned).
+:meth:`deregister` retires a query mid-stream; its lane becomes inert
+padding reclaimed by the next registration. A dense query registered after
+ingestion adopts the group's existing capacities (``n_slots``,
+``batch_size``, ``backend``) — per-call capacity arguments apply only
+while the group is still unmaterialized.
+
+Deletion visibility: :meth:`ingest` returns an :class:`IngestReport` — a
+plain ``dict`` of NEW result pairs per query (backward compatible) whose
+``.invalidated`` attribute carries the result pairs each negative tuple
+invalidated (the paper's §3.2 invalidation stream), previously computed by
+the engines but discarded.
 
 Fault tolerance: the service checkpoints engine state via
 checkpoint/ckpt.py — the batched dense group as one pytree of device
-arrays + interner/result metadata in the manifest, reference engines as
+arrays + interner/result metadata in the manifest (the manifest records
+the LIVE query set lane-by-lane and the label order), reference engines as
 pickled leaves — and can re-attach after a crash (tests/test_fault.py
-drives crash → restore → identical result stream).
+drives crash → restore → identical result stream). Restore matches lanes
+by query name and adjacency rows by label name, so a restoring service
+whose group has a different churn history (other bucketed-Q/K/label
+padding) re-pads the checkpoint onto its own capacities.
 """
 from __future__ import annotations
 
@@ -42,16 +60,28 @@ class QueryStats:
     latencies_us: Optional[List[float]] = None
 
 
+class IngestReport(Dict[str, Set[Tuple]]):
+    """New result pairs per query (a plain dict, so existing callers keep
+    working), with the deletion-invalidated pairs alongside in
+    :attr:`invalidated` (name -> set of (x, y) pairs a negative tuple
+    removed from the valid answer set)."""
+
+    def __init__(self, new: Dict[str, Set[Tuple]],
+                 invalidated: Dict[str, Set[Tuple]]):
+        super().__init__(new)
+        self.invalidated: Dict[str, Set[Tuple]] = invalidated
+
+
 class PersistentQueryService:
     def __init__(self, window: float, slide: float):
         self.window = float(window)
         self.slide = float(slide)
         # reference (pointer) engines, one per query
         self._ref_engines: Dict[str, object] = {}
-        # dense queries: name -> registration kwargs; grouped lazily
+        # dense queries: name -> registration kwargs; grouped lazily until
+        # first ingest, then the group is LIVE and mutated in place
         self._dense_specs: Dict[str, Dict] = {}
         self._group: Optional[BatchedDenseRPQEngine] = None
-        self._group_order: List[str] = []
         self._ingest_started = False
         self.stats: Dict[str, QueryStats] = {}
         self._next_expiry = slide
@@ -74,24 +104,77 @@ class PersistentQueryService:
         n_slots: int = 256,
         batch_size: int = 1,
         backend: str = "jnp",
-    ) -> None:
+    ) -> Set[Tuple]:
+        """Register a persistent query; works before AND after ingestion has
+        started. A dense registration into a live group re-pads device state
+        in place and seeds the query over the retained graph; its INITIAL
+        result pairs (valid over the current window) are returned — for all
+        other paths the returned set is empty.
+
+        Caveat: the FIRST dense query registered after ingestion has started
+        cannot be seeded (no dense group retained the graph; prefix content
+        seen only by reference engines is not recoverable) — its group is
+        materialized empty at registration and answers from this point of
+        the stream on."""
+        if name in self.stats and (name in self._dense_specs
+                                   or name in self._ref_engines):
+            raise ValueError(f"query {name!r} already registered")
         dfa = compile_query(expr)
+        initial: Set[Tuple] = set()
         if engine == "dense":
-            if self._ingest_started:
-                raise RuntimeError(
-                    "cannot add dense queries after ingestion started: the "
-                    "batched group state is live; snapshot, re-register, restore"
+            if self._group is not None and self._ingest_started:
+                # LIVE registration: the group's device state is re-padded
+                # in place; capacity kwargs (n_slots, batch_size, backend)
+                # all adopt the group's existing values
+                initial = self._group.register_query(
+                    RegisteredQuery(name, dfa, self.window, path_semantics)
                 )
-            self._dense_specs[name] = dict(
-                dfa=dfa, path_semantics=path_semantics, n_slots=n_slots,
-                batch_size=batch_size, backend=backend,
-            )
-            self._group = None  # rebuilt (empty) at next ingest/snapshot
+                self._dense_specs[name] = dict(
+                    dfa=dfa, path_semantics=path_semantics,
+                    n_slots=self._group.n_slots,
+                    batch_size=self._group.batch_size,
+                    backend=self._group.backend,
+                )
+            else:
+                self._dense_specs[name] = dict(
+                    dfa=dfa, path_semantics=path_semantics, n_slots=n_slots,
+                    batch_size=batch_size, backend=backend,
+                )
+                self._group = None  # rebuilt (empty) at next ingest/snapshot
+                if self._ingest_started:
+                    # FIRST dense query arriving mid-stream: no dense group
+                    # retained the graph, so there is nothing to seed from —
+                    # materialize the (empty) group NOW so the query starts
+                    # tracking the stream from this point on, rather than
+                    # silently deferring to the next ingest. Queries joining
+                    # an EXISTING group are seeded over the retained window
+                    # (the branch above); prefix content seen only by
+                    # reference engines is not recoverable.
+                    self._ensure_group()
         elif path_semantics == "simple":
             self._ref_engines[name] = RSPQ(dfa, self.window)
         else:
             self._ref_engines[name] = RAPQ(dfa, self.window)
-        self.stats[name] = QueryStats(latencies_us=[])
+        if name not in self.stats:  # a reused name keeps its history
+            self.stats[name] = QueryStats(latencies_us=[])
+        return initial
+
+    def deregister(self, name: str) -> None:
+        """Retire a persistent query mid-stream. Dense: the group lane
+        becomes inert padding (reclaimed by the next registration); the
+        remaining queries' result streams are unaffected. The stats entry is
+        kept as history."""
+        if name in self._dense_specs:
+            del self._dense_specs[name]
+            if self._group is not None:
+                if self._ingest_started:
+                    self._group.deregister_query(name)
+                else:
+                    self._group = None  # rebuilt without it at next ingest
+        elif name in self._ref_engines:
+            del self._ref_engines[name]
+        else:
+            raise KeyError(f"no registered query named {name!r}")
 
     def _ensure_group(self) -> None:
         if self._group is not None or not self._dense_specs:
@@ -111,13 +194,15 @@ class PersistentQueryService:
             batch_size=min(s["batch_size"] for s in self._dense_specs.values()),
             backend=backends.pop(),
         )
-        self._group_order = list(self._dense_specs)
 
-    def ingest(self, stream, record_latency: bool = False) -> Dict[str, Set[Tuple]]:
-        """Feed the whole stream; returns new result pairs per query."""
+    def ingest(self, stream, record_latency: bool = False) -> IngestReport:
+        """Feed the whole stream; returns an :class:`IngestReport`: the new
+        result pairs per query (dict interface), with the pairs invalidated
+        by explicit deletions alongside in ``.invalidated``."""
         self._ensure_group()
         self._ingest_started = True
         new_results: Dict[str, Set[Tuple]] = {name: set() for name in self.stats}
+        invalidated: Dict[str, Set[Tuple]] = {name: set() for name in self.stats}
         for sgt in stream:
             # lazy expiration at slide boundaries (eager evaluation)
             if sgt.ts >= self._next_expiry:
@@ -131,15 +216,18 @@ class PersistentQueryService:
                 t0 = time.perf_counter_ns() if record_latency else 0
                 if sgt.op == "+":
                     fresh = self._group.insert(sgt.src, sgt.dst, sgt.label, sgt.ts)
+                    inv = None
                 else:
-                    self._group.delete(sgt.src, sgt.dst, sgt.label, sgt.ts)
+                    inv = self._group.delete(sgt.src, sgt.dst, sgt.label, sgt.ts)
                     fresh = None
                 dt = (time.perf_counter_ns() - t0) / 1e3 if record_latency else 0.0
-                for qi, name in enumerate(self._group_order):
-                    st = self.stats[name]
+                for qi, spec in self._group.live_items():
+                    st = self.stats[spec.name]
                     st.tuples += 1
                     if fresh is not None:
-                        new_results[name] |= fresh[qi]
+                        new_results[spec.name] |= fresh[qi]
+                    if inv is not None:
+                        invalidated[spec.name] |= inv[qi]
                     if record_latency:
                         # one dispatch serves the whole group; each member
                         # observes the group's step latency
@@ -150,30 +238,32 @@ class PersistentQueryService:
                     res = eng.insert(sgt.src, sgt.dst, sgt.label, sgt.ts)
                     new_results[name] |= res
                 else:
-                    eng.delete(sgt.src, sgt.dst, sgt.label, sgt.ts)
+                    inv = eng.delete(sgt.src, sgt.dst, sgt.label, sgt.ts)
+                    if inv:
+                        invalidated[name] |= set(inv)
                 st = self.stats[name]
                 st.tuples += 1
                 if record_latency:
                     st.latencies_us.append((time.perf_counter_ns() - t0) / 1e3)
         for name in self.stats:
             st = self.stats[name]
-            st.results = len(self.results(name))
-            st.conflicted = self._conflicted(name)
+            if name in self._dense_specs or name in self._ref_engines:
+                st.results = len(self.results(name))
+                st.conflicted = self._conflicted(name)
             if st.latencies_us:
                 lat = sorted(st.latencies_us)
                 st.p99_us = lat[min(int(0.99 * len(lat)), len(lat) - 1)]
-        return new_results
+        return IngestReport(new_results, invalidated)
 
     def results(self, name: str) -> Set[Tuple]:
         if name in self._dense_specs:
             self._ensure_group()
-            qi = self._group_order.index(name)
-            return set(self._group.per_query_results[qi])
+            return set(self._group.per_query_results[self._group.lane_of(name)])
         return set(self._ref_engines[name].results)
 
     def _conflicted(self, name: str) -> bool:
         if name in self._dense_specs and self._group is not None:
-            return bool(self._group.per_query_conflicted[self._group_order.index(name)])
+            return bool(self._group.per_query_conflicted[self._group.lane_of(name)])
         eng = self._ref_engines.get(name)
         return bool(getattr(eng, "conflicts_detected", 0)) if eng else False
 
@@ -192,7 +282,12 @@ class PersistentQueryService:
         if self._group is not None:
             state["dense_group"] = self._group.state_arrays()
             extra["dense"] = {
-                "order": self._group_order,
+                # the LIVE query set, lane by lane (None = inert padding):
+                # restore matches lanes by name, so the restoring group may
+                # have a different bucketed-Q layout
+                "order": [s.name if s is not None else None
+                          for s in self._group.lane_specs],
+                "labels": list(self._group.labels),
                 "interner": self._group.interner_state(),
                 **self._group.results_state(),
             }
@@ -212,12 +307,13 @@ class PersistentQueryService:
         state, extra = ckpt.restore(directory, like=like)
         if self._group is not None:
             meta = extra["dense"]
-            if meta["order"] != self._group_order:
-                raise ValueError(
-                    f"checkpointed query set {meta['order']} does not match "
-                    f"registration order {self._group_order}"
-                )
-            self._group.load_state_arrays(state["dense_group"])
+            # lane-by-name adoption: tolerant of bucketed-Q/K/label padding
+            # differences; raises if the LIVE query sets differ
+            self._group.adopt_state(
+                state["dense_group"],
+                meta["order"],
+                meta.get("labels", list(self._group.labels)),
+            )
             self._group.load_interner(meta["interner"])
             self._group.load_results_state(meta)
         for name in self._ref_engines:

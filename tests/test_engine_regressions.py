@@ -1,0 +1,163 @@
+"""Regression tests for the PR-2 satellite bugfixes (each constructed to
+fail against the pre-fix engine):
+
+1. stream-clock lag on MIXED chunks: out-of-alphabet timestamps advanced
+   `now` only when the whole chunk was skipped, so read-time window
+   validity (`now - windows`) in a mixed chunk was computed against a
+   stale clock;
+2. mid-chunk compaction eviction: `_slot()` could trigger `compact()`
+   while a chunk was being packed, and a vertex interned earlier in the
+   same chunk (no adjacency entries yet) looked dead and was recycled —
+   its slot handed to a different vertex before the edge landed;
+3. interner checkpoint round-trip type guessing: string vertex ids like
+   "42" came back as int 42 after restore (and tuple vertices did not
+   survive at all), breaking crash -> restore -> identical-result-stream.
+"""
+import json
+import tempfile
+
+from repro.core import compile_query
+from repro.core.engine import DenseRPQEngine
+from repro.streaming.service import PersistentQueryService
+from repro.streaming.stream import SGT, Stream
+
+
+# -- 1. stream clock on mixed chunks ----------------------------------------
+
+
+def test_mixed_chunk_advances_stream_clock():
+    """A chunk mixing in-alphabet and out-of-alphabet tuples must advance
+    `now` from ALL event timestamps: the trailing foreign tuple at t=100
+    pushes every older pair out of the window, so the chunk's own
+    evaluation reports nothing."""
+    eng = DenseRPQEngine(compile_query("a"), window=5.0, n_slots=8,
+                         batch_size=4)
+    eng.insert(0, 1, "a", 1.0)
+    assert eng.current_results() == {(0, 1)}
+    fresh = eng.insert_batch([(2, 3, "a", 2.0), (7, 8, "zz", 100.0)])
+    assert float(eng.arrays.now) == 100.0
+    assert fresh == set()          # (2, 3)@2 expired at the chunk boundary
+    assert eng.current_results() == set()
+
+
+def test_whole_chunk_skipped_still_advances_clock():
+    """The already-working path (every tuple out-of-alphabet) keeps
+    working."""
+    eng = DenseRPQEngine(compile_query("a"), window=5.0, n_slots=8,
+                         batch_size=4)
+    eng.insert(0, 1, "a", 1.0)
+    eng.insert_batch([(7, 8, "zz", 50.0), (8, 9, "yy", 60.0)])
+    assert float(eng.arrays.now) == 60.0
+    assert eng.current_results() == set()
+
+
+# -- 2. mid-chunk compaction pinning -----------------------------------------
+
+
+def test_mid_chunk_compaction_preserves_chunk_vertices():
+    """n_slots=2, one stale vertex: packing edge (u, v) interns u into the
+    last free slot, then interning v triggers compact(). u has no adjacency
+    yet — pre-fix it was recycled as dead and v took its slot, turning the
+    edge into a (v, v) self-loop and dropping u from the interner."""
+    eng = DenseRPQEngine(compile_query("a"), window=5.0, n_slots=2,
+                         batch_size=4)
+    eng.insert("x", "x", "a", 1.0)
+    # advance the stream clock past x's window without recycling slots
+    # (a no-op negative tuple for an unknown vertex only bumps `now`)
+    eng.delete("ghost", "ghost", "a", 40.0)
+    fresh = eng.insert_batch([("u", "v", "a", 50.0)])
+    assert set(eng.slot_of) == {"u", "v"}
+    assert fresh == {("u", "v")}
+    assert eng.current_results() == {("u", "v")}
+
+
+def test_chunk_overflow_compaction_multi_edge_chunk():
+    """Multi-edge chunk at tiny n_slots: compaction fires while an earlier
+    edge of the SAME chunk is already packed; its endpoints (and the
+    just-interned vertex) stay pinned until the chunk lands."""
+    eng = DenseRPQEngine(compile_query("a+"), window=5.0, n_slots=3,
+                         batch_size=8)
+    eng.insert("o1", "o2", "a", 1.0)
+    eng.delete("ghost", "ghost", "a", 40.0)   # expire o1/o2 by clock only
+    # chunk interns p (last free slot), then q -> compact() fires with p
+    # adjacency-less; then r reuses a recycled slot
+    fresh = eng.insert_batch([("p", "q", "a", 50.0), ("q", "r", "a", 51.0)])
+    assert set(eng.slot_of) == {"p", "q", "r"}
+    assert eng.current_results() == {("p", "q"), ("q", "r"), ("p", "r")}
+    assert fresh == eng.current_results()
+
+
+# -- 3. interner checkpoint round-trip types ---------------------------------
+
+
+def test_interner_state_preserves_vertex_types():
+    """"42" (str), 42 (int), and a tuple id must all survive the JSON
+    manifest round trip with their exact types and slots."""
+    eng = DenseRPQEngine(compile_query("a"), window=100.0, n_slots=8,
+                         batch_size=1)
+    eng.insert("42", 42, "a", 1.0)
+    eng.insert(("p", 7), "x", "a", 2.0)
+    state = json.loads(json.dumps(eng.interner_state()))  # manifest trip
+    eng2 = DenseRPQEngine(compile_query("a"), window=100.0, n_slots=8,
+                          batch_size=1)
+    eng2.load_interner(state)
+    assert eng2.slot_of == eng.slot_of
+    assert set(eng2.slot_of) == {"42", 42, ("p", 7), "x"}
+    assert eng2.vertex_of == eng.vertex_of
+    assert sorted(eng2.free) == sorted(eng.free)
+
+
+def test_legacy_untyped_interner_still_loads():
+    """v1 manifests (flat str->slot dict) keep loading via the old
+    type-guessing path — including streams whose vertices are literally
+    named "format"/"entries" (v2 detection must not be fooled: v1 values
+    are int slots, never a list)."""
+    eng = DenseRPQEngine(compile_query("a"), window=100.0, n_slots=8,
+                         batch_size=1)
+    eng.load_interner({"7": 0, "name": 1})
+    assert eng.slot_of == {7: 0, "name": 1}
+    eng.load_interner({"format": 2, "entries": 3})
+    assert eng.slot_of == {"format": 2, "entries": 3}
+
+
+def test_results_state_roundtrip_tuple_and_numeric_string_vertices():
+    eng = DenseRPQEngine(compile_query("a"), window=100.0, n_slots=8,
+                         batch_size=1)
+    eng.insert("42", ("p", 7), "a", 1.0)
+    eng.insert(42, "42", "a", 2.0)
+    assert eng.results == {("42", ("p", 7)), (42, "42")}
+    state = json.loads(json.dumps(eng.results_state()))
+    eng2 = DenseRPQEngine(compile_query("a"), window=100.0, n_slots=8,
+                          batch_size=1)
+    eng2.load_results_state(state)
+    assert eng2.results == eng.results
+
+
+def test_restore_numeric_string_vertices_identical_stream():
+    """Service-level crash -> restore with NUMERIC-STRING vertex ids: the
+    re-attached run must produce the identical result stream (pre-fix the
+    restored interner held int 42 where the stream carries "42", so tail
+    edges re-interned fresh slots and the streams diverged)."""
+    tuples = [SGT(float(t), str(u), str(v), "a")
+              for t, (u, v) in enumerate(
+                  [(1, 2), (2, 3), (3, 4), (4, 5), (2, 6), (6, 7), (7, 2)],
+                  start=1)]
+    half = 4
+
+    def make():
+        svc = PersistentQueryService(window=100.0, slide=10.0)
+        svc.register("q", "a . a*", engine="dense", n_slots=16)
+        return svc
+
+    svc = make()
+    svc.ingest(Stream(tuples[:half]))
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        svc.snapshot(ckpt_dir, step=half)
+        tail_new = svc.ingest(Stream(tuples[half:]))
+        svc2 = make()
+        assert svc2.restore(ckpt_dir) == half
+        group = svc2.queries["q"]
+        assert all(isinstance(v, str) for v in group.slot_of)
+        tail_new2 = svc2.ingest(Stream(tuples[half:]))
+        assert tail_new2["q"] == tail_new["q"]
+        assert svc2.results("q") == svc.results("q")

@@ -77,10 +77,44 @@ def test_restore_rejects_mismatched_query_set():
             svc2.restore(ckpt_dir)
 
 
-def test_register_after_ingest_raises():
-    """The batched group's device state is live after the first sgt; late
-    dense registrations must fail loudly, not silently rebuild."""
+def test_register_after_ingest_is_live():
+    """PR 2: late dense registrations re-pad the live group in place (no
+    raise, no silent rebuild) — the new query immediately answers over the
+    retained window, and the pre-existing queries keep their state."""
     svc = _make_service()
     svc.ingest(Stream(_stream_tuples()[:20]))
-    with pytest.raises(RuntimeError):
-        svc.register("late", "a2q*", engine="dense")
+    before = {name: svc.results(name) for name in QUERY_NAMES}
+    initial = svc.register("late", "a2q*", engine="dense")
+    group = svc.queries["late"]
+    lane = group.lane_of("late")
+    # the initial result set IS the live-window snapshot for the new query
+    assert initial == group.current_results(lane)
+    assert svc.results("late") == initial
+    # pre-existing queries are untouched by the arrival
+    for name in QUERY_NAMES:
+        assert svc.results(name) == before[name], name
+
+
+def test_checkpoint_restore_with_churned_group():
+    """Snapshot a group that grew by a LIVE registration (bucketed-Q
+    padding), restore into a fresh service that registered the same final
+    query set up-front (different lane layout): restore matches lanes by
+    name and the tail result streams are identical."""
+    tuples = _stream_tuples()
+    half = len(tuples) // 2
+    svc = _make_service()
+    svc.ingest(Stream(tuples[:half]))
+    svc.register("late", "a2q . c2q*", engine="dense")
+    names = QUERY_NAMES + ["late"]
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        svc.snapshot(ckpt_dir, step=half)
+        tail_new = svc.ingest(Stream(tuples[half:]))
+        final = {name: svc.results(name) for name in names}
+
+        svc2 = _make_service()
+        svc2.register("late", "a2q . c2q*", engine="dense", n_slots=48)
+        assert svc2.restore(ckpt_dir) == half
+        tail_new2 = svc2.ingest(Stream(tuples[half:]))
+        for name in names:
+            assert tail_new2[name] == tail_new[name], name
+            assert svc2.results(name) == final[name], name

@@ -78,6 +78,20 @@ def test_distributed_engine_subprocess():
 
 
 @pytest.mark.slow
+def test_query_churn_benchmark():
+    """benchmarks/fig13_query_churn in the CI slow tier: queries register
+    and deregister mid-stream; per-event result-stream identity against
+    uninterrupted independents + fresh-group oracles is asserted inside."""
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.fig13_query_churn"],
+        capture_output=True, text=True, timeout=1200,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+    )
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "[ok]" in proc.stdout
+
+
+@pytest.mark.slow
 def test_dryrun_machinery_smoke():
     """Full dry-run protocol on one cell in a subprocess (512 host devices):
     lower + compile + memory/cost/collective scrape must all succeed."""
