@@ -12,7 +12,7 @@ import time
 
 from repro.core.automaton import compile_query
 from repro.core.batch import batch_rapq, snapshot_from_edges
-from repro.core.engine import DenseRPQEngine, _delete  # reuse machinery
+from repro.core.engine import DenseRPQEngine
 from repro.core.reference import RAPQ
 from repro.streaming.generators import yago_like
 

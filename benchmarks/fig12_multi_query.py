@@ -107,9 +107,13 @@ def run(n_queries: int = 8, n_edges: int = 600, n_vertices: int = 20,
     # --- per-query convergence masking: on the mixed-depth workload the
     # shallow queries converge (and are masked out) rounds before the
     # deepest member, so the summed per-query active rounds sit well below
-    # the unmasked Q x global-rounds regime
-    query_rounds = group.total_query_rounds
-    unmasked_rounds = group.n_queries * group.total_rounds
+    # the unmasked regime. Both counts come from the EXECUTOR (it is the
+    # only layer that knows what actually ran): re-deriving the unmasked
+    # side as n_queries * total_rounds double-counts after lane churn and
+    # silently mixes in seeding relaxes — the executor accumulates it
+    # per-dispatch with the live lane count at that moment.
+    query_rounds = group.executor.query_rounds_total
+    unmasked_rounds = group.executor.unmasked_query_rounds_total
 
     agg = n_queries * len(stream)
     speedup = wall_indep / wall_group

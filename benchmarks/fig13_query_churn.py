@@ -112,8 +112,11 @@ def run(n_edges: int = 450, n_vertices: int = 20, n_slots: int = 24,
     for lane, o in oracles.items():
         assert group.per_query_results[lane] == o.results
 
-    masked = group.total_query_rounds
-    unmasked = group.n_queries * group.total_rounds
+    # executor-level round accounting: n_queries * total_rounds would be
+    # WRONG here — the live lane count changed three times mid-stream, so
+    # only the per-dispatch accumulation in the executor is exact
+    masked = group.executor.query_rounds_total
+    unmasked = group.executor.unmasked_query_rounds_total
     emit("fig13/churn", wall / len(stream) * 1e6,
          f"events={len(stream)} churn=3 q_final={group.n_queries} "
          f"q_cap={group.q_cap} reg_ms={max(reg_ms):.1f} "

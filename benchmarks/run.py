@@ -15,8 +15,8 @@ def main() -> None:
 
     from . import (fig4_throughput, fig5_index_size, fig6_window,
                    fig7_query_size, fig10_deletions, fig11_vs_batch,
-                   fig12_multi_query, fig13_query_churn, roofline,
-                   table4_rspq)
+                   fig12_multi_query, fig13_query_churn,
+                   fig14_sharded_engine, roofline, table4_rspq)
 
     scale = 0.4 if args.fast else 1.0
     modules = [
@@ -29,6 +29,10 @@ def main() -> None:
         ("fig11", lambda: fig11_vs_batch.run(n_edges=int(400 * scale))),
         ("fig12", lambda: fig12_multi_query.run(n_edges=int(600 * scale))),
         ("fig13", lambda: fig13_query_churn.run(n_edges=int(450 * scale))),
+        # fig14 shards over THIS process's devices (one shard on a bare
+        # interpreter; run under XLA_FLAGS=--xla_force_host_platform_device_count=8
+        # for the real sharded point — the CI slow tier does)
+        ("fig14", lambda: fig14_sharded_engine.run(n_edges=int(400 * scale))),
         ("roofline", roofline.run),
     ]
     print("name,us_per_call,derived")

@@ -63,6 +63,21 @@ def tree_structure_of(tree: Any):
     return jax.tree_util.tree_structure(tree)
 
 
+def gather_leaf(leaf: Any) -> np.ndarray:
+    """Device -> host gather of one checkpoint leaf. Mesh-sharded arrays
+    (e.g. the dense RPQ group's (Q, N, N, K) state under MeshExecutor) are
+    reassembled into their LOGICAL value here — the manifest stores logical
+    arrays only, which is what makes a checkpoint written on one mesh
+    restorable onto another mesh or onto a single device (the restorer's
+    executor re-places them; see restore()'s `shardings`)."""
+    if isinstance(leaf, jax.Array) and not leaf.is_fully_addressable:
+        raise ValueError(
+            "cannot checkpoint a non-fully-addressable array from one "
+            "process; gather it (or checkpoint per-host shards) first"
+        )
+    return np.asarray(jax.device_get(leaf))
+
+
 def save(
     directory: str,
     step: int,
@@ -79,7 +94,7 @@ def save(
     arrays = {}
     meta = {}
     for key, leaf in flat.items():
-        arr = np.asarray(jax.device_get(leaf))
+        arr = gather_leaf(leaf)
         dtype_name = str(arr.dtype)
         if dtype_name in _VIEW_DTYPES:
             arr = arr.view(_VIEW_DTYPES[dtype_name][1])

@@ -11,6 +11,7 @@ Public API:
 from .automaton import DFA, compile_query
 from .batch import batch_rapq, batch_rspq_bruteforce, snapshot_from_edges, streaming_oracle
 from .engine import BatchedDenseRPQEngine, DenseRPQEngine, RegisteredQuery
+from .executor import Executor, LocalExecutor, QueryTables
 from .reference import RAPQ, RSPQ, SnapshotGraph
 
 __all__ = [
@@ -22,6 +23,9 @@ __all__ = [
     "BatchedDenseRPQEngine",
     "DenseRPQEngine",
     "RegisteredQuery",
+    "Executor",
+    "LocalExecutor",
+    "QueryTables",
     "batch_rapq",
     "batch_rspq_bruteforce",
     "snapshot_from_edges",

@@ -4,7 +4,24 @@ jitted program, and the query set is LIVE — queries register and deregister
 while the stream keeps flowing (the paper's persistent-query execution
 model, §2).
 
-State (all fixed-capacity, jit-static shapes between lifecycle events):
+Layering (PR 3): the engine is pure ORCHESTRATION — vertex interning, query
+lifecycle, result decoding, checkpoint metadata. Everything device-facing
+(state arrays, jitted dispatches, round accounting) lives behind the
+executor interface (:mod:`repro.core.executor`):
+
+    stream -> service -> engine -> executor -> semiring rounds -> kernels
+
+Two executors plug in: :class:`~repro.core.executor.LocalExecutor` (the
+single-device path, bit-identical to the pre-refactor engine) and
+:class:`~repro.distributed.executor.MeshExecutor` (Q lanes sharded over a
+device mesh with convergence-aware per-shard dispatch — converged/inert
+lanes finally SKIP their contraction work instead of being accounted and
+zeroed). Result streams are identical across executors (asserted by
+tests/test_executor.py and benchmarks/fig14_sharded_engine.py).
+
+State (all fixed-capacity, jit-static shapes between lifecycle events;
+capacities GROW at runtime — Q/K/label since PR 2, the vertex axis since
+this PR):
     adj     (L, N, N)    f32   newest edge timestamp per (label, u, v); -inf
                                none. L = |union alphabet| of ALL registered
                                queries — the stream is ingested ONCE, not
@@ -27,27 +44,30 @@ Q. Per-query windows are a (Q,) vector applied as read-time thresholds.
 
 Query lifecycle (beyond-paper, PR 2): the Q axis is a set of LANES.
 :meth:`register_query` works at any point of the stream — it re-pads device
-state in place (Q grows in buckets of 4, K to the new ``max_q k_q``, the
-label axis when the union alphabet expands; all growth is append-only so
-existing state keeps its indices and the jit cache is reused within a
-bucket), then seeds the new lane with one ``batched_closure`` pass over the
-EXISTING shared adjacency, so the query immediately answers over the live
-window (its initial valid pairs are returned and count as emitted).
+state in place (Q grows in buckets, K to the new ``max_q k_q``, the label
+axis when the union alphabet expands; all growth is append-only so existing
+state keeps its indices and the jit cache is reused within a bucket), then
+seeds the new lane with one closure pass over the EXISTING shared
+adjacency, so the query immediately answers over the live window (its
+initial valid pairs are returned and count as emitted).
 :meth:`deregister_query` clears the lane to inert padding; the next
-registration reclaims it. Capacities never shrink.
+registration reclaims it. Capacities never shrink. Lane capacity is rounded
+to the executor's ``q_multiple`` (1 locally; the lane-shard count on a
+mesh) so inert padding lands on whole shards the convergence mask skips.
 
-Per-query convergence masking: ``batched_closure`` masks each query out of
-the relaxation as soon as its own round produces no change (sound: a
-transition only ever reads its owning query's slices), so a converged
-query's lane settles — its slices pass through untouched and its round
-count stops accruing — instead of relaxing as a no-op until the slowest
-member finishes. On this dense single-device path the contraction itself
-is shape-static (the masked rows are computed then zeroed), so the
-realized win is ``total_query_rounds`` (sum of per-query ACTIVE rounds,
-reported by fig12 against the unmasked ``n_queries * total_rounds``
-regime) plus bounded closure work at registration (seeding relaxes only
-the new lane); the mask is also the hook the planned Q-sharded deployment
-needs to skip a converged lane's contraction for real.
+Vertex capacity (beyond-paper, this PR): ``n_slots`` grows on demand — when
+the interner runs out of live slots even after compaction, the vertex axes
+re-pad append-only (doubling, rounded to the executor's ``n_multiple``)
+instead of raising. Checkpoints restore across differing vertex capacities
+(the smaller side is padded; a larger checkpoint grows the engine first).
+
+Per-query convergence masking: the closure masks each query out of the
+relaxation as soon as its own round produces no change (sound: a transition
+only ever reads its owning query's slices), so a converged query's lane
+settles at ITS OWN fixpoint. On the dense single-device path the round is
+shape-static — the mask buys exact accounting (executor counters
+``query_rounds_total`` vs ``unmasked_query_rounds_total``) — while the mesh
+executor turns the same mask into skipped contractions per lane shard.
 
 Key property of the (max, min) formulation (beyond-paper, §Perf): *window
 expiry needs no index maintenance* — a pair is valid iff its bottleneck
@@ -78,7 +98,7 @@ Semantics vs the paper (B = micro-batch size, Q = #queries):
 """
 from __future__ import annotations
 
-import functools
+import math
 from typing import Dict, List, NamedTuple, Optional, Sequence, Set, Tuple
 
 import jax
@@ -86,13 +106,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from .automaton import DFA
-from .semiring import (
-    NEG_INF,
-    BatchedTransitionTable,
-    TransitionTable,
-    batched_closure,
-    batched_valid_pairs,
+from .executor import (
+    BatchedEngineArrays,
+    Executor,
+    LocalExecutor,
+    QueryTables,
+    init_batched_arrays,
 )
+from .semiring import NEG_INF, BatchedTransitionTable, TransitionTable
 
 Pair = Tuple[object, object]
 
@@ -124,124 +145,9 @@ class EngineArrays(NamedTuple):
     now: jnp.ndarray      # () f32
 
 
-class BatchedEngineArrays(NamedTuple):
-    adj: jnp.ndarray      # (L, N, N) f32 shared
-    dist: jnp.ndarray     # (Q, N, N, K) f32
-    emitted: jnp.ndarray  # (Q, N, N) bool
-    now: jnp.ndarray      # () f32
-
-
 def init_arrays(n_slots: int, n_labels: int, k: int) -> EngineArrays:
     b = init_batched_arrays(n_slots, n_labels, 1, k)
     return EngineArrays(b.adj, b.dist[0], b.emitted[0], b.now)
-
-
-def init_batched_arrays(
-    n_slots: int, n_labels: int, n_queries: int, k: int
-) -> BatchedEngineArrays:
-    return BatchedEngineArrays(
-        adj=jnp.full((n_labels, n_slots, n_slots), NEG_INF, jnp.float32),
-        dist=jnp.full((n_queries, n_slots, n_slots, k), NEG_INF, jnp.float32),
-        emitted=jnp.zeros((n_queries, n_slots, n_slots), bool),
-        now=jnp.asarray(NEG_INF, jnp.float32),
-    )
-
-
-# ---------------------------------------------------------------------------
-# jitted step functions (pure; BatchedTransitionTable & co. passed as consts)
-# ---------------------------------------------------------------------------
-
-
-@functools.partial(jax.jit, static_argnames=("backend",), donate_argnums=(0,))
-def _ingest(
-    arrays: BatchedEngineArrays,
-    src: jnp.ndarray,          # (B,) int32 slot ids
-    dst: jnp.ndarray,          # (B,) int32
-    lab: jnp.ndarray,          # (B,) int32 shared-alphabet label ids
-    ts: jnp.ndarray,           # (B,) f32
-    mask: jnp.ndarray,         # (B,) bool  (padding)
-    ts_floor: jnp.ndarray,     # () f32 max event time of the WHOLE chunk
-                               # (incl. out-of-alphabet tuples: the stream
-                               # clock must not lag on mixed chunks)
-    btt: BatchedTransitionTable,
-    finals_mask: jnp.ndarray,  # (Q, K) bool
-    windows: jnp.ndarray,      # (Q,) f32
-    live_mask: jnp.ndarray,    # (Q,) bool: False for inert padding lanes
-    backend: str = "jnp",
-):
-    eff_ts = jnp.where(mask, ts, NEG_INF)
-    adj = arrays.adj.at[lab, src, dst].max(eff_ts, mode="drop")
-    now = jnp.maximum(arrays.now, jnp.maximum(jnp.max(eff_ts), ts_floor))
-    dist, rounds, qrounds = batched_closure(
-        arrays.dist, adj, btt, backend, query_mask=live_mask
-    )
-    low = now - windows
-    valid = batched_valid_pairs(dist, finals_mask, low)
-    new = jnp.logical_and(valid, jnp.logical_not(arrays.emitted))
-    emitted = jnp.logical_or(arrays.emitted, valid)
-    return BatchedEngineArrays(adj, dist, emitted, now), new, rounds, qrounds
-
-
-@functools.partial(jax.jit, static_argnames=("backend",), donate_argnums=(0,))
-def _delete(
-    arrays: BatchedEngineArrays,
-    src: jnp.ndarray,          # (B,) int32
-    dst: jnp.ndarray,
-    lab: jnp.ndarray,
-    mask: jnp.ndarray,
-    ts_now: jnp.ndarray,       # () f32 event time of the negative tuple(s)
-    btt: BatchedTransitionTable,
-    finals_mask: jnp.ndarray,
-    windows: jnp.ndarray,
-    live_mask: jnp.ndarray,    # (Q,) bool
-    backend: str = "jnp",
-):
-    """Explicit deletion (negative tuple): clear adjacency entries and
-    recompute every query's closure from scratch — the paper's uniform
-    machinery (Delete -> ExpiryRAPQ re-derivation) in dense batched form."""
-    now = jnp.maximum(arrays.now, ts_now)
-    low = now - windows
-    valid_before = batched_valid_pairs(arrays.dist, finals_mask, low)
-    drop = jnp.where(mask, jnp.asarray(NEG_INF, jnp.float32), arrays.adj[lab, src, dst])
-    adj = arrays.adj.at[lab, src, dst].set(drop, mode="drop")
-    dist0 = jnp.full_like(arrays.dist, NEG_INF)
-    dist, rounds, qrounds = batched_closure(
-        dist0, adj, btt, backend, query_mask=live_mask
-    )
-    valid_after = batched_valid_pairs(dist, finals_mask, low)
-    invalidated = jnp.logical_and(valid_before, jnp.logical_not(valid_after))
-    return (BatchedEngineArrays(adj, dist, arrays.emitted, now),
-            invalidated, rounds, qrounds)
-
-
-@jax.jit
-def _expire(arrays: BatchedEngineArrays, tau: jnp.ndarray, max_window: jnp.ndarray):
-    """Lazy expiration at slide boundaries: mask dead adjacency entries and
-    report per-slot liveness for python-side slot recycling. Thresholded at
-    the group's LARGEST window (an edge live for any query stays); dist
-    needs no update (stale entries fall below each query's own read-time
-    validity threshold by construction)."""
-    now = jnp.maximum(arrays.now, tau)
-    low = now - max_window
-    adj = jnp.where(arrays.adj > low, arrays.adj, NEG_INF)
-    incident = jnp.maximum(
-        jnp.max(adj, axis=(0, 2)),  # outgoing per u
-        jnp.max(adj, axis=(0, 1)),  # incoming per v
-    )
-    live = incident > low
-    return BatchedEngineArrays(adj, arrays.dist, arrays.emitted, now), live
-
-
-@jax.jit
-def _clear_slots(arrays: BatchedEngineArrays, slots: jnp.ndarray):
-    """Zero out rows/cols of recycled slots (−inf / False) for ALL queries."""
-    adj = arrays.adj.at[:, slots, :].set(NEG_INF, mode="drop")
-    adj = adj.at[:, :, slots].set(NEG_INF, mode="drop")
-    dist = arrays.dist.at[:, slots, :, :].set(NEG_INF, mode="drop")
-    dist = dist.at[:, :, slots, :].set(NEG_INF, mode="drop")
-    emitted = arrays.emitted.at[:, slots, :].set(False, mode="drop")
-    emitted = emitted.at[:, :, slots].set(False, mode="drop")
-    return BatchedEngineArrays(adj, dist, emitted, arrays.now)
 
 
 @jax.jit
@@ -274,17 +180,60 @@ class RegisteredQuery(NamedTuple):
     path_semantics: str = "arbitrary"  # arbitrary | simple
 
 
+class PendingResults:
+    """Deferred result decoding for one :meth:`insert_batch_pending` call.
+
+    The device->host transfer of the emit frontier happens at
+    :meth:`resolve` time, so a caller (streaming/service.py's async path)
+    can dispatch the NEXT micro-batch before pulling the previous one's
+    results — the transfer overlaps device compute instead of blocking the
+    hot path. Each chunk snapshots the vertex interner (slot recycling
+    between dispatch and resolve must not remap decoded pairs). Handles
+    resolve in dispatch order (FIFO through the engine) so the monotone
+    per-query result sets dedup correctly; the engine drains outstanding
+    handles before any lane-set mutation (register/deregister/adopt)."""
+
+    def __init__(self, engine: "BatchedDenseRPQEngine", q_cap: int):
+        self._engine = engine
+        self._chunks: List[Tuple[object, List[Optional[object]], float]] = []
+        self._fresh: List[Set[Pair]] = [set() for _ in range(q_cap)]
+        self._decoded = False
+
+    def _add(self, new_dev, vertex_of: List[Optional[object]], t: float) -> None:
+        self._chunks.append((new_dev, vertex_of, t))
+
+    def _decode_chunks(self) -> None:
+        for new_dev, vertex_of, t in self._chunks:
+            self._engine._decode_new_into(
+                np.asarray(new_dev), vertex_of, t, self._fresh)
+        self._chunks.clear()
+        self._decoded = True
+
+    def resolve(self) -> List[Set[Pair]]:
+        """Per-lane NEW result pairs (idempotent; forces the host sync)."""
+        if not self._decoded:
+            self._engine._drain_pending(upto=self)
+        return self._fresh
+
+
 class BatchedDenseRPQEngine:
     """Q persistent RPQs over ONE stream, stepped as one jitted program.
 
     All queries share the vertex interner and the (L, N, N) adjacency over
     the union label alphabet; per-query closure state is stacked along the
     leading Q axis as LANES. The lane list (``lane_specs``) may contain
-    ``None`` holes — inert padding left by :meth:`deregister_query` or by
-    bucketed Q growth — which the next :meth:`register_query` reclaims.
-    Per-lane accessors (``per_query_results``, ``current_results``, the
-    lists returned by :meth:`insert_batch` / :meth:`delete`) are indexed by
-    lane; :meth:`lane_of` maps a query name to its lane.
+    ``None`` holes — inert padding left by :meth:`deregister_query`, by
+    bucketed Q growth, or by rounding to the executor's lane-shard count —
+    which the next :meth:`register_query` reclaims. Per-lane accessors
+    (``per_query_results``, ``current_results``, the lists returned by
+    :meth:`insert_batch` / :meth:`delete`) are indexed by lane;
+    :meth:`lane_of` maps a query name to its lane.
+
+    ``executor`` selects the device path: default
+    :class:`~repro.core.executor.LocalExecutor` (single device), or a
+    :class:`~repro.distributed.executor.MeshExecutor` for Q-sharded
+    execution with convergence-aware dispatch. The engine itself never
+    touches device arrays directly.
 
     Per-query ``path_semantics`` follows the single-engine contract:
     "simple" (RSPQ) uses the Mendelzon–Wood tractable class and flags
@@ -297,6 +246,7 @@ class BatchedDenseRPQEngine:
         n_slots: int = 128,
         batch_size: int = 32,
         backend: str = "jnp",
+        executor: Optional[Executor] = None,
     ):
         queries = list(queries)
         if not queries:
@@ -307,10 +257,15 @@ class BatchedDenseRPQEngine:
         names = [q.name for q in queries]
         if len(set(names)) != len(names):
             raise ValueError(f"duplicate query names: {names}")
+        self.executor = executor if executor is not None else LocalExecutor(backend)
+        self.backend = self.executor.backend
         self.lane_specs: List[Optional[RegisteredQuery]] = list(queries)
-        self.n_slots = n_slots
+        # round lane capacity to the executor's shard quantum (inert padding
+        # lanes; the convergence mask skips them wholesale)
+        pad = _round_up(len(queries), self.executor.q_multiple) - len(queries)
+        self.lane_specs.extend([None] * pad)
+        self.n_slots = _round_up(n_slots, self.executor.n_multiple)
         self.batch_size = batch_size
-        self.backend = backend
         # shared alphabet = union over queries; sorted at construction, new
         # labels APPEND at live registration (existing adj rows keep their
         # index — the ×4-rounded label slots absorb small growth)
@@ -322,24 +277,47 @@ class BatchedDenseRPQEngine:
         self.max_window = 0.0
         self._rebuild_tables()
         n_label_slots = _round_up(len(self.labels), LABEL_BUCKET)
-        self.batched_arrays = init_batched_arrays(
-            n_slots, n_label_slots, self.q_cap, self.k
-        )
+        self.executor.init_state(self.n_slots, n_label_slots, self.q_cap, self.k)
+        # host-side mirror of the device stream clock (decode timestamps
+        # without forcing a device sync; identical by construction — both
+        # advance by the max event time seen)
+        self._host_now = NEG_INF
         # vertex interning (shared across queries: the stream is one graph)
         self.slot_of: Dict[object, int] = {}
-        self.vertex_of: List[Optional[object]] = [None] * n_slots
-        self.free: List[int] = list(range(n_slots - 1, -1, -1))
+        self.vertex_of: List[Optional[object]] = [None] * self.n_slots
+        self.free: List[int] = list(range(self.n_slots - 1, -1, -1))
         # slots referenced by the chunk currently being packed: compaction
         # triggered mid-chunk must not recycle them (they may have no
         # adjacency yet and would otherwise look dead)
         self._chunk_pinned: Set[int] = set()
+        # deferred-decode FIFO (PendingResults handles not yet resolved)
+        self._pending_fifo: List[PendingResults] = []
         # per-lane results
         self.per_query_results: List[Set[Pair]] = [set() for _ in range(self.q_cap)]
         self.per_query_log: List[List[Tuple[float, Pair]]] = [[] for _ in range(self.q_cap)]
         self.per_query_conflicted: List[bool] = [False] * self.q_cap
-        self.total_rounds = 0        # global closure iterations (max over queries)
-        self.total_query_rounds = 0  # sum over queries of ACTIVE rounds (masked)
-        self.steps = 0  # jitted ingest/delete dispatches (the Q-sharing win)
+
+    # -- executor-backed accounting (back-compat surface) ---------------------
+
+    @property
+    def batched_arrays(self) -> BatchedEngineArrays:
+        """The device state (owned by the executor; read-only view)."""
+        return self.executor.arrays
+
+    @property
+    def total_rounds(self) -> int:
+        """Global closure iterations (max over queries per dispatch)."""
+        return self.executor.rounds_total
+
+    @property
+    def total_query_rounds(self) -> int:
+        """Sum over queries of ACTIVE rounds (convergence-masked)."""
+        return self.executor.query_rounds_total
+
+    @property
+    def steps(self) -> int:
+        """Jitted ingest/delete dispatches (the Q-sharing win)."""
+        return self.executor.steps
 
     # -- lane bookkeeping ----------------------------------------------------
 
@@ -399,6 +377,10 @@ class BatchedDenseRPQEngine:
         self.not_contained = jnp.asarray(nc)
         self.windows = jnp.asarray(windows)
         self.live_mask = jnp.asarray(live)
+        self.tables = QueryTables(
+            self.btt, self.finals_mask, self.windows, self.live_mask,
+            int(live.sum()),
+        )
         if live.any():
             self.max_window = float(windows[live].max())
         # else: keep the previous retention threshold — with no live queries
@@ -410,61 +392,45 @@ class BatchedDenseRPQEngine:
         capacities. Growth only — inert padding is reclaimable, never
         reshaped away — and append-only, so existing lanes/labels/states
         keep their indices and compiled steps are reused within a bucket."""
-        a = self.batched_arrays
-        n = self.n_slots
-        adj, dist, emitted = a.adj, a.dist, a.emitted
-        l_need = _round_up(len(self.labels), LABEL_BUCKET)
-        if l_need > adj.shape[0]:
-            adj = jnp.concatenate(
-                [adj, jnp.full((l_need - adj.shape[0], n, n), NEG_INF, jnp.float32)],
-                axis=0,
-            )
-        if self.k > dist.shape[3]:
-            dist = jnp.concatenate(
-                [dist, jnp.full(
-                    (dist.shape[0], n, n, self.k - dist.shape[3]),
-                    NEG_INF, jnp.float32)],
-                axis=3,
-            )
-        if self.q_cap > dist.shape[0]:
-            grow = self.q_cap - dist.shape[0]
-            dist = jnp.concatenate(
-                [dist, jnp.full((grow, n, n, dist.shape[3]), NEG_INF, jnp.float32)],
-                axis=0,
-            )
-            emitted = jnp.concatenate(
-                [emitted, jnp.zeros((grow, n, n), bool)], axis=0
-            )
-        self.batched_arrays = BatchedEngineArrays(adj, dist, emitted, a.now)
+        self.executor.grow(
+            q_cap=self.q_cap,
+            k=self.k,
+            n_label_slots=_round_up(len(self.labels), LABEL_BUCKET),
+        )
 
     # -- query lifecycle -----------------------------------------------------
 
     def register_query(self, spec: RegisteredQuery) -> Set[Pair]:
         """Add a persistent query to the LIVE group (works mid-stream).
 
-        Re-pads device state in place (Q bucketed to multiples of 4, K to
-        the new ``max_q k_q``, label axis on union-alphabet growth), then
-        seeds the new lane's closure with one ``batched_closure`` pass over
-        the existing shared adjacency — only the new lane relaxes; converged
-        lanes stay masked. Returns the query's INITIAL result pairs (valid
-        over the current window), which are recorded as emitted: the
-        subsequent result stream is identical to a freshly built group fed
-        the retained graph and then the tail of the stream.
+        Re-pads device state in place (Q bucketed, K to the new
+        ``max_q k_q``, label axis on union-alphabet growth), then seeds the
+        new lane's closure with one closure pass over the existing shared
+        adjacency — only the new lane relaxes; converged lanes stay masked
+        (on a mesh executor, whole shards skip). Returns the query's
+        INITIAL result pairs (valid over the current window), which are
+        recorded as emitted: the subsequent result stream is identical to a
+        freshly built group fed the retained graph and then the tail of the
+        stream.
         """
         if spec.dfa.containment is None:
             raise ValueError(f"compile query {spec.name!r} with compile_query()")
         if any(s is not None and s.name == spec.name for s in self.lane_specs):
             raise ValueError(f"query {spec.name!r} already registered")
+        self._drain_pending()
         # union alphabet growth: append-only
         for lab in sorted(spec.dfa.labels):
             if lab not in self._label_index:
                 self._label_index[lab] = len(self.labels)
                 self.labels = self.labels + (lab,)
-        # lane: reclaim an inert hole, else grow the Q axis to the next bucket
+        # lane: reclaim an inert hole, else grow the Q axis to the next
+        # bucket (rounded to the executor's lane-shard quantum)
         lane = next((i for i, s in enumerate(self.lane_specs) if s is None), None)
         if lane is None:
             lane = len(self.lane_specs)
-            new_cap = _round_up(lane + 1, Q_BUCKET)
+            q_quantum = Q_BUCKET * self.executor.q_multiple // math.gcd(
+                Q_BUCKET, self.executor.q_multiple)
+            new_cap = _round_up(lane + 1, q_quantum)
             grow = new_cap - lane
             self.lane_specs.extend([None] * grow)
             self.per_query_results.extend(set() for _ in range(grow))
@@ -474,13 +440,7 @@ class BatchedDenseRPQEngine:
         self._rebuild_tables()
         self._repad_arrays()
         # the lane may be a reclaimed hole: make sure it starts inert
-        a = self.batched_arrays
-        self.batched_arrays = BatchedEngineArrays(
-            a.adj,
-            a.dist.at[lane].set(NEG_INF),
-            a.emitted.at[lane].set(False),
-            a.now,
-        )
+        self.executor.clear_lane(lane)
         self.per_query_results[lane] = set()
         self.per_query_log[lane] = []
         self.per_query_conflicted[lane] = False
@@ -490,24 +450,17 @@ class BatchedDenseRPQEngine:
         # the new lane unmasked (every other lane is already at fixpoint)
         lane_mask = np.zeros((self.q_cap,), bool)
         lane_mask[lane] = True
-        a = self.batched_arrays
-        dist, rounds, qrounds = batched_closure(
-            a.dist, a.adj, self.btt, self.backend,
-            query_mask=jnp.asarray(lane_mask),
-        )
-        self.total_rounds += int(rounds)
-        self.total_query_rounds += int(qrounds.sum())
-        low = a.now - self.windows
-        valid = batched_valid_pairs(dist, self.finals_mask, low)
-        self.batched_arrays = BatchedEngineArrays(
-            a.adj, dist, a.emitted.at[lane].set(valid[lane]), a.now
-        )
+        self.executor.relax(self.tables, query_mask=lane_mask)
+        valid = self.executor.emit(self.tables)
+        self.executor.set_lane_emitted(lane, valid[lane])
         if self._check_conflict[lane]:
-            flags = np.asarray(_conflict_possible(dist, self.not_contained, low))
+            a = self.executor.arrays
+            low = a.now - self.windows
+            flags = np.asarray(_conflict_possible(a.dist, self.not_contained, low))
             if flags[lane]:
                 self.per_query_conflicted[lane] = True
         initial = self._decode_pairs(np.asarray(valid[lane]), bool(self._simple[lane]))
-        t = float(self.batched_arrays.now)
+        t = self._host_now
         for p in sorted(initial, key=repr):
             self.per_query_results[lane].add(p)
             self.per_query_log[lane].append((t, p))
@@ -518,18 +471,13 @@ class BatchedDenseRPQEngine:
         cleared, no transitions, window 0) reclaimable by the next
         :meth:`register_query`. Other lanes are untouched — their result
         streams are unaffected by the departure (tested). Capacities (Q, K,
-        labels) never shrink; if the departing query held the group's
-        largest window, the retention threshold tightens to the remaining
-        queries' maximum."""
+        labels, vertex slots) never shrink; if the departing query held the
+        group's largest window, the retention threshold tightens to the
+        remaining queries' maximum."""
         lane = self.lane_of(name)
+        self._drain_pending()
         self.lane_specs[lane] = None
-        a = self.batched_arrays
-        self.batched_arrays = BatchedEngineArrays(
-            a.adj,
-            a.dist.at[lane].set(NEG_INF),
-            a.emitted.at[lane].set(False),
-            a.now,
-        )
+        self.executor.clear_lane(lane)
         self.per_query_results[lane] = set()
         self.per_query_log[lane] = []
         self.per_query_conflicted[lane] = False
@@ -542,14 +490,29 @@ class BatchedDenseRPQEngine:
         if s is None:
             if not self.free:
                 self.compact()
-                if not self.free:
-                    raise RuntimeError(
-                        f"vertex capacity {self.n_slots} exhausted; raise n_slots"
-                    )
+            if not self.free:
+                # grow-on-demand (beyond-paper): double the vertex axis,
+                # rounded to the executor's vertex-shard quantum — the
+                # engine never raises on capacity mid-stream
+                self._grow_slots(
+                    _round_up(self.n_slots * 2, self.executor.n_multiple))
             s = self.free.pop()
             self.slot_of[vertex] = s
             self.vertex_of[s] = vertex
         return s
+
+    def _grow_slots(self, new_n: int) -> None:
+        """Append-only growth of the vertex axis (adj/dist/emitted re-pad;
+        slot indices survive, so the interner and any checkpoint metadata
+        remain valid)."""
+        if new_n <= self.n_slots:
+            return
+        self.executor.grow(n_slots=new_n)
+        old_n = self.n_slots
+        self.n_slots = new_n
+        self.vertex_of.extend([None] * (new_n - old_n))
+        # existing free slots keep priority (pop from the end)
+        self.free = list(range(new_n - 1, old_n - 1, -1)) + self.free
 
     # -- public API ----------------------------------------------------------
 
@@ -561,15 +524,23 @@ class BatchedDenseRPQEngine:
     ) -> List[Set[Pair]]:
         """Ingest a micro-batch of append sgts (timestamp-ordered). Returns
         the NEW result pairs per lane (list indexed like lane_specs)."""
-        out: List[Set[Pair]] = [set() for _ in range(self.q_cap)]
+        return self.insert_batch_pending(edges).resolve()
+
+    def insert_batch_pending(
+        self, edges: Sequence[Tuple[object, object, str, float]]
+    ) -> PendingResults:
+        """Like :meth:`insert_batch` but returns a :class:`PendingResults`
+        handle without forcing the device->host result transfer — the async
+        micro-batched decode path (the service overlaps the transfer with
+        the next ingest dispatch)."""
+        pending = PendingResults(self, self.q_cap)
+        self._pending_fifo.append(pending)
         B = self.batch_size
         for i in range(0, len(edges), B):
-            fresh = self._ingest_chunk(edges[i : i + B])
-            for qi in range(self.q_cap):
-                out[qi] |= fresh[qi]
-        return out
+            self._ingest_chunk(edges[i : i + B], pending)
+        return pending
 
-    def _ingest_chunk(self, edges) -> List[Set[Pair]]:
+    def _ingest_chunk(self, edges, pending: PendingResults) -> None:
         B = self.batch_size
         src = np.zeros((B,), np.int32)
         dst = np.zeros((B,), np.int32)
@@ -600,59 +571,51 @@ class BatchedDenseRPQEngine:
                 ts[j] = t
                 mask[j] = True
                 j += 1
+            self._host_now = max(self._host_now, chunk_now)
             if j == 0:
                 # still advance the clock
-                self.batched_arrays = self.batched_arrays._replace(
-                    now=jnp.maximum(
-                        self.batched_arrays.now,
-                        jnp.asarray(chunk_now, jnp.float32),
-                    )
-                )
-                return [set() for _ in range(self.q_cap)]
-            self.batched_arrays, new, rounds, qrounds = _ingest(
-                self.batched_arrays,
-                jnp.asarray(src), jnp.asarray(dst), jnp.asarray(lab),
-                jnp.asarray(ts), jnp.asarray(mask),
-                jnp.asarray(chunk_now, jnp.float32),
-                self.btt, self.finals_mask, self.windows, self.live_mask,
-                backend=self.backend,
+                self.executor.advance_clock(chunk_now)
+                return
+            new = self.executor.ingest_batch(
+                src, dst, lab, ts, mask, chunk_now, self.tables
             )
         finally:
             self._chunk_pinned.clear()
-        self.total_rounds += int(rounds)
-        self.total_query_rounds += int(qrounds.sum())
-        self.steps += 1
         if self._check_conflict.any():
-            low = self.batched_arrays.now - self.windows
-            flags = np.asarray(
-                _conflict_possible(self.batched_arrays.dist, self.not_contained, low)
-            )
+            a = self.executor.arrays
+            low = a.now - self.windows
+            flags = np.asarray(_conflict_possible(a.dist, self.not_contained, low))
             for qi in np.nonzero(flags & self._check_conflict)[0]:
                 self.per_query_conflicted[int(qi)] = True
-        return self._decode_new(new)
+        # decode deferred: snapshot the interner so later slot recycling
+        # cannot remap this chunk's pairs
+        pending._add(new, list(self.vertex_of), self._host_now)
+
+    def _drain_pending(self, upto: Optional[PendingResults] = None) -> None:
+        """Resolve outstanding deferred decodes in dispatch order (through
+        ``upto`` when given, else all)."""
+        while self._pending_fifo:
+            head = self._pending_fifo.pop(0)
+            head._decode_chunks()
+            if head is upto:
+                break
 
     def delete(self, u: object, v: object, label: str, ts: float) -> List[Set[Pair]]:
         """Explicit deletion (negative tuple). Returns invalidated pairs
         per lane."""
+        self._drain_pending()
+        self._host_now = max(self._host_now, ts)
         li = self._label_index.get(label)
         if li is None or u not in self.slot_of or v not in self.slot_of:
-            self.batched_arrays = self.batched_arrays._replace(
-                now=jnp.maximum(self.batched_arrays.now, jnp.asarray(ts, jnp.float32))
-            )
+            self.executor.advance_clock(ts)
             return [set() for _ in range(self.q_cap)]
-        src = jnp.asarray([self.slot_of[u]], jnp.int32)
-        dst = jnp.asarray([self.slot_of[v]], jnp.int32)
-        labj = jnp.asarray([li], jnp.int32)
-        mask = jnp.asarray([True])
-        self.batched_arrays, invalidated, rounds, qrounds = _delete(
-            self.batched_arrays, src, dst, labj, mask,
-            jnp.asarray(ts, jnp.float32),
-            self.btt, self.finals_mask, self.windows, self.live_mask,
-            backend=self.backend,
+        invalidated = self.executor.delete_batch(
+            np.asarray([self.slot_of[u]], np.int32),
+            np.asarray([self.slot_of[v]], np.int32),
+            np.asarray([li], np.int32),
+            np.asarray([True]),
+            ts, self.tables,
         )
-        self.total_rounds += int(rounds)
-        self.total_query_rounds += int(qrounds.sum())
-        self.steps += 1
         inv = np.asarray(invalidated)
         return [
             self._decode_pairs(inv[qi], bool(self._simple[qi]))
@@ -660,14 +623,13 @@ class BatchedDenseRPQEngine:
         ]
 
     def expire(self, tau: Optional[float] = None) -> None:
-        """Slide-boundary maintenance: adjacency masking + slot recycling."""
-        t = jnp.asarray(
-            tau if tau is not None else float(self.batched_arrays.now), jnp.float32
-        )
-        self.batched_arrays, live = _expire(
-            self.batched_arrays, t, jnp.asarray(self.max_window, jnp.float32)
-        )
-        self._recycle(np.asarray(live))
+        """Slide-boundary maintenance: adjacency masking + slot recycling.
+        Safe with deferred decodes outstanding (they snapshot the interner);
+        the device dispatch is sequenced after the pending ingests."""
+        t = tau if tau is not None else float(self.executor.arrays.now)
+        self._host_now = max(self._host_now, t)
+        live = self.executor.expire(t, self.max_window)
+        self._recycle(live)
 
     def compact(self) -> None:
         self.expire()
@@ -680,9 +642,7 @@ class BatchedDenseRPQEngine:
         ]
         if not dead_slots:
             return
-        self.batched_arrays = _clear_slots(
-            self.batched_arrays, jnp.asarray(dead_slots, jnp.int32)
-        )
+        self.executor.clear_slots(dead_slots)
         for s in dead_slots:
             vtx = self.vertex_of[s]
             self.vertex_of[s] = None
@@ -703,20 +663,24 @@ class BatchedDenseRPQEngine:
                 pairs.add((xv, vv))
         return pairs
 
-    def _decode_new(self, new: jnp.ndarray) -> List[Set[Pair]]:
-        """Per-lane pairs NEW to the monotone result set: after slot
-        recycling the emitted matrices forget old occupants, so the device
-        diff may resurface already-reported pairs — the python-side sets are
-        the source of truth for implicit-window monotonicity."""
-        arr = np.asarray(new)  # (Q, N, N) bool
-        t = float(self.batched_arrays.now)
-        fresh: List[Set[Pair]] = [set() for _ in range(self.q_cap)]
+    def _decode_new_into(
+        self,
+        arr: np.ndarray,                       # (Q, N, N) bool
+        vertex_of: List[Optional[object]],     # interner snapshot at dispatch
+        t: float,
+        fresh: List[Set[Pair]],
+    ) -> None:
+        """Merge per-lane pairs NEW to the monotone result set into `fresh`:
+        after slot recycling the emitted matrices forget old occupants, so
+        the device diff may resurface already-reported pairs — the
+        python-side sets are the source of truth for implicit-window
+        monotonicity."""
         qs, xs, vs = np.nonzero(arr)
         for q, x, v in zip(qs.tolist(), xs.tolist(), vs.tolist()):
             if self._simple[q] and x == v:
                 continue
-            xv = self.vertex_of[x]
-            vv = self.vertex_of[v]
+            xv = vertex_of[x]
+            vv = vertex_of[v]
             if xv is None or vv is None:
                 continue
             p = (xv, vv)
@@ -724,12 +688,10 @@ class BatchedDenseRPQEngine:
                 self.per_query_results[q].add(p)
                 self.per_query_log[q].append((t, p))
                 fresh[q].add(p)
-        return fresh
 
     def current_results(self, qi: int = 0) -> Set[Pair]:
         """Snapshot view (explicit-window semantics) for lane `qi`."""
-        low = self.batched_arrays.now - self.windows
-        valid = batched_valid_pairs(self.batched_arrays.dist, self.finals_mask, low)
+        valid = self.executor.emit(self.tables)
         return self._decode_pairs(np.asarray(valid[qi]), bool(self._simple[qi]))
 
     def retained_edges(self) -> List[Tuple[object, object, str, float]]:
@@ -740,7 +702,7 @@ class BatchedDenseRPQEngine:
         query, because the closure fixpoint depends only on the final
         adjacency: the oracle construction of the churn conformance tests
         and benchmarks/fig13_query_churn.py."""
-        adj = np.asarray(self.batched_arrays.adj)
+        adj = np.asarray(self.executor.arrays.adj)
         out: List[Tuple[object, object, str, float]] = []
         ls, us, vs = np.nonzero(adj > NEG_INF)
         for l, u, v in zip(ls.tolist(), us.tolist(), vs.tolist()):
@@ -757,8 +719,9 @@ class BatchedDenseRPQEngine:
     def index_size(self, qi: Optional[int] = None) -> Tuple[int, int]:
         """(active roots, populated (x,v,s) entries) — Fig. 5 analogue.
         `qi=None` aggregates over the whole group."""
-        low = np.asarray(self.batched_arrays.now - self.windows)  # (Q,)
-        pop = np.asarray(self.batched_arrays.dist) > low[:, None, None, None]
+        a = self.executor.arrays
+        low = np.asarray(a.now - self.windows)  # (Q,)
+        pop = np.asarray(a.dist) > low[:, None, None, None]
         if qi is not None:
             pop = pop[qi : qi + 1]
         roots = int(pop.any(axis=(2, 3)).sum())
@@ -767,17 +730,21 @@ class BatchedDenseRPQEngine:
     # -- state persistence (checkpoint/ckpt.py rides this) --------------------
 
     def state_arrays(self) -> Dict[str, jnp.ndarray]:
-        """The device state as one pytree (checkpointable as-is)."""
-        a = self.batched_arrays
+        """The device state as one pytree (checkpointable as-is; sharded
+        executors hand back globally-addressable arrays that device_get
+        gathers)."""
+        self._drain_pending()
+        a = self.executor.arrays
         return {"adj": a.adj, "dist": a.dist, "emitted": a.emitted, "now": a.now}
 
     def load_state_arrays(self, state: Dict[str, jnp.ndarray]) -> None:
         """Exact-shape reload (same capacities). For checkpoints written by
-        a group with a different churn history (other Q/K/label padding),
-        use :meth:`adopt_state`."""
-        self.batched_arrays = BatchedEngineArrays(
-            state["adj"], state["dist"], state["emitted"], state["now"]
-        )
+        a group with a different churn history (other Q/K/label/slot
+        padding), use :meth:`adopt_state`."""
+        self._drain_pending()
+        self.executor.place({k: np.asarray(jax.device_get(v))
+                             for k, v in state.items()})
+        self._host_now = float(np.asarray(jax.device_get(state["now"])))
 
     def adopt_state(
         self,
@@ -785,19 +752,25 @@ class BatchedDenseRPQEngine:
         lane_names: Sequence[Optional[str]],
         labels: Sequence[str],
     ) -> None:
-        """Load checkpointed device arrays whose Q/K/label capacities may
-        differ from this engine's (bucketed-Q padding, different churn
-        history). Lanes are matched by query NAME, adjacency rows by label
-        NAME; the live query sets must agree. Labels present only in the
-        checkpoint (e.g. retained from queries deregistered pre-snapshot)
-        are appended so the shared graph survives intact."""
-        adj_ck = np.asarray(state["adj"])
-        dist_ck = np.asarray(state["dist"])
-        emitted_ck = np.asarray(state["emitted"])
-        if adj_ck.shape[1] != self.n_slots:
-            raise ValueError(
-                f"checkpoint n_slots {adj_ck.shape[1]} != engine {self.n_slots}"
-            )
+        """Load checkpointed device arrays whose Q/K/label/vertex capacities
+        may differ from this engine's (bucketed-Q padding, different churn
+        history, a vertex axis that grew at runtime, a different executor's
+        shard quanta). Lanes are matched by query NAME, adjacency rows by
+        label NAME; slot indices are positional (the interner metadata
+        refers to them), so the smaller vertex capacity is padded and a
+        LARGER checkpoint grows this engine first. The live query sets must
+        agree. Labels present only in the checkpoint (e.g. retained from
+        queries deregistered pre-snapshot) are appended so the shared graph
+        survives intact. Works across executors: a mesh-written checkpoint
+        restores onto a local executor and vice versa (arrays are logical;
+        placement is the executor's concern)."""
+        self._drain_pending()
+        adj_ck = np.asarray(jax.device_get(state["adj"]))
+        dist_ck = np.asarray(jax.device_get(state["dist"]))
+        emitted_ck = np.asarray(jax.device_get(state["emitted"]))
+        ck_n = adj_ck.shape[1]
+        if ck_n > self.n_slots:
+            self._grow_slots(_round_up(ck_n, self.executor.n_multiple))
         ours = {spec.name: qi for qi, spec in self.live_items()}
         theirs = {name: qi for qi, name in enumerate(lane_names) if name is not None}
         if set(ours) != set(theirs):
@@ -811,11 +784,11 @@ class BatchedDenseRPQEngine:
                 self.labels = self.labels + (lab,)
         self._rebuild_tables()
         self._repad_arrays()
-        a = self.batched_arrays
+        a = self.executor.arrays
         n = self.n_slots
         adj = np.full(tuple(a.adj.shape), NEG_INF, np.float32)
         for li_ck, lab in enumerate(labels):
-            adj[self._label_index[lab]] = adj_ck[li_ck]
+            adj[self._label_index[lab], :ck_n, :ck_n] = adj_ck[li_ck]
         dist = np.full(tuple(a.dist.shape), NEG_INF, np.float32)
         emitted = np.zeros(tuple(a.emitted.shape), bool)
         # states beyond a lane's own dfa.k are provably -inf padding (no
@@ -823,12 +796,12 @@ class BatchedDenseRPQEngine:
         # everything real in either direction
         kk = min(dist_ck.shape[3], self.k)
         for name, qi in ours.items():
-            dist[qi, :, :, :kk] = dist_ck[theirs[name], :, :, :kk]
-            emitted[qi] = emitted_ck[theirs[name]]
-        self.batched_arrays = BatchedEngineArrays(
-            jnp.asarray(adj), jnp.asarray(dist), jnp.asarray(emitted),
-            jnp.asarray(np.float32(np.asarray(state["now"]))),
-        )
+            dist[qi, :ck_n, :ck_n, :kk] = dist_ck[theirs[name], :, :, :kk]
+            emitted[qi, :ck_n, :ck_n] = emitted_ck[theirs[name]]
+        now = np.float32(np.asarray(jax.device_get(state["now"])))
+        self.executor.place(
+            {"adj": adj, "dist": dist, "emitted": emitted, "now": now})
+        self._host_now = float(now)
 
     def interner_state(self) -> Dict[str, object]:
         """Vertex interner as JSON-able metadata with TYPE TAGS: string ids
@@ -861,6 +834,7 @@ class BatchedDenseRPQEngine:
         self.free = [s for s in range(self.n_slots - 1, -1, -1) if s not in used]
 
     def results_state(self) -> Dict[str, object]:
+        self._drain_pending()
         return {
             "format": 2,
             "results": {
@@ -958,10 +932,12 @@ class DenseRPQEngine(BatchedDenseRPQEngine):
         batch_size: int = 32,
         backend: str = "jnp",
         path_semantics: str = "arbitrary",
+        executor: Optional[Executor] = None,
     ):
         super().__init__(
             [RegisteredQuery("q0", dfa, float(window), path_semantics)],
             n_slots=n_slots, batch_size=batch_size, backend=backend,
+            executor=executor,
         )
         self.dfa = dfa
         self.window = float(window)
@@ -972,17 +948,18 @@ class DenseRPQEngine(BatchedDenseRPQEngine):
 
     @property
     def arrays(self) -> EngineArrays:
-        b = self.batched_arrays
+        b = self.executor.arrays
         return EngineArrays(b.adj, b.dist[0], b.emitted[0], b.now)
 
     @arrays.setter
     def arrays(self, a: EngineArrays) -> None:
-        self.batched_arrays = BatchedEngineArrays(
+        self.executor.set_arrays(BatchedEngineArrays(
             a.adj, a.dist[None], a.emitted[None], a.now
-        )
+        ))
 
     @property
     def results(self) -> Set[Pair]:
+        self._drain_pending()
         return self.per_query_results[0]
 
     @results.setter

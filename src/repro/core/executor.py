@@ -1,0 +1,397 @@
+"""Executor layer: everything device-facing of the batched dense RPQ engine.
+
+The engine (:mod:`repro.core.engine`) is pure orchestration — vertex
+interning, query lifecycle, result decoding, checkpoint metadata. The
+device state and every jitted dispatch live behind the narrow interface of
+:class:`Executor`:
+
+    ingest_batch / delete_batch   one dispatch per micro-batch
+    relax                         closure-to-fixpoint in place (lane seeding,
+                                  deletion re-derivation)
+    emit                          per-query window-valid pairs (device)
+    arrays / place / grow         state access, (re)placement, capacity growth
+    expire / clear_slots / ...    maintenance ops
+
+Two implementations:
+
+  * :class:`LocalExecutor` — the single-device path, bit-identical to the
+    pre-refactor engine (the jitted step functions here ARE the engine's
+    old ones, moved verbatim so the jit cache behaves the same).
+  * :class:`~repro.distributed.executor.MeshExecutor` — shards the
+    ``(Q, N, N, K)`` closure state over a device mesh (Q over ``data``,
+    optionally the vertex axis over ``model``) and keeps the per-query
+    convergence mask device-resident so converged/inert lanes skip their
+    contraction work per shard (convergence-aware dispatch).
+
+Round accounting also lives here (the executor is the only layer that
+knows what actually ran): ``rounds_total`` (global closure iterations),
+``query_rounds_total`` (sum over queries of ACTIVE rounds under the
+convergence mask), and ``unmasked_query_rounds_total`` (what the same
+dispatches would have cost with every live lane riding to the global
+fixpoint). Benchmarks read these counters instead of re-deriving them —
+re-derivation double-counted after lane churn. Counts are accumulated
+lazily (device scalars queued, converted on first read) so the streaming
+hot path never blocks on a host sync.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .semiring import (
+    NEG_INF,
+    BatchedTransitionTable,
+    batched_closure,
+    batched_valid_pairs,
+)
+
+
+class BatchedEngineArrays(NamedTuple):
+    adj: jnp.ndarray      # (L, N, N) f32 shared
+    dist: jnp.ndarray     # (Q, N, N, K) f32
+    emitted: jnp.ndarray  # (Q, N, N) bool
+    now: jnp.ndarray      # () f32
+
+
+def init_batched_arrays(
+    n_slots: int, n_labels: int, n_queries: int, k: int
+) -> BatchedEngineArrays:
+    return BatchedEngineArrays(
+        adj=jnp.full((n_labels, n_slots, n_slots), NEG_INF, jnp.float32),
+        dist=jnp.full((n_queries, n_slots, n_slots, k), NEG_INF, jnp.float32),
+        emitted=jnp.zeros((n_queries, n_slots, n_slots), bool),
+        now=jnp.asarray(NEG_INF, jnp.float32),
+    )
+
+
+class QueryTables(NamedTuple):
+    """Per-lane metadata the engine rebuilds at lifecycle events and the
+    executor consumes at every dispatch. ``n_live`` is the host-side live
+    lane count (for unmasked-regime round accounting)."""
+
+    btt: BatchedTransitionTable
+    finals_mask: jnp.ndarray  # (Q, K) bool
+    windows: jnp.ndarray      # (Q,) f32
+    live_mask: jnp.ndarray    # (Q,) bool
+    n_live: int
+
+
+# ---------------------------------------------------------------------------
+# jitted step functions (pure; shared across LocalExecutor instances so the
+# jit cache is process-wide, exactly as when they lived on the engine)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("backend",), donate_argnums=(0,))
+def _ingest(
+    arrays: BatchedEngineArrays,
+    src: jnp.ndarray,          # (B,) int32 slot ids
+    dst: jnp.ndarray,          # (B,) int32
+    lab: jnp.ndarray,          # (B,) int32 shared-alphabet label ids
+    ts: jnp.ndarray,           # (B,) f32
+    mask: jnp.ndarray,         # (B,) bool  (padding)
+    ts_floor: jnp.ndarray,     # () f32 max event time of the WHOLE chunk
+    btt: BatchedTransitionTable,
+    finals_mask: jnp.ndarray,  # (Q, K) bool
+    windows: jnp.ndarray,      # (Q,) f32
+    live_mask: jnp.ndarray,    # (Q,) bool: False for inert padding lanes
+    backend: str = "jnp",
+):
+    eff_ts = jnp.where(mask, ts, NEG_INF)
+    adj = arrays.adj.at[lab, src, dst].max(eff_ts, mode="drop")
+    now = jnp.maximum(arrays.now, jnp.maximum(jnp.max(eff_ts), ts_floor))
+    dist, rounds, qrounds = batched_closure(
+        arrays.dist, adj, btt, backend, query_mask=live_mask
+    )
+    low = now - windows
+    valid = batched_valid_pairs(dist, finals_mask, low)
+    new = jnp.logical_and(valid, jnp.logical_not(arrays.emitted))
+    emitted = jnp.logical_or(arrays.emitted, valid)
+    return BatchedEngineArrays(adj, dist, emitted, now), new, rounds, qrounds
+
+
+@functools.partial(jax.jit, static_argnames=("backend",), donate_argnums=(0,))
+def _delete(
+    arrays: BatchedEngineArrays,
+    src: jnp.ndarray,          # (B,) int32
+    dst: jnp.ndarray,
+    lab: jnp.ndarray,
+    mask: jnp.ndarray,
+    ts_now: jnp.ndarray,       # () f32 event time of the negative tuple(s)
+    btt: BatchedTransitionTable,
+    finals_mask: jnp.ndarray,
+    windows: jnp.ndarray,
+    live_mask: jnp.ndarray,    # (Q,) bool
+    backend: str = "jnp",
+):
+    """Explicit deletion (negative tuple): clear adjacency entries and
+    recompute every query's closure from scratch — the paper's uniform
+    machinery (Delete -> ExpiryRAPQ re-derivation) in dense batched form."""
+    now = jnp.maximum(arrays.now, ts_now)
+    low = now - windows
+    valid_before = batched_valid_pairs(arrays.dist, finals_mask, low)
+    drop = jnp.where(mask, jnp.asarray(NEG_INF, jnp.float32), arrays.adj[lab, src, dst])
+    adj = arrays.adj.at[lab, src, dst].set(drop, mode="drop")
+    dist0 = jnp.full_like(arrays.dist, NEG_INF)
+    dist, rounds, qrounds = batched_closure(
+        dist0, adj, btt, backend, query_mask=live_mask
+    )
+    valid_after = batched_valid_pairs(dist, finals_mask, low)
+    invalidated = jnp.logical_and(valid_before, jnp.logical_not(valid_after))
+    return (BatchedEngineArrays(adj, dist, arrays.emitted, now),
+            invalidated, rounds, qrounds)
+
+
+@jax.jit
+def _expire(arrays: BatchedEngineArrays, tau: jnp.ndarray, max_window: jnp.ndarray):
+    """Lazy expiration at slide boundaries: mask dead adjacency entries and
+    report per-slot liveness for python-side slot recycling. Thresholded at
+    the group's LARGEST window (an edge live for any query stays); dist
+    needs no update (stale entries fall below each query's own read-time
+    validity threshold by construction)."""
+    now = jnp.maximum(arrays.now, tau)
+    low = now - max_window
+    adj = jnp.where(arrays.adj > low, arrays.adj, NEG_INF)
+    incident = jnp.maximum(
+        jnp.max(adj, axis=(0, 2)),  # outgoing per u
+        jnp.max(adj, axis=(0, 1)),  # incoming per v
+    )
+    live = incident > low
+    return BatchedEngineArrays(adj, arrays.dist, arrays.emitted, now), live
+
+
+@jax.jit
+def _clear_slots(arrays: BatchedEngineArrays, slots: jnp.ndarray):
+    """Zero out rows/cols of recycled slots (−inf / False) for ALL queries."""
+    adj = arrays.adj.at[:, slots, :].set(NEG_INF, mode="drop")
+    adj = adj.at[:, :, slots].set(NEG_INF, mode="drop")
+    dist = arrays.dist.at[:, slots, :, :].set(NEG_INF, mode="drop")
+    dist = dist.at[:, :, slots, :].set(NEG_INF, mode="drop")
+    emitted = arrays.emitted.at[:, slots, :].set(False, mode="drop")
+    emitted = emitted.at[:, :, slots].set(False, mode="drop")
+    return BatchedEngineArrays(adj, dist, emitted, arrays.now)
+
+
+# ---------------------------------------------------------------------------
+# Executor base = the single-device (local) implementation
+# ---------------------------------------------------------------------------
+
+
+class Executor:
+    """Device-facing half of :class:`~repro.core.engine.BatchedDenseRPQEngine`.
+
+    Owns the :class:`BatchedEngineArrays` state, every jitted dispatch over
+    it, and the round accounting. Capacity quanta (``q_multiple`` for the
+    lane axis, ``n_multiple`` for the vertex axis) tell the engine what
+    granularity this executor can shard: the engine rounds its capacities
+    up to them (1 for the local path; the data/model mesh extents for
+    :class:`~repro.distributed.executor.MeshExecutor`).
+    """
+
+    q_multiple: int = 1
+    n_multiple: int = 1
+
+    def __init__(self, backend: str = "jnp"):
+        self.backend = backend
+        self.steps = 0  # jitted ingest/delete dispatches
+        self._arrays: Optional[BatchedEngineArrays] = None
+        # (rounds_dev, qrounds_dev, n_live) queue: converted lazily so the
+        # per-dispatch hot path never blocks on a device->host sync
+        self._pending_counts: List[Tuple[object, object, int]] = []
+        self._rounds_total = 0
+        self._query_rounds_total = 0
+        self._unmasked_query_rounds_total = 0
+
+    # -- state ---------------------------------------------------------------
+
+    def init_state(self, n_slots: int, n_label_slots: int, q_cap: int, k: int) -> None:
+        # through place() so subclasses apply their sharding from the very
+        # first array (a mesh executor must never materialize the full
+        # state on one device)
+        self.place({
+            "adj": np.full((n_label_slots, n_slots, n_slots), NEG_INF, np.float32),
+            "dist": np.full((q_cap, n_slots, n_slots, k), NEG_INF, np.float32),
+            "emitted": np.zeros((q_cap, n_slots, n_slots), bool),
+            "now": np.float32(NEG_INF),
+        })
+
+    @property
+    def arrays(self) -> BatchedEngineArrays:
+        """The device state (global logical view; np.asarray gathers it)."""
+        return self._arrays
+
+    def set_arrays(self, arrays: BatchedEngineArrays) -> None:
+        self._arrays = arrays
+
+    def place(self, state: Dict[str, object]) -> None:
+        """(Re)place host arrays as this executor's device state — the
+        checkpoint-restore entry point (engine.adopt_state builds the
+        host-side layout, the executor owns placement/sharding)."""
+        self.set_arrays(BatchedEngineArrays(
+            self._put(np.asarray(state["adj"], np.float32), "adj"),
+            self._put(np.asarray(state["dist"], np.float32), "dist"),
+            self._put(np.asarray(state["emitted"], bool), "emitted"),
+            self._put(np.asarray(state["now"], np.float32), "now"),
+        ))
+
+    def _put(self, arr: np.ndarray, name: str):
+        return jnp.asarray(arr)
+
+    def grow(self, *, n_slots: Optional[int] = None, q_cap: Optional[int] = None,
+             k: Optional[int] = None, n_label_slots: Optional[int] = None) -> None:
+        """Grow device state in place (append-only padding: -inf / False).
+        Existing lanes/labels/slots/states keep their indices. Shrinking is
+        never performed; passing a smaller capacity is a no-op."""
+        a = self._arrays
+        # no-op check on shape metadata FIRST: the common lifecycle event
+        # (reclaiming an inert lane) must not pay a device->host gather
+        l_old, n_old = a.adj.shape[0], a.adj.shape[1]
+        q_old, k_old = a.dist.shape[0], a.dist.shape[3]
+        n_new = max(n_slots or 0, n_old)
+        l_new = max(n_label_slots or 0, l_old)
+        q_new = max(q_cap or 0, q_old)
+        k_new = max(k or 0, k_old)
+        if (n_new, l_new, q_new, k_new) == (n_old, l_old, q_old, k_old):
+            return
+        adj = np.asarray(jax.device_get(a.adj))
+        dist = np.asarray(jax.device_get(a.dist))
+        emitted = np.asarray(jax.device_get(a.emitted))
+        adj2 = np.full((l_new, n_new, n_new), NEG_INF, np.float32)
+        adj2[:l_old, :n_old, :n_old] = adj
+        dist2 = np.full((q_new, n_new, n_new, k_new), NEG_INF, np.float32)
+        dist2[:q_old, :n_old, :n_old, :k_old] = dist
+        emitted2 = np.zeros((q_new, n_new, n_new), bool)
+        emitted2[:q_old, :n_old, :n_old] = emitted
+        self.place({"adj": adj2, "dist": dist2, "emitted": emitted2,
+                    "now": np.asarray(jax.device_get(a.now))})
+
+    # -- dispatches ----------------------------------------------------------
+
+    def ingest_batch(self, src, dst, lab, ts, mask, ts_floor: float,
+                     tables: QueryTables):
+        """One jitted ingest dispatch for the whole query group. Returns the
+        per-query NEW-validity matrix as a DEVICE array (the engine decodes
+        it, possibly deferred so the transfer overlaps the next dispatch)."""
+        self._arrays, new, rounds, qrounds = _ingest(
+            self._arrays,
+            jnp.asarray(src), jnp.asarray(dst), jnp.asarray(lab),
+            jnp.asarray(ts), jnp.asarray(mask),
+            jnp.asarray(ts_floor, jnp.float32),
+            tables.btt, tables.finals_mask, tables.windows, tables.live_mask,
+            backend=self.backend,
+        )
+        self._account(rounds, qrounds, tables.n_live)
+        self.steps += 1
+        return new
+
+    def delete_batch(self, src, dst, lab, mask, ts_now: float,
+                     tables: QueryTables):
+        """Explicit deletion dispatch; returns the invalidated-pairs matrix
+        (device)."""
+        self._arrays, invalidated, rounds, qrounds = _delete(
+            self._arrays,
+            jnp.asarray(src), jnp.asarray(dst), jnp.asarray(lab),
+            jnp.asarray(mask), jnp.asarray(ts_now, jnp.float32),
+            tables.btt, tables.finals_mask, tables.windows, tables.live_mask,
+            backend=self.backend,
+        )
+        self._account(rounds, qrounds, tables.n_live)
+        self.steps += 1
+        return invalidated
+
+    def relax(self, tables: QueryTables,
+              query_mask: Optional[np.ndarray] = None) -> None:
+        """Run the batched closure to fixpoint in place (no adjacency
+        change): lane seeding at registration (``query_mask`` = just the new
+        lane) or any state re-derivation."""
+        a = self._arrays
+        mask = tables.live_mask if query_mask is None else jnp.asarray(
+            np.asarray(query_mask, bool))
+        dist, rounds, qrounds = batched_closure(
+            a.dist, a.adj, tables.btt, self.backend, query_mask=mask
+        )
+        self._arrays = a._replace(dist=dist)
+        self._account(rounds, qrounds, tables.n_live)
+
+    def emit(self, tables: QueryTables) -> jnp.ndarray:
+        """(Q, N, N) bool device matrix of pairs valid over each query's
+        window at the current stream clock."""
+        a = self._arrays
+        low = a.now - tables.windows
+        return batched_valid_pairs(a.dist, tables.finals_mask, low)
+
+    def expire(self, tau: float, max_window: float) -> np.ndarray:
+        self._arrays, live = _expire(
+            self._arrays, jnp.asarray(tau, jnp.float32),
+            jnp.asarray(max_window, jnp.float32),
+        )
+        return np.asarray(live)
+
+    def clear_slots(self, slots: Sequence[int]) -> None:
+        self._arrays = _clear_slots(
+            self._arrays, jnp.asarray(list(slots), jnp.int32)
+        )
+
+    def clear_lane(self, lane: int) -> None:
+        a = self._arrays
+        self._arrays = a._replace(
+            dist=a.dist.at[lane].set(NEG_INF),
+            emitted=a.emitted.at[lane].set(False),
+        )
+
+    def set_lane_emitted(self, lane: int, valid_lane: jnp.ndarray) -> None:
+        a = self._arrays
+        self._arrays = a._replace(emitted=a.emitted.at[lane].set(valid_lane))
+
+    def advance_clock(self, ts: float) -> None:
+        a = self._arrays
+        self._arrays = a._replace(
+            now=jnp.maximum(a.now, jnp.asarray(ts, jnp.float32))
+        )
+
+    # -- round accounting ----------------------------------------------------
+
+    def _account(self, rounds, qrounds, n_live: int) -> None:
+        self._pending_counts.append((rounds, qrounds, n_live))
+        if len(self._pending_counts) >= 256:
+            self._flush_counts()
+
+    def _flush_counts(self) -> None:
+        for rounds, qrounds, n_live in self._pending_counts:
+            self._consume_count(rounds, qrounds, n_live)
+        self._pending_counts.clear()
+
+    def _consume_count(self, rounds, qrounds, n_live: int) -> None:
+        r = int(np.asarray(rounds))
+        self._rounds_total += r
+        self._query_rounds_total += int(np.asarray(qrounds).sum())
+        self._unmasked_query_rounds_total += n_live * r
+
+    @property
+    def rounds_total(self) -> int:
+        """Global closure iterations (each dispatch's loop runs until its
+        slowest participating query converges)."""
+        self._flush_counts()
+        return self._rounds_total
+
+    @property
+    def query_rounds_total(self) -> int:
+        """Sum over queries of ACTIVE rounds (per-query convergence mask)."""
+        self._flush_counts()
+        return self._query_rounds_total
+
+    @property
+    def unmasked_query_rounds_total(self) -> int:
+        """What the same dispatches would cost with every live lane riding
+        to the global fixpoint — accumulated with the live count at each
+        dispatch, so mid-stream lane churn cannot skew the comparison."""
+        self._flush_counts()
+        return self._unmasked_query_rounds_total
+
+
+class LocalExecutor(Executor):
+    """Single-device executor: the pre-refactor engine behavior, verbatim."""

@@ -22,7 +22,7 @@ Three interchangeable contraction back-ends:
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Optional, Sequence, Tuple
+from typing import List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -342,3 +342,187 @@ def batched_valid_pairs(
     acc = jnp.where(finals[:, None, None, :], dist, NEG_INF)
     best = jnp.max(acc, axis=3)
     return best > low[:, None, None]
+
+
+# ---------------------------------------------------------------------------
+# Sharded (shard_map-local) round variants
+#
+# The mesh executor (distributed/executor.py) shards the Q lane axis over
+# the mesh's data axis and (optionally) the vertex axis over model. Inside
+# a shard_map block each shard sees dist (Q_l, N, N_m, K) plus ONLY its own
+# queries' transition rows, relaxes them to ITS OWN fixpoint, and skips the
+# contraction entirely once its lanes have all converged — the realized form
+# of the per-query convergence masking that the dense single-device round
+# could only account for (batched_relax_round docstring). The row layout is
+# built host-side by `shard_transitions`.
+# ---------------------------------------------------------------------------
+
+
+def shard_transitions(
+    btt: BatchedTransitionTable, q_cap: int, n_shards: int, j_bucket: int = 8
+) -> Tuple[jnp.ndarray, ...]:
+    """Regroup a flattened transition table by lane shard.
+
+    Lanes are block-partitioned: shard i owns lanes [i*q_cap/n_shards,
+    (i+1)*q_cap/n_shards). Returns six (n_shards, J_s) arrays — qidx
+    (SHARD-LOCAL lane index), src, lab, dst, start_mask, active — with J_s
+    the bucketed max row count over shards (padding rows inert). ``q_cap``
+    must be a multiple of ``n_shards`` (the engine rounds lane capacity to
+    the executor's ``q_multiple``).
+    """
+    if q_cap % n_shards:
+        raise ValueError(f"q_cap {q_cap} not divisible by {n_shards} shards")
+    q_shard = q_cap // n_shards
+    qidx = np.asarray(btt.qidx)
+    active = np.asarray(btt.active)
+    src = np.asarray(btt.src)
+    lab = np.asarray(btt.lab)
+    dst = np.asarray(btt.dst)
+    start = np.asarray(btt.start_mask)
+    rows: List[List[int]] = [[] for _ in range(n_shards)]
+    for j in np.nonzero(active)[0].tolist():
+        rows[int(qidx[j]) // q_shard].append(j)
+    j_max = max([len(r) for r in rows] + [1])
+    j_s = max(j_max + (-j_max) % j_bucket, j_bucket)
+    out = {
+        "qidx": np.zeros((n_shards, j_s), np.int32),
+        "src": np.zeros((n_shards, j_s), np.int32),
+        "lab": np.zeros((n_shards, j_s), np.int32),
+        "dst": np.zeros((n_shards, j_s), np.int32),
+        "start": np.zeros((n_shards, j_s), bool),
+        "active": np.zeros((n_shards, j_s), bool),
+    }
+    for sh, row_ids in enumerate(rows):
+        for jj, j in enumerate(row_ids):
+            out["qidx"][sh, jj] = qidx[j] - sh * q_shard
+            out["src"][sh, jj] = src[j]
+            out["lab"][sh, jj] = lab[j]
+            out["dst"][sh, jj] = dst[j]
+            out["start"][sh, jj] = start[j]
+            out["active"][sh, jj] = True
+    return (jnp.asarray(out["qidx"]), jnp.asarray(out["src"]),
+            jnp.asarray(out["lab"]), jnp.asarray(out["dst"]),
+            jnp.asarray(out["start"]), jnp.asarray(out["active"]))
+
+
+def shard_relax_round(
+    dist_blk: jnp.ndarray,     # (Q_l, N, N_m, K) shard-local lane block
+    adj_u: jnp.ndarray,        # (L, N_m, N) adjacency, u rows local
+    adj_v: jnp.ndarray,        # (L, N, N_m) adjacency, v cols local
+    qidx: jnp.ndarray,         # (J_s,) SHARD-LOCAL owning lane
+    src: jnp.ndarray,          # (J_s,)
+    lab: jnp.ndarray,          # (J_s,)
+    dst: jnp.ndarray,          # (J_s,)
+    start_mask: jnp.ndarray,   # (J_s,)
+    active: jnp.ndarray,       # (J_s,)
+    query_mask: jnp.ndarray,   # (Q_l,) bool, True = relax
+    backend: str = "jnp",
+    model_axis: Optional[str] = None,
+    model_size: int = 1,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One relaxation round on one lane shard (shard_map-local).
+
+    The u-contraction runs over the shard's LOCAL u-block; when the vertex
+    axis is sharded (``model_size > 1``) the per-block partials are
+    max-combined across ``model_axis`` (exact: max is associative) and the
+    shard keeps its v-column block. Returns ``(new_dist_blk, changed)``
+    with ``changed`` (Q_l,) synchronized across the model axis so every
+    peer of a lane shard agrees on convergence (uniform loop trip counts —
+    the condition that makes collectives inside the closure loop safe).
+
+    Masking semantics mirror :func:`batched_relax_round` exactly: masked
+    lanes contribute the semiring zero and pass through untouched.
+    """
+    q_l, n, n_m, k = dist_blk.shape
+    act = jnp.logical_and(active, query_mask[qidx])
+    d_s = dist_blk[qidx, :, :, src]               # (J, N, N_m) [x, u_local]
+    a_u = adj_u[lab]                              # (J, N_m, N) [u_local, v]
+    part = _contract_batched(d_s, a_u, backend)   # (J, N, N)   [x, v] partial
+    if model_axis is not None and model_size > 1:
+        part = jax.lax.pmax(part, model_axis)
+        vstart = jax.lax.axis_index(model_axis) * n_m
+        contrib = jax.lax.dynamic_slice(
+            part, (0, 0, vstart), (part.shape[0], n, n_m))
+    else:
+        contrib = part
+    # base term: seed (x, x, s0) = +inf => min(+inf, adj[l, x, v]) = adj
+    a_v = adj_v[lab]                              # (J, N, N_m)
+    contrib = jnp.where(start_mask[:, None, None],
+                        jnp.maximum(contrib, a_v), contrib)
+    contrib = jnp.where(act[:, None, None], contrib, NEG_INF)
+    seg = qidx * k + dst
+    scat = jax.ops.segment_max(contrib, seg, num_segments=q_l * k)
+    upd = jnp.transpose(scat.reshape(q_l, k, n, n_m), (0, 2, 3, 1))
+    nd = jnp.maximum(dist_blk, upd)
+    nd = jnp.where(query_mask[:, None, None, None], nd, dist_blk)
+    changed = jnp.any(nd > dist_blk, axis=(1, 2, 3))
+    if model_axis is not None and model_size > 1:
+        changed = jax.lax.pmax(changed.astype(jnp.int32), model_axis) > 0
+    return nd, changed
+
+
+def shard_closure(
+    dist_blk: jnp.ndarray,
+    adj_u: jnp.ndarray,
+    adj_v: jnp.ndarray,
+    rows: Tuple[jnp.ndarray, ...],   # six (J_s,) arrays (shard_transitions)
+    query_mask: jnp.ndarray,         # (Q_l,) bool initial mask
+    backend: str = "jnp",
+    model_axis: Optional[str] = None,
+    model_size: int = 1,
+    max_rounds: int = 0,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Shard-local closure with convergence-aware dispatch.
+
+    A shard whose lanes are all masked (converged or inert padding) SKIPS
+    the closure entirely (`lax.cond`) — zero contraction work, the win the
+    single-device masked round could only account for. Otherwise the shard
+    iterates to its OWN fixpoint: its loop ends when its slowest lane
+    settles, independent of other shards (no cross-shard data flow — a
+    transition only reads its owning lane's slices and the adjacency, which
+    is constant during the closure).
+
+    Returns ``(dist_blk, rounds, query_rounds)``: ``rounds`` () int32 is
+    the rounds THIS shard actually relaxed (0 when skipped — the per-shard
+    skip/finish-early signal the mesh executor aggregates into its
+    masked-skip counters), ``query_rounds`` (Q_l,) matches the local
+    engine's per-lane accounting.
+    """
+    qidx, src, lab, dst, start, active = rows
+    q_l, n, _n_m, k = dist_blk.shape
+    bound = max_rounds if max_rounds > 0 else n * k + 1
+
+    def one_round(d, mask):
+        return shard_relax_round(
+            d, adj_u, adj_v, qidx, src, lab, dst, start, active, mask,
+            backend=backend, model_axis=model_axis, model_size=model_size)
+
+    def run(_):
+        d0, ch0 = one_round(dist_blk, query_mask)
+        m0 = jnp.logical_and(query_mask, ch0)
+        qr0 = query_mask.astype(jnp.int32)
+        it0 = jnp.asarray(1, jnp.int32)
+
+        def cond(carry):
+            return carry[4]
+
+        def body(carry):
+            d, mask, it, qr, _keep = carry
+            nd, ch = one_round(d, mask)
+            nmask = jnp.logical_and(mask, ch)
+            it = it + 1
+            keep = jnp.logical_and(jnp.any(nmask), it < bound)
+            return nd, nmask, it, qr + mask.astype(jnp.int32), keep
+
+        keep0 = jnp.logical_and(jnp.any(m0), it0 < bound)
+        d_f, _, it_f, qr_f, _ = jax.lax.while_loop(
+            cond, body, (d0, m0, it0, qr0, keep0))
+        return d_f, it_f, qr_f
+
+    def skip(_):
+        return (dist_blk, jnp.asarray(0, jnp.int32),
+                jnp.zeros((q_l,), jnp.int32))
+
+    # uniform across the model peers of this lane shard (query_mask is
+    # replicated along model), so collectives inside `run` stay safe
+    return jax.lax.cond(jnp.any(query_mask), run, skip, None)

@@ -1,0 +1,346 @@
+"""MeshExecutor: the batched dense RPQ engine's device work on a mesh.
+
+Layout (reusing the production mesh axis names of launch/mesh.py and the
+spec conventions of distributed/sharding.py):
+
+    dist    (Q, N, N, K)  Q -> lane axes (default ``('data',)``), the third
+                          (v/u) vertex axis optionally -> 'model'
+    emitted (Q, N, N)     Q -> lane axes
+    adj     (L, N, N)     v -> 'model' (the closure reshards a u-row view
+                          per round; co-locating both views is the ring
+                          hillclimb, see launch/dryrun_rpq.py)
+    now     ()            replicated
+
+Convergence-aware dispatch — the tentpole win this layer exists for: each
+lane shard runs the closure in a shard_map block over ITS OWN transition
+rows with the per-query convergence mask device-resident, so
+
+  * a shard whose lanes are all converged/inert SKIPS the round entirely
+    (`lax.cond` in semiring.shard_closure) — e.g. seeding a newly
+    registered lane relaxes exactly one shard while every other shard does
+    zero contraction work;
+  * an active shard stops at its OWN fixpoint instead of riding until the
+    globally slowest query converges — the ~37% no-op relaxation tail that
+    fig12 measured on the single-device path becomes skipped contractions.
+
+The skip is observable in the executor counters: ``shard_rounds_total``
+(rounds shards actually relaxed) vs ``n_shards * sync_rounds_total`` (every
+shard riding to the global fixpoint); ``skipped_shard_rounds_total`` is
+their gap, reported by benchmarks/fig14_sharded_engine.py.
+
+Result streams are BIT-identical to LocalExecutor: the (max, min) semiring
+has no floating-point reassociation error, so splitting the u-contraction
+into per-shard partials combined by `pmax` is exact, and each query's
+fixpoint is independent of every other query (transitions only read their
+owning lane's slices).
+
+Tests run this on a host-local CPU mesh
+(``XLA_FLAGS=--xla_force_host_platform_device_count=8``, the tier1-sharded
+CI job); a single-device mesh degenerates to one shard and still exercises
+the shard_map path.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..core.executor import BatchedEngineArrays, Executor, QueryTables
+from ..core.semiring import (
+    NEG_INF,
+    BatchedTransitionTable,
+    batched_valid_pairs,
+    shard_closure,
+    shard_relax_round,
+    shard_transitions,
+)
+
+
+def host_mesh(model_axis: int = 1) -> Mesh:
+    """('data', 'model') mesh over whatever devices this process has
+    (launch/mesh.py's host mesh), clamping the model axis to the device
+    count — a 1-device run yields the degenerate 1x1 mesh, so the same
+    code path works in every tier."""
+    from ..launch.mesh import make_host_mesh
+
+    return make_host_mesh(max(1, min(model_axis, len(jax.devices()))))
+
+
+def _row_specs(q_axes) -> Tuple[P, ...]:
+    return tuple(P(q_axes, None) for _ in range(6))
+
+
+def make_sharded_closure(mesh: Mesh, backend: str,
+                         q_axes=("data",), model_axis: str = "model"):
+    """shard_map-wrapped per-shard closure: (dist, adj, rows, mask0) ->
+    (dist', shard_rounds (n_shards,), query_rounds (Q,))."""
+    qa = q_axes[0] if len(q_axes) == 1 else tuple(q_axes)
+    n_model = mesh.shape[model_axis]
+    dist_spec = P(qa, None, model_axis, None)
+
+    def body(dist_blk, adj_u, adj_v, *rows_and_mask):
+        rows = tuple(r[0] for r in rows_and_mask[:6])
+        mask0 = rows_and_mask[6]
+        d_f, rounds, qrounds = shard_closure(
+            dist_blk, adj_u, adj_v, rows, mask0, backend=backend,
+            model_axis=model_axis if n_model > 1 else None,
+            model_size=n_model,
+        )
+        return d_f, rounds.reshape(1), qrounds
+
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(dist_spec, P(None, model_axis, None), P(None, None, model_axis),
+                  *_row_specs(qa), P(qa)),
+        out_specs=(dist_spec, P(qa), P(qa)),
+        check_rep=False,
+    )
+
+
+def make_sharded_round(mesh: Mesh, backend: str,
+                       q_axes=("data",), model_axis: str = "model"):
+    """One convergence-masked relaxation round (no fixpoint loop) with the
+    same sharding/skip structure — the unit launch/dryrun_rpq.py lowers for
+    the roofline (round count is data-dependent, so cost is per round)."""
+    qa = q_axes[0] if len(q_axes) == 1 else tuple(q_axes)
+    n_model = mesh.shape[model_axis]
+    dist_spec = P(qa, None, model_axis, None)
+
+    def body(dist_blk, adj_u, adj_v, *rows_and_mask):
+        qidx, src, lab, dst, start, active = (r[0] for r in rows_and_mask[:6])
+        mask0 = rows_and_mask[6]
+
+        def run(_):
+            nd, _changed = shard_relax_round(
+                dist_blk, adj_u, adj_v, qidx, src, lab, dst, start, active,
+                mask0, backend=backend,
+                model_axis=model_axis if n_model > 1 else None,
+                model_size=n_model)
+            return nd
+
+        return jax.lax.cond(jnp.any(mask0), run, lambda _: dist_blk, None)
+
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(dist_spec, P(None, model_axis, None), P(None, None, model_axis),
+                  *_row_specs(qa), P(qa)),
+        out_specs=dist_spec,
+        check_rep=False,
+    )
+
+
+def batched_round_lowering(mesh: Mesh, btt: BatchedTransitionTable,
+                           q_cap: int, n_slots: int,
+                           q_axes=("data",), backend: str = "jnp"):
+    """The dryrun lowering of the mesh executor's round: returns
+    ``(round_fn, arg_specs, arg_shardings, out_sharding)`` for
+    ``round_fn(dist, adj, query_mask)`` with dist (q_cap, N, N, K) sharded
+    Q->q_axes / v->'model' and the (Q,) convergence mask as a runtime,
+    lane-sharded input. ``q_cap`` is the lane capacity after padding the
+    live query count up to a multiple of the lane-shard count (inert lanes
+    are exactly the engine's bucketed padding)."""
+    n_shards = int(np.prod([mesh.shape[a] for a in q_axes]))
+    if q_cap % n_shards:
+        raise ValueError(f"q_cap {q_cap} not divisible by {n_shards} lane shards")
+    rows = shard_transitions(btt, q_cap, n_shards)
+    sharded_round = make_sharded_round(mesh, backend, q_axes=q_axes)
+    qa = q_axes[0] if len(q_axes) == 1 else tuple(q_axes)
+    dist_sh = NamedSharding(mesh, P(qa, None, "model", None))
+    adj_sh = NamedSharding(mesh, P(None, None, "model"))
+    mask_sh = NamedSharding(mesh, P(qa))
+    dist_spec = jax.ShapeDtypeStruct((q_cap, n_slots, n_slots, btt.k), jnp.float32)
+    adj_spec = jax.ShapeDtypeStruct((btt.n_labels, n_slots, n_slots), jnp.float32)
+    mask_spec = jax.ShapeDtypeStruct((q_cap,), jnp.bool_)
+
+    def round_fn(dist, adj, query_mask):
+        return sharded_round(dist, adj, adj, *rows, query_mask)
+
+    return (round_fn, (dist_spec, adj_spec, mask_spec),
+            (dist_sh, adj_sh, mask_sh), dist_sh)
+
+
+@functools.lru_cache(maxsize=None)
+def _mesh_step_fns(mesh: Mesh, q_axes: Tuple[str, ...], backend: str):
+    """Jitted mesh step functions + canonical shardings, cached per
+    (mesh, lane axes, backend) so every MeshExecutor on the same mesh
+    shares one compile cache (mirroring the module-level jits of the local
+    executor)."""
+    qa = q_axes[0] if len(q_axes) == 1 else tuple(q_axes)
+    sh = dict(
+        adj=NamedSharding(mesh, P(None, None, "model")),
+        dist=NamedSharding(mesh, P(qa, None, "model", None)),
+        emitted=NamedSharding(mesh, P(qa, None, None)),
+        now=NamedSharding(mesh, P()),
+    )
+    closure = make_sharded_closure(mesh, backend, q_axes=q_axes)
+    state_sh = BatchedEngineArrays(sh["adj"], sh["dist"], sh["emitted"], sh["now"])
+    lane_sh = NamedSharding(mesh, P(qa))
+
+    def ingest_impl(arrays, src, dst, lab, ts, mask, ts_floor,
+                    rows, finals_mask, windows, live_mask):
+        eff_ts = jnp.where(mask, ts, NEG_INF)
+        adj = arrays.adj.at[lab, src, dst].max(eff_ts, mode="drop")
+        now = jnp.maximum(arrays.now, jnp.maximum(jnp.max(eff_ts), ts_floor))
+        dist, shard_rounds, qrounds = closure(arrays.dist, adj, adj, *rows, live_mask)
+        low = now - windows
+        valid = batched_valid_pairs(dist, finals_mask, low)
+        new = jnp.logical_and(valid, jnp.logical_not(arrays.emitted))
+        emitted = jnp.logical_or(arrays.emitted, valid)
+        return (BatchedEngineArrays(adj, dist, emitted, now), new,
+                shard_rounds, qrounds)
+
+    def delete_impl(arrays, src, dst, lab, mask, ts_now,
+                    rows, finals_mask, windows, live_mask):
+        now = jnp.maximum(arrays.now, ts_now)
+        low = now - windows
+        valid_before = batched_valid_pairs(arrays.dist, finals_mask, low)
+        drop = jnp.where(mask, jnp.asarray(NEG_INF, jnp.float32),
+                         arrays.adj[lab, src, dst])
+        adj = arrays.adj.at[lab, src, dst].set(drop, mode="drop")
+        dist0 = jnp.full_like(arrays.dist, NEG_INF)
+        dist, shard_rounds, qrounds = closure(dist0, adj, adj, *rows, live_mask)
+        valid_after = batched_valid_pairs(dist, finals_mask, low)
+        invalidated = jnp.logical_and(valid_before, jnp.logical_not(valid_after))
+        return (BatchedEngineArrays(adj, dist, arrays.emitted, now),
+                invalidated, shard_rounds, qrounds)
+
+    def relax_impl(arrays, rows, query_mask):
+        dist, shard_rounds, qrounds = closure(
+            arrays.dist, arrays.adj, arrays.adj, *rows, query_mask)
+        return arrays._replace(dist=dist), shard_rounds, qrounds
+
+    return dict(
+        shardings=sh,
+        ingest=jax.jit(ingest_impl, donate_argnums=(0,),
+                       out_shardings=(state_sh, sh["emitted"], lane_sh, lane_sh)),
+        delete=jax.jit(delete_impl, donate_argnums=(0,),
+                       out_shardings=(state_sh, sh["emitted"], lane_sh, lane_sh)),
+        relax=jax.jit(relax_impl, donate_argnums=(0,),
+                      out_shardings=(state_sh, lane_sh, lane_sh)),
+    )
+
+
+class MeshExecutor(Executor):
+    """Sharded executor: Q lanes over the mesh's data axis (optionally the
+    vertex axis over model), convergence-aware per-shard dispatch.
+
+    ``q_multiple`` / ``n_multiple`` advertise the shard counts so the
+    engine rounds its lane and vertex capacities to them (inert padding
+    lanes land on real shards and are skipped by the mask). State placement
+    and every jitted step carry explicit NamedShardings, so checkpoints
+    written by a mesh run restore onto a local executor and vice versa
+    (arrays are saved logically; placement is re-derived here).
+    """
+
+    def __init__(self, mesh: Optional[Mesh] = None, model_axis: int = 1,
+                 q_axes: Sequence[str] = ("data",), backend: str = "jnp"):
+        super().__init__(backend)
+        self.mesh = mesh if mesh is not None else host_mesh(model_axis)
+        self.q_axes = tuple(q_axes)
+        self.n_shards = int(np.prod([self.mesh.shape[a] for a in self.q_axes]))
+        self.n_model = self.mesh.shape["model"]
+        self.q_multiple = self.n_shards
+        self.n_multiple = self.n_model
+        fns = _mesh_step_fns(self.mesh, self.q_axes, backend)
+        self._sh = fns["shardings"]
+        self._jit_ingest = fns["ingest"]
+        self._jit_delete = fns["delete"]
+        self._jit_relax = fns["relax"]
+        # sharded-table cache: rebuilt when the engine's transition table
+        # object changes (query lifecycle events), reused across dispatches
+        self._rows_src: Optional[BatchedTransitionTable] = None
+        self._rows: Optional[Tuple[jnp.ndarray, ...]] = None
+        # convergence-aware dispatch accounting (see module docstring)
+        self._shard_rounds_total = 0
+        self._sync_rounds_total = 0
+        self._skipped_shard_rounds_total = 0
+
+    # -- placement -----------------------------------------------------------
+
+    def _put(self, arr: np.ndarray, name: str):
+        return jax.device_put(arr, self._sh[name])
+
+    def _rows_for(self, btt: BatchedTransitionTable, q_cap: int):
+        if self._rows_src is not btt:
+            self._rows = shard_transitions(btt, q_cap, self.n_shards)
+            self._rows_src = btt
+        return self._rows
+
+    # -- Executor interface --------------------------------------------------
+
+    def ingest_batch(self, src, dst, lab, ts, mask, ts_floor: float,
+                     tables: QueryTables):
+        q_cap = self._arrays.dist.shape[0]
+        rows = self._rows_for(tables.btt, q_cap)
+        self._arrays, new, shard_rounds, qrounds = self._jit_ingest(
+            self._arrays,
+            jnp.asarray(src), jnp.asarray(dst), jnp.asarray(lab),
+            jnp.asarray(ts), jnp.asarray(mask),
+            jnp.asarray(ts_floor, jnp.float32),
+            rows, tables.finals_mask, tables.windows, tables.live_mask,
+        )
+        self._account(shard_rounds, qrounds, tables.n_live)
+        self.steps += 1
+        return new
+
+    def delete_batch(self, src, dst, lab, mask, ts_now: float,
+                     tables: QueryTables):
+        q_cap = self._arrays.dist.shape[0]
+        rows = self._rows_for(tables.btt, q_cap)
+        self._arrays, invalidated, shard_rounds, qrounds = self._jit_delete(
+            self._arrays,
+            jnp.asarray(src), jnp.asarray(dst), jnp.asarray(lab),
+            jnp.asarray(mask), jnp.asarray(ts_now, jnp.float32),
+            rows, tables.finals_mask, tables.windows, tables.live_mask,
+        )
+        self._account(shard_rounds, qrounds, tables.n_live)
+        self.steps += 1
+        return invalidated
+
+    def relax(self, tables: QueryTables,
+              query_mask: Optional[np.ndarray] = None) -> None:
+        q_cap = self._arrays.dist.shape[0]
+        rows = self._rows_for(tables.btt, q_cap)
+        mask = tables.live_mask if query_mask is None else jnp.asarray(
+            np.asarray(query_mask, bool))
+        self._arrays, shard_rounds, qrounds = self._jit_relax(
+            self._arrays, rows, mask)
+        self._account(shard_rounds, qrounds, tables.n_live)
+
+    # -- accounting ----------------------------------------------------------
+
+    def _consume_count(self, shard_rounds, qrounds, n_live: int) -> None:
+        sr = np.asarray(shard_rounds)
+        sync = int(sr.max()) if sr.size else 0
+        self._rounds_total += sync
+        self._sync_rounds_total += sync
+        self._shard_rounds_total += int(sr.sum())
+        self._skipped_shard_rounds_total += int((sync - sr).sum())
+        self._query_rounds_total += int(np.asarray(qrounds).sum())
+        self._unmasked_query_rounds_total += n_live * sync
+
+    @property
+    def shard_rounds_total(self) -> int:
+        """Rounds shards ACTUALLY relaxed (skip-aware), summed over shards
+        and dispatches."""
+        self._flush_counts()
+        return self._shard_rounds_total
+
+    @property
+    def sync_rounds_total(self) -> int:
+        """Per-dispatch max over shards, summed — the rounds every shard
+        would ride in a convergence-oblivious (bulk-synchronous) regime."""
+        self._flush_counts()
+        return self._sync_rounds_total
+
+    @property
+    def skipped_shard_rounds_total(self) -> int:
+        """Shard-rounds of contraction work the convergence-aware dispatch
+        skipped: ``n_shards * sync_rounds_total - shard_rounds_total``."""
+        self._flush_counts()
+        return self._skipped_shard_rounds_total

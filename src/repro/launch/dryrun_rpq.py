@@ -26,8 +26,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..core.automaton import compile_query
-from ..core.semiring import (NEG_INF, BatchedTransitionTable, TransitionTable,
-                             batched_relax_round)
+from ..core.semiring import NEG_INF, BatchedTransitionTable, TransitionTable
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                            "benchmarks", "results", "dryrun")
@@ -213,32 +212,29 @@ def run_rpq_cell(name: str, n_slots: int, query: str, v_chunk: int,
     query_tag, meta_k, meta_labels = query, dfa.k, dfa.n_labels
     n_transitions = len(dfa.transitions())
     if mode == "batched":
-        # Q stacked queries, shared adjacency: dist (Q, x, u, K) with x over
-        # data and u over model (same frontier layout per query; the Q axis
-        # is replicated — queries are data-parallel over their own closure).
-        # The per-query convergence mask rides along as a (Q,) input — the
-        # production round the BatchedDenseRPQEngine iterates: converged
-        # queries are masked out instead of relaxing as no-ops.
+        # Q stacked queries, shared adjacency — a thin wrapper over the
+        # MeshExecutor round lowering (distributed/executor.py): the lane
+        # axis is SHARDED over the data axes (padded with inert lanes to a
+        # shard multiple, exactly the engine's bucketing), the vertex axis
+        # over model, and the (Q,) per-lane convergence mask rides along as
+        # a runtime input — a lane shard whose queries have all converged
+        # skips its contraction entirely (lax.cond inside shard_map), which
+        # is the production form of the masked round the
+        # BatchedDenseRPQEngine iterates.
+        from ..distributed.executor import batched_round_lowering
+
         dfas = [compile_query(q) for q in BATCHED_QUERIES]
         labels = sorted(set().union(*[set(d.labels) for d in dfas]))
         btt = BatchedTransitionTable.from_dfas(dfas, labels)
         query_tag = f"batched[{len(dfas)}]: " + " ; ".join(BATCHED_QUERIES)
         meta_k, meta_labels = btt.k, len(labels)
         n_transitions = sum(len(d.transitions()) for d in dfas)
-        dist_spec = jax.ShapeDtypeStruct(
-            (len(dfas), n_slots, n_slots, btt.k), dtype)
-        adj_spec = jax.ShapeDtypeStruct((len(labels), n_slots, n_slots), dtype)
-        mask_spec = jax.ShapeDtypeStruct((len(dfas),), jnp.bool_)
-        dist_sh = NamedSharding(mesh, P(None, xa, "model", None))
-        adj_sh = NamedSharding(mesh, P(None, None, "model"))
-        mask_sh = NamedSharding(mesh, P())  # replicated, like the Q axis
-        arg_specs = (dist_spec, adj_spec, mask_spec)
-        arg_shardings = (dist_sh, adj_sh, mask_sh)
-
-        def round_fn(dist, adj, query_mask):
-            out = batched_relax_round(dist, adj, btt, backend="jnp",
-                                      query_mask=query_mask)
-            return jax.lax.with_sharding_constraint(out, dist_sh)
+        q_axes = ("pod", "data") if multi_pod else ("data",)
+        n_lane_shards = int(np.prod([mesh.shape[a] for a in q_axes]))
+        q_cap = len(dfas) + (-len(dfas)) % n_lane_shards
+        round_fn, arg_specs, arg_shardings, dist_sh = batched_round_lowering(
+            mesh, btt, q_cap, n_slots, q_axes=q_axes)
+        dist_spec, adj_spec = arg_specs[0], arg_specs[1]
     elif mode == "ring":
         dist_spec = jax.ShapeDtypeStruct((n_slots, n_slots, dfa.k), dtype)
         adj_spec = jax.ShapeDtypeStruct((dfa.n_labels, n_slots, n_slots), dtype)

@@ -12,6 +12,34 @@ single jitted dispatch for the whole dense workload instead of one per
 query (benchmarks/fig12_multi_query.py measures the win). Reference
 engines (the paper-faithful pointer oracles) stay on the per-query path.
 
+Executor selection (PR 3): the service chooses the dense group's device
+path — ``executor="local"`` (single device, the default) or
+``executor="mesh"`` (Q lanes sharded over the process's device mesh with
+convergence-aware dispatch, :mod:`repro.distributed.executor`); an
+:class:`~repro.core.executor.Executor` instance is also accepted. Result
+streams are identical across executors (tests/test_executor.py).
+
+Async result decode (PR 3): with ``async_decode=True`` the service defers
+the device→host transfer of each ingest's emit frontier by one event — the
+transfer of dispatch *i* overlaps dispatch *i+1* instead of blocking the
+hot path (engine :class:`~repro.core.engine.PendingResults`; decode safety
+is preserved by interner snapshots, and the handle is resolved before any
+expiry, deletion, lifecycle event, or the end of :meth:`ingest`, so the
+returned report is complete). Recorded latencies then measure dispatch
+time only.
+
+RSPQ fallback (PR 3): a dense lane running ``path_semantics="simple"``
+over-approximates when its automaton lacks the containment property and a
+conflict materializes (Definition 16). When ``per_query_conflicted`` fires
+for such a lane, the service routes the query to the exact (paper §4.1)
+reference RSPQ engine, seeded from the group's
+:meth:`~repro.core.engine.BatchedDenseRPQEngine.retained_edges` — the
+switch is surfaced in :attr:`IngestReport.fallbacks`, the lane returns to
+the group as reclaimable padding, and results from the switch on are
+exact (results emitted before the switch may over-report; that window is
+exactly what the flag marks). Disable with ``rspq_fallback=False`` to keep
+the flag-only PR 2 behavior.
+
 Query lifecycle is LIVE (PR 2): :meth:`PersistentQueryService.register`
 works before OR after ingestion has started — a late dense registration
 re-pads the running group's device state in place and seeds the new
@@ -21,13 +49,15 @@ the current window (the initial result pairs are returned).
 padding reclaimed by the next registration. A dense query registered after
 ingestion adopts the group's existing capacities (``n_slots``,
 ``batch_size``, ``backend``) — per-call capacity arguments apply only
-while the group is still unmaterialized.
+while the group is still unmaterialized. Vertex capacity grows on demand
+(PR 3), so ``n_slots`` is a starting size, not a ceiling.
 
 Deletion visibility: :meth:`ingest` returns an :class:`IngestReport` — a
 plain ``dict`` of NEW result pairs per query (backward compatible) whose
 ``.invalidated`` attribute carries the result pairs each negative tuple
-invalidated (the paper's §3.2 invalidation stream), previously computed by
-the engines but discarded.
+invalidated (the paper's §3.2 invalidation stream) and whose
+``.fallbacks`` attribute names the queries switched to the reference RSPQ
+path during the call.
 
 Fault tolerance: the service checkpoints engine state via
 checkpoint/ckpt.py — the batched dense group as one pytree of device
@@ -36,17 +66,22 @@ the LIVE query set lane-by-lane and the label order), reference engines as
 pickled leaves — and can re-attach after a crash (tests/test_fault.py
 drives crash → restore → identical result stream). Restore matches lanes
 by query name and adjacency rows by label name, so a restoring service
-whose group has a different churn history (other bucketed-Q/K/label
-padding) re-pads the checkpoint onto its own capacities.
+whose group has a different churn history (other bucketed-Q/K/label/slot
+padding) OR a different executor (mesh-written → local-restored and vice
+versa) re-pads the checkpoint onto its own capacities and placement. A
+query that fell back to the reference RSPQ checkpoints as a reference
+engine; a service restoring such a snapshot must register it with
+``engine="reference"`` (the mismatch raises otherwise).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional, Set, Tuple
+from typing import Dict, List, Optional, Set, Tuple, Union
 
 from ..core.automaton import compile_query
-from ..core.engine import BatchedDenseRPQEngine, RegisteredQuery
+from ..core.engine import BatchedDenseRPQEngine, PendingResults, RegisteredQuery
+from ..core.executor import Executor, LocalExecutor
 from ..core.reference import RAPQ, RSPQ
 
 
@@ -64,18 +99,100 @@ class IngestReport(Dict[str, Set[Tuple]]):
     """New result pairs per query (a plain dict, so existing callers keep
     working), with the deletion-invalidated pairs alongside in
     :attr:`invalidated` (name -> set of (x, y) pairs a negative tuple
-    removed from the valid answer set)."""
+    removed from the valid answer set) and the queries switched to the
+    exact reference RSPQ path in :attr:`fallbacks` (name -> reason)."""
 
     def __init__(self, new: Dict[str, Set[Tuple]],
-                 invalidated: Dict[str, Set[Tuple]]):
+                 invalidated: Dict[str, Set[Tuple]],
+                 fallbacks: Optional[Dict[str, str]] = None):
         super().__init__(new)
         self.invalidated: Dict[str, Set[Tuple]] = invalidated
+        self.fallbacks: Dict[str, str] = dict(fallbacks or {})
+
+
+class RSPQFallback:
+    """Exact simple-path engine for a query evicted from the dense group
+    after a conflict: the paper-faithful :class:`RSPQ` plus the live-edge
+    bookkeeping the dense group used to provide.
+
+    The wrapper keeps its own (u, v, label) -> ts map of window-live edges
+    so explicit deletions work even though the paper's RSPQ listing has no
+    Delete algorithm: a negative tuple rebuilds a fresh RSPQ from the
+    retained edges (the paper's uniform re-derivation machinery, pointer
+    form). ``results`` stays monotone across rebuilds — the emitted history
+    (including the dense lane's pre-switch results, which may over-report;
+    that is what the conflict flag marked) is carried forward, and
+    :meth:`insert` returns only pairs NEW to it."""
+
+    def __init__(self, dfa, window: float, emitted: Optional[Set[Tuple]] = None):
+        self.dfa = dfa
+        self.window = float(window)
+        self._edges: Dict[Tuple, float] = {}
+        self._rspq = RSPQ(dfa, window)
+        self._emitted: Set[Tuple] = set(emitted or ())
+
+    @property
+    def results(self) -> Set[Tuple]:
+        return self._emitted | self._rspq.results
+
+    @property
+    def conflicts_detected(self) -> int:
+        return self._rspq.conflicts_detected
+
+    def seed(self, edges, now: float) -> None:
+        """Replay the dense group's retained edges and sync the clock, so
+        the engine answers over the current window from its first event."""
+        for (u, v, label, ts) in edges:
+            self._edges[(u, v, label)] = ts
+            self._rspq.insert(u, v, label, ts)
+        if now > float("-inf"):
+            self._rspq.expire(now)
+
+    def insert(self, u, v, label: str, ts: float) -> Set[Tuple]:
+        self._edges[(u, v, label)] = ts
+        before = self.results
+        self._rspq.insert(u, v, label, ts)
+        return self.results - before
+
+    def delete(self, u, v, label: str, ts: float) -> Set[Tuple]:
+        self._edges.pop((u, v, label), None)
+        now = max(self._rspq.now, ts)
+        # advance the clock BEFORE snapshotting validity, mirroring the
+        # dense engine's _delete (valid_before at the event's `now`):
+        # otherwise pairs the deletion event's own clock advance expired
+        # would be misreported as invalidated by the negative tuple
+        self._rspq.expire(now)
+        before_valid = self._rspq.current_results()
+        self._emitted |= self._rspq.results
+        fresh = RSPQ(self.dfa, self.window)
+        low = now - self.window
+        for (eu, ev, el), ets in sorted(self._edges.items(), key=lambda kv: kv[1]):
+            if ets > low:
+                fresh.insert(eu, ev, el, ets)
+        fresh.expire(now)
+        self._rspq = fresh
+        return before_valid - fresh.current_results()
+
+    def expire(self, tau: Optional[float] = None) -> None:
+        self._rspq.expire(tau)
+        if tau is not None:
+            low = tau - self.window
+            self._edges = {k: t for k, t in self._edges.items() if t > low}
+
+    def current_results(self) -> Set[Tuple]:
+        return self._rspq.current_results()
 
 
 class PersistentQueryService:
-    def __init__(self, window: float, slide: float):
+    def __init__(self, window: float, slide: float,
+                 executor: Union[str, Executor] = "local",
+                 async_decode: bool = False,
+                 rspq_fallback: bool = True):
         self.window = float(window)
         self.slide = float(slide)
+        self._executor_spec = executor
+        self._async_decode = bool(async_decode)
+        self._rspq_fallback = bool(rspq_fallback)
         # reference (pointer) engines, one per query
         self._ref_engines: Dict[str, object] = {}
         # dense queries: name -> registration kwargs; grouped lazily until
@@ -85,6 +202,18 @@ class PersistentQueryService:
         self._ingest_started = False
         self.stats: Dict[str, QueryStats] = {}
         self._next_expiry = slide
+
+    def _make_executor(self, backend: str) -> Executor:
+        if isinstance(self._executor_spec, Executor):
+            return self._executor_spec
+        if self._executor_spec == "mesh":
+            from ..distributed.executor import MeshExecutor
+
+            return MeshExecutor(backend=backend)
+        if self._executor_spec == "local":
+            return LocalExecutor(backend)
+        raise ValueError(
+            f"unknown executor {self._executor_spec!r} (local | mesh | instance)")
 
     @property
     def queries(self) -> Dict[str, object]:
@@ -182,6 +311,7 @@ class PersistentQueryService:
         backends = {s["backend"] for s in self._dense_specs.values()}
         if len(backends) > 1:
             raise ValueError(f"dense queries must share one backend, got {backends}")
+        backend = backends.pop()
         specs = [
             RegisteredQuery(name, s["dfa"], self.window, s["path_semantics"])
             for name, s in self._dense_specs.items()
@@ -192,47 +322,97 @@ class PersistentQueryService:
             # exactness dominates: the smallest requested micro-batch bounds
             # the group's batch-boundary skew for every member query
             batch_size=min(s["batch_size"] for s in self._dense_specs.values()),
-            backend=backends.pop(),
+            backend=backend,
+            executor=self._make_executor(backend),
         )
+
+    def _maybe_fallback(self, fallbacks: Dict[str, str], resolve_cb) -> None:
+        """Route conflicted simple-path dense lanes to the exact reference
+        RSPQ engine (seeded from the retained graph); record the switch."""
+        if not self._rspq_fallback or self._group is None:
+            return
+        for qi, spec in list(self._group.live_items()):
+            if spec.path_semantics != "simple":
+                continue
+            if not self._group.per_query_conflicted[qi]:
+                continue
+            resolve_cb()  # settle deferred decodes before mutating lanes
+            name = spec.name
+            fb = RSPQFallback(spec.dfa, spec.window,
+                              emitted=self._group.per_query_results[qi])
+            fb.seed(self._group.retained_edges(), self._group._host_now)
+            self._group.deregister_query(name)
+            del self._dense_specs[name]
+            self._ref_engines[name] = fb
+            fallbacks[name] = "conflict -> reference RSPQ"
+            if name in self.stats:
+                self.stats[name].conflicted = True
 
     def ingest(self, stream, record_latency: bool = False) -> IngestReport:
         """Feed the whole stream; returns an :class:`IngestReport`: the new
         result pairs per query (dict interface), with the pairs invalidated
-        by explicit deletions alongside in ``.invalidated``."""
+        by explicit deletions alongside in ``.invalidated`` and any
+        dense→RSPQ switches in ``.fallbacks``."""
         self._ensure_group()
         self._ingest_started = True
         new_results: Dict[str, Set[Tuple]] = {name: set() for name in self.stats}
         invalidated: Dict[str, Set[Tuple]] = {name: set() for name in self.stats}
+        fallbacks: Dict[str, str] = {}
+        pending: List[PendingResults] = []  # at most one in flight
+
+        def resolve_pending() -> None:
+            while pending:
+                fresh = pending.pop(0).resolve()
+                for qi, spec in self._group.live_items():
+                    new_results[spec.name] |= fresh[qi]
+
         for sgt in stream:
             # lazy expiration at slide boundaries (eager evaluation)
             if sgt.ts >= self._next_expiry:
+                resolve_pending()
                 if self._group is not None:
                     self._group.expire(sgt.ts)
                 for eng in self._ref_engines.values():
                     eng.expire(sgt.ts)
                 while self._next_expiry <= sgt.ts:
                     self._next_expiry += self.slide
+            # snapshot BEFORE the dense step: a fallback fired by this very
+            # event must not re-feed the event to its new reference engine
+            refs_this_event = list(self._ref_engines.items())
             if self._group is not None:
                 t0 = time.perf_counter_ns() if record_latency else 0
                 if sgt.op == "+":
-                    fresh = self._group.insert(sgt.src, sgt.dst, sgt.label, sgt.ts)
+                    handle = self._group.insert_batch_pending(
+                        [(sgt.src, sgt.dst, sgt.label, sgt.ts)])
                     inv = None
+                    if self._async_decode:
+                        # overlap: this dispatch is in flight; NOW pull the
+                        # previous event's results off the device
+                        prev, pending[:] = pending[:], [handle]
+                        for p in prev:
+                            fresh = p.resolve()
+                            for qi, spec in self._group.live_items():
+                                new_results[spec.name] |= fresh[qi]
+                    else:
+                        fresh = handle.resolve()
+                        for qi, spec in self._group.live_items():
+                            new_results[spec.name] |= fresh[qi]
                 else:
+                    resolve_pending()
                     inv = self._group.delete(sgt.src, sgt.dst, sgt.label, sgt.ts)
-                    fresh = None
                 dt = (time.perf_counter_ns() - t0) / 1e3 if record_latency else 0.0
                 for qi, spec in self._group.live_items():
                     st = self.stats[spec.name]
                     st.tuples += 1
-                    if fresh is not None:
-                        new_results[spec.name] |= fresh[qi]
                     if inv is not None:
                         invalidated[spec.name] |= inv[qi]
                     if record_latency:
                         # one dispatch serves the whole group; each member
-                        # observes the group's step latency
+                        # observes the group's step latency (dispatch-only
+                        # under async_decode)
                         st.latencies_us.append(dt)
-            for name, eng in self._ref_engines.items():
+                self._maybe_fallback(fallbacks, resolve_pending)
+            for name, eng in refs_this_event:
                 t0 = time.perf_counter_ns() if record_latency else 0
                 if sgt.op == "+":
                     res = eng.insert(sgt.src, sgt.dst, sgt.label, sgt.ts)
@@ -245,15 +425,16 @@ class PersistentQueryService:
                 st.tuples += 1
                 if record_latency:
                     st.latencies_us.append((time.perf_counter_ns() - t0) / 1e3)
+        resolve_pending()
         for name in self.stats:
             st = self.stats[name]
             if name in self._dense_specs or name in self._ref_engines:
                 st.results = len(self.results(name))
-                st.conflicted = self._conflicted(name)
+                st.conflicted = st.conflicted or self._conflicted(name)
             if st.latencies_us:
                 lat = sorted(st.latencies_us)
                 st.p99_us = lat[min(int(0.99 * len(lat)), len(lat) - 1)]
-        return IngestReport(new_results, invalidated)
+        return IngestReport(new_results, invalidated, fallbacks)
 
     def results(self, name: str) -> Set[Tuple]:
         if name in self._dense_specs:
@@ -284,7 +465,8 @@ class PersistentQueryService:
             extra["dense"] = {
                 # the LIVE query set, lane by lane (None = inert padding):
                 # restore matches lanes by name, so the restoring group may
-                # have a different bucketed-Q layout
+                # have a different bucketed-Q layout (or executor shard
+                # quantum)
                 "order": [s.name if s is not None else None
                           for s in self._group.lane_specs],
                 "labels": list(self._group.labels),
@@ -307,8 +489,9 @@ class PersistentQueryService:
         state, extra = ckpt.restore(directory, like=like)
         if self._group is not None:
             meta = extra["dense"]
-            # lane-by-name adoption: tolerant of bucketed-Q/K/label padding
-            # differences; raises if the LIVE query sets differ
+            # lane-by-name adoption: tolerant of bucketed-Q/K/label/slot
+            # padding differences AND executor changes (mesh <-> local);
+            # raises if the LIVE query sets differ
             self._group.adopt_state(
                 state["dense_group"],
                 meta["order"],

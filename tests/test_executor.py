@@ -1,0 +1,427 @@
+"""Executor conformance: LocalExecutor vs MeshExecutor must produce
+bit-identical per-event result streams for the batched dense engine —
+under both path semantics, with explicit deletions, window expiry, query
+churn mid-stream, and checkpoint cross-restore (local-written → mesh-
+restored and vice versa). Plus regression tests for the PR 3 satellites:
+runtime n_slots (vertex-axis) growth and the service's RSPQ fallback.
+
+The mesh tests run on whatever devices this process has: one device yields
+the degenerate 1-shard mesh (still exercising the shard_map path); the CI
+``tier1-sharded`` job re-runs this file under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` so real Q-sharding
+(and, where marked, vertex sharding over 'model') is covered.
+"""
+import random
+import tempfile
+
+import jax
+import pytest
+
+from repro.core import RAPQ, RSPQ, compile_query
+from repro.core.engine import BatchedDenseRPQEngine, DenseRPQEngine, RegisteredQuery
+from repro.distributed.executor import MeshExecutor
+from repro.streaming.generators import so_like, with_deletions
+from repro.streaming.service import PersistentQueryService
+from repro.streaming.stream import Stream
+
+QUERIES = ["a*", "a . b*", "(a | b)*", "a . b* . c", "(a . b)+", "a . b . c"]
+LABELS = ["a", "b", "c"]
+
+
+def _random_stream(rng, n_vertices, n_edges, t_max):
+    ts = sorted(rng.sample(range(1, t_max), k=min(n_edges, t_max - 1)))
+    return [
+        (rng.randrange(n_vertices), rng.randrange(n_vertices),
+         rng.choice(LABELS), float(t))
+        for t in ts
+    ]
+
+
+def _specs(rng, n_queries, window):
+    specs = []
+    for qi in range(n_queries):
+        expr = rng.choice(QUERIES)
+        dfa = compile_query(expr)
+        semantics = "arbitrary"
+        if dfa.has_containment_property and rng.random() < 0.4:
+            semantics = "simple"
+        specs.append(RegisteredQuery(f"q{qi}", dfa, window, semantics))
+    return specs
+
+
+def _events(rng, stream, with_deletions_=True):
+    live = {}
+    events = []
+    for (u, v, lab, ts) in stream:
+        if with_deletions_ and live and rng.random() < 0.2:
+            du, dv, dl = rng.choice(sorted(live))
+            del live[(du, dv, dl)]
+            events.append(("-", du, dv, dl, ts))
+        else:
+            live[(u, v, lab)] = ts
+            events.append(("+", u, v, lab, ts))
+    return events
+
+
+def _assert_lanewise(tag, n_queries, fl, fm):
+    """Local fresh list (lane == query) vs mesh fresh list (lane capacity
+    may be padded to the shard multiple; padding must stay silent)."""
+    for qi in range(n_queries):
+        assert fl[qi] == fm[qi], (tag, qi, fl[qi] ^ fm[qi])
+    assert all(not s for s in fm[n_queries:]), (tag, "padding lane emitted")
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_mesh_matches_local_per_event(seed):
+    """Inserts + deletions + expiry, mixed semantics: every event's fresh
+    results and invalidations are identical between executors."""
+    rng = random.Random(seed)
+    window = rng.choice([10.0, 25.0])
+    nq = 3
+    specs = _specs(rng, nq, window)
+    local = BatchedDenseRPQEngine(specs, n_slots=16, batch_size=1)
+    mesh = BatchedDenseRPQEngine(specs, n_slots=16, batch_size=1,
+                                 executor=MeshExecutor())
+    events = _events(rng, _random_stream(rng, 6, 24, 70))
+    for i, (op, u, v, lab, ts) in enumerate(events):
+        if op == "+":
+            _assert_lanewise((seed, i), nq,
+                             local.insert(u, v, lab, ts),
+                             mesh.insert(u, v, lab, ts))
+        else:
+            _assert_lanewise((seed, i), nq,
+                             local.delete(u, v, lab, ts),
+                             mesh.delete(u, v, lab, ts))
+        if i % 6 == 5:
+            local.expire(ts)
+            mesh.expire(ts)
+        if i % 9 == 8:
+            for qi in range(nq):
+                assert local.current_results(qi) == mesh.current_results(qi)
+    for qi in range(nq):
+        assert local.per_query_results[qi] == mesh.per_query_results[qi]
+        assert (local.per_query_conflicted[qi]
+                == mesh.per_query_conflicted[qi])
+
+
+def test_mesh_churn_mid_stream_matches_local():
+    """register/deregister mid-stream on both executors: the mesh group's
+    lane layout differs (shard-multiple padding, reclaimed holes) but the
+    per-query result streams stay identical, matched by name."""
+    rng = random.Random(7)
+    window = 30.0
+    base = [RegisteredQuery("q0", compile_query("a . b*"), window),
+            RegisteredQuery("q1", compile_query("(a | b)*"), window)]
+    local = BatchedDenseRPQEngine(base, n_slots=16, batch_size=1)
+    mesh = BatchedDenseRPQEngine(base, n_slots=16, batch_size=1,
+                                 executor=MeshExecutor())
+    stream = _random_stream(rng, 6, 30, 90)
+    late = RegisteredQuery("late", compile_query("a*"), window)
+    for i, (u, v, lab, ts) in enumerate(stream):
+        if i == 10:
+            il = local.register_query(late)
+            im = mesh.register_query(late)
+            assert il == im
+        if i == 20:
+            local.deregister_query("q0")
+            mesh.deregister_query("q0")
+        fl = local.insert(u, v, lab, ts)
+        fm = mesh.insert(u, v, lab, ts)
+        for qi_l, spec in local.live_items():
+            qi_m = mesh.lane_of(spec.name)
+            assert fl[qi_l] == fm[qi_m], (i, spec.name)
+        if i % 7 == 6:
+            local.expire(ts)
+            mesh.expire(ts)
+    for qi_l, spec in local.live_items():
+        qi_m = mesh.lane_of(spec.name)
+        assert local.per_query_results[qi_l] == mesh.per_query_results[qi_m]
+
+
+@pytest.mark.skipif(len(jax.devices()) < 2,
+                    reason="vertex sharding needs >= 2 devices")
+def test_mesh_vertex_sharding_matches_local():
+    """model-axis vertex sharding: the u-contraction splits into per-shard
+    partials combined by pmax — must stay exact (max/min reassociates)."""
+    rng = random.Random(3)
+    window = 25.0
+    specs = _specs(rng, 4, window)
+    local = BatchedDenseRPQEngine(specs, n_slots=16, batch_size=1)
+    mesh = BatchedDenseRPQEngine(specs, n_slots=16, batch_size=1,
+                                 executor=MeshExecutor(model_axis=2))
+    for i, (op, u, v, lab, ts) in enumerate(
+            _events(rng, _random_stream(rng, 7, 28, 80))):
+        if op == "+":
+            _assert_lanewise(i, 4, local.insert(u, v, lab, ts),
+                             mesh.insert(u, v, lab, ts))
+        else:
+            _assert_lanewise(i, 4, local.delete(u, v, lab, ts),
+                             mesh.delete(u, v, lab, ts))
+        if i % 5 == 4:
+            local.expire(ts)
+            mesh.expire(ts)
+
+
+def test_mesh_skip_accounting_consistent():
+    """Convergence-aware dispatch bookkeeping: shard_rounds + skipped ==
+    n_shards * sync_rounds, and per-query round counts match the local
+    executor's exactly (same convergence criterion per lane)."""
+    rng = random.Random(1)
+    specs = [RegisteredQuery(f"q{i}", compile_query(e), 30.0)
+             for i, e in enumerate(QUERIES[:4])]
+    local = BatchedDenseRPQEngine(specs, n_slots=16, batch_size=1)
+    ex = MeshExecutor()
+    mesh = BatchedDenseRPQEngine(specs, n_slots=16, batch_size=1, executor=ex)
+    for (u, v, lab, ts) in _random_stream(rng, 8, 25, 70):
+        local.insert(u, v, lab, ts)
+        mesh.insert(u, v, lab, ts)
+    assert mesh.total_query_rounds == local.total_query_rounds
+    assert mesh.total_rounds == local.total_rounds
+    assert (ex.shard_rounds_total + ex.skipped_shard_rounds_total
+            == ex.n_shards * ex.sync_rounds_total)
+    if ex.n_shards > 1:
+        # mixed-depth queries: some shard must have settled early
+        assert ex.skipped_shard_rounds_total > 0
+
+
+# ---------------------------------------------------------------------------
+# service-level: executor selection, async decode, cross-executor restore
+# ---------------------------------------------------------------------------
+
+WINDOW, SLIDE = 20.0, 2.0
+
+
+def _service(executor="local", async_decode=False):
+    svc = PersistentQueryService(window=WINDOW, slide=SLIDE,
+                                 executor=executor, async_decode=async_decode)
+    svc.register("arb", "a2q . c2a*", engine="dense", n_slots=32)
+    svc.register("plus", "(a2q | c2a)+", engine="dense", n_slots=32)
+    svc.register("smp", "(a2q | c2a | c2q)*", engine="dense",
+                 path_semantics="simple", n_slots=32)
+    return svc
+
+
+NAMES = ["arb", "plus", "smp"]
+
+
+def _tuples():
+    return list(with_deletions(so_like(20, 90, seed=13), ratio=0.05, seed=7))
+
+
+@pytest.mark.parametrize("async_decode", [False, True])
+def test_service_mesh_executor_matches_local(async_decode):
+    tuples = _tuples()
+    svc_l = _service("local")
+    svc_m = _service("mesh", async_decode=async_decode)
+    rep_l = svc_l.ingest(Stream(tuples))
+    rep_m = svc_m.ingest(Stream(tuples))
+    for name in NAMES:
+        assert rep_l[name] == rep_m[name], name
+        assert rep_l.invalidated[name] == rep_m.invalidated[name], name
+        assert svc_l.results(name) == svc_m.results(name), name
+
+
+def test_async_decode_matches_sync_per_batch():
+    """The deferred decode path returns the SAME report as the blocking
+    path even when ingest is called in many small slices (pending handles
+    resolved across expiry boundaries and at the end of each call)."""
+    tuples = _tuples()
+    svc_s = _service("local", async_decode=False)
+    svc_a = _service("local", async_decode=True)
+    seen_s, seen_a = set(), set()
+    for i in range(0, len(tuples), 17):
+        batch = tuples[i:i + 17]
+        rep_s = svc_s.ingest(Stream(batch))
+        rep_a = svc_a.ingest(Stream(batch))
+        for name in NAMES:
+            assert rep_s[name] == rep_a[name], (i, name)
+        seen_s |= rep_s["arb"]
+        seen_a |= rep_a["arb"]
+        assert not (rep_a["arb"] & (seen_a - rep_a["arb"]))  # no re-emission
+    assert svc_s.results("arb") == svc_a.results("arb") == seen_s
+
+
+@pytest.mark.parametrize("writer,reader", [("local", "mesh"), ("mesh", "local")])
+def test_checkpoint_cross_restore_between_executors(writer, reader):
+    """A checkpoint written under one executor restores under the other
+    (arrays are logical; placement is the restoring executor's concern) and
+    the tail result stream is identical to the uninterrupted run."""
+    tuples = _tuples()
+    half = len(tuples) // 2
+    svc = _service(writer)
+    svc.ingest(Stream(tuples[:half]))
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        svc.snapshot(ckpt_dir, step=half)
+        mid = {name: svc.results(name) for name in NAMES}
+        tail = svc.ingest(Stream(tuples[half:]))
+        final = {name: svc.results(name) for name in NAMES}
+
+        svc2 = _service(reader)
+        assert svc2.restore(ckpt_dir) == half
+        for name in NAMES:
+            assert svc2.results(name) == mid[name], name
+        tail2 = svc2.ingest(Stream(tuples[half:]))
+        for name in NAMES:
+            assert tail2[name] == tail[name], name
+            assert svc2.results(name) == final[name], name
+
+
+# ---------------------------------------------------------------------------
+# satellite regressions: runtime n_slots growth
+# ---------------------------------------------------------------------------
+
+
+def test_n_slots_grows_on_demand():
+    """A tiny engine ingesting more window-live vertices than it has slots
+    must grow the vertex axis instead of raising, and keep producing the
+    same results as an amply-sized engine."""
+    dfa = compile_query("a . b*")
+    small = DenseRPQEngine(dfa, window=1000.0, n_slots=4, batch_size=1)
+    big = DenseRPQEngine(dfa, window=1000.0, n_slots=64, batch_size=1)
+    rng = random.Random(5)
+    for t in range(1, 40):
+        u, v = rng.randrange(12), rng.randrange(12)
+        lab = rng.choice(["a", "b"])
+        assert small.insert(u, v, lab, float(t)) == big.insert(u, v, lab, float(t))
+    assert small.n_slots > 4, "vertex capacity never grew"
+    assert small.results == big.results
+    # the grown engine keeps ALL interned vertices addressable
+    assert set(small.slot_of) == set(big.slot_of)
+
+
+def test_n_slots_growth_prefers_compaction():
+    """Growth fires only when compaction cannot free a slot: a small window
+    with few concurrently-live vertices never grows."""
+    dfa = compile_query("a*")
+    eng = DenseRPQEngine(dfa, window=2.0, n_slots=4, batch_size=1)
+    for t in range(1, 60):
+        eng.insert(t, t + 1, "a", float(t))  # fresh vertices every tuple
+    assert eng.n_slots == 4
+
+
+def test_checkpoint_across_differing_n_slots():
+    """Round trip across vertex capacities, both directions: a GROWN
+    group's checkpoint restores into a small-capacity service (which grows
+    on adopt), and a small checkpoint restores into a larger engine
+    (padded)."""
+    tuples = list(so_like(40, 120, seed=3))  # forces growth at n_slots=8
+    half = len(tuples) // 2
+    svc = PersistentQueryService(window=1000.0, slide=50.0)
+    svc.register("q", "a2q . c2a*", engine="dense", n_slots=8)
+    svc.ingest(Stream(tuples[:half]))
+    grown = svc.queries["q"].n_slots
+    assert grown > 8
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        svc.snapshot(ckpt_dir, step=half)
+        tail = svc.ingest(Stream(tuples[half:]))
+
+        # small-capacity restorer grows to the checkpoint size
+        svc2 = PersistentQueryService(window=1000.0, slide=50.0)
+        svc2.register("q", "a2q . c2a*", engine="dense", n_slots=8)
+        assert svc2.restore(ckpt_dir) == half
+        assert svc2.queries["q"].n_slots >= grown
+        tail2 = svc2.ingest(Stream(tuples[half:]))
+        assert tail2["q"] == tail["q"]
+        assert svc2.results("q") == svc.results("q")
+
+        # large-capacity restorer pads the smaller checkpoint
+        svc3 = PersistentQueryService(window=1000.0, slide=50.0)
+        svc3.register("q", "a2q . c2a*", engine="dense", n_slots=2 * grown)
+        assert svc3.restore(ckpt_dir) == half
+        tail3 = svc3.ingest(Stream(tuples[half:]))
+        assert tail3["q"] == tail["q"]
+
+
+# ---------------------------------------------------------------------------
+# satellite regressions: RSPQ fallback on conflict
+# ---------------------------------------------------------------------------
+
+# (a . b)+ lacks the containment property: simple-path semantics can
+# over-report once a conflict materializes (Definition 16)
+CONFLICT_EXPR = "(a2q . c2a)+"
+
+
+def _conflict_stream():
+    # the lasso from test_batched_engine: x -a-> y -b-> u -a-> v -b-> y
+    # re-reaches y in a different state — a Definition 16 conflict for
+    # (a . b)+ simple semantics
+    return [("+", "x", "y", "a2q", 1.0), ("+", "y", "u", "c2a", 2.0),
+            ("+", "u", "v", "a2q", 3.0), ("+", "v", "y", "c2a", 4.0),
+            ("+", "y", "w", "a2q", 5.0), ("+", "w", "x", "c2a", 6.0)]
+
+
+def test_rspq_fallback_on_conflict():
+    """A conflicted simple-path dense lane is routed to the reference RSPQ
+    engine; the switch is surfaced in IngestReport.fallbacks and the query
+    keeps serving (exactly) from the retained graph."""
+    from repro.streaming.stream import SGT
+
+    svc = PersistentQueryService(window=1000.0, slide=100.0)
+    svc.register("conf", CONFLICT_EXPR, engine="dense",
+                 path_semantics="simple", n_slots=16)
+    svc.register("safe", "(a2q | c2a)*", engine="dense",
+                 path_semantics="simple", n_slots=16)
+    events = _conflict_stream()
+    stream = Stream([SGT(ts, u, v, lab, op) for (op, u, v, lab, ts) in events])
+    report = svc.ingest(stream)
+    assert "conf" in report.fallbacks, "conflict did not trigger the fallback"
+    assert "safe" not in report.fallbacks
+    assert svc.stats["conf"].conflicted
+    # the query now lives on the reference path; the dense group no longer
+    # carries its lane
+    assert "conf" not in svc._dense_specs
+    group = svc.queries["safe"]
+    assert all(s is None or s.name != "conf" for s in group.lane_specs)
+    # exactness from the switch on: the fallback's window snapshot matches
+    # a reference RSPQ fed the same full stream
+    oracle = RSPQ(compile_query(CONFLICT_EXPR), 1000.0)
+    for (op, u, v, lab, ts) in events:
+        oracle.insert(u, v, lab, ts)
+    assert svc._ref_engines["conf"].current_results() == oracle.current_results()
+    # and it keeps serving the tail exactly
+    more = Stream([SGT(13.0, 0, 1, "a2q", "+"), SGT(14.0, 1, 2, "c2a", "+")])
+    svc.ingest(more)
+    oracle.insert(0, 1, "a2q", 13.0)
+    oracle.insert(1, 2, "c2a", 14.0)
+    assert svc._ref_engines["conf"].current_results() == oracle.current_results()
+
+
+def test_rspq_fallback_handles_deletions():
+    """The fallback wrapper supports negative tuples (the paper's RSPQ has
+    no Delete listing): rebuild from retained edges, exact vs an RSPQ fed
+    only the surviving stream."""
+    from repro.streaming.stream import SGT
+
+    svc = PersistentQueryService(window=1000.0, slide=100.0)
+    svc.register("conf", CONFLICT_EXPR, engine="dense",
+                 path_semantics="simple", n_slots=16)
+    events = _conflict_stream()
+    report = svc.ingest(
+        Stream([SGT(ts, u, v, lab, op) for (op, u, v, lab, ts) in events]))
+    assert "conf" in report.fallbacks
+    # delete one lasso edge: the fallback must re-derive
+    svc.ingest(Stream([SGT(20.0, "x", "y", "a2q", "-")]))
+    oracle = RSPQ(compile_query(CONFLICT_EXPR), 1000.0)
+    live = {}
+    for (op, u, v, lab, ts) in events:
+        live[(u, v, lab)] = ts
+    del live[("x", "y", "a2q")]
+    for (u, v, lab), ts in sorted(live.items(), key=lambda kv: kv[1]):
+        oracle.insert(u, v, lab, ts)
+    oracle.expire(20.0)
+    assert svc._ref_engines["conf"].current_results() == oracle.current_results()
+
+
+def test_rspq_fallback_disabled_keeps_dense_lane():
+    from repro.streaming.stream import SGT
+
+    svc = PersistentQueryService(window=1000.0, slide=100.0,
+                                 rspq_fallback=False)
+    svc.register("conf", CONFLICT_EXPR, engine="dense",
+                 path_semantics="simple", n_slots=16)
+    events = _conflict_stream()
+    report = svc.ingest(
+        Stream([SGT(ts, u, v, lab, op) for (op, u, v, lab, ts) in events]))
+    assert not report.fallbacks
+    assert "conf" in svc._dense_specs       # still dense
+    assert svc.stats["conf"].conflicted     # but flagged (PR 2 behavior)

@@ -92,6 +92,22 @@ def test_query_churn_benchmark():
 
 
 @pytest.mark.slow
+def test_sharded_engine_benchmark():
+    """benchmarks/fig14_sharded_engine in the CI slow tier: MeshExecutor on
+    a host-local 8-device CPU mesh vs LocalExecutor — per-event result
+    identity and a >0 masked-skip shard-round win are asserted inside (the
+    subprocess carries XLA_FLAGS so the devices exist before jax init)."""
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.fig14_sharded_engine"],
+        capture_output=True, text=True, timeout=1200,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "XLA_FLAGS": "--xla_force_host_platform_device_count=8"},
+    )
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "[ok] masked-skip savings > 0" in proc.stdout
+
+
+@pytest.mark.slow
 def test_dryrun_machinery_smoke():
     """Full dry-run protocol on one cell in a subprocess (512 host devices):
     lower + compile + memory/cost/collective scrape must all succeed."""
