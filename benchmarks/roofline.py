@@ -62,8 +62,13 @@ def analyze(rec: Dict) -> Dict:
         # HLO flop counts under-count fori bodies (counted once); use the
         # ANALYTIC semiring op count, on the unit each mode actually uses
         ops = rec.get("semiring_ops", 0.0)
-        if rec.get("engine_mode", "baseline") == "mxu":
-            dev_flops = ops * max(rec.get("n_levels", 1), 1) / chips
+        # n_levels > 0 marks every level-quantized lowering: the single-
+        # query "mxu" cell AND the batched bucket-backend cells. Executed
+        # dot count is level_dots (= T+1: BucketBackend's alloc includes
+        # the origin-snap slack level); legacy artifacts fall back to T.
+        if rec.get("n_levels", 0) > 0:
+            dots = rec.get("level_dots", 0) or rec.get("n_levels", 1)
+            dev_flops = ops * max(dots, 1) / chips
             peak = PEAK_FLOPS   # boolean matmuls on the MXU
         else:
             dev_flops = ops / chips
@@ -78,11 +83,13 @@ def analyze(rec: Dict) -> Dict:
     ratio = mf / hlo_global if hlo_global else 0.0
     if rec.get("kind") == "rpq":
         # useful = semiring ops / executed ops (mxu pays T x for MXU speed)
-        ratio = 1.0 / max(rec.get("n_levels", 1), 1)             if rec.get("engine_mode") == "mxu" else 1.0
+        dots = rec.get("level_dots", 0) or rec.get("n_levels", 1)
+        ratio = (1.0 / max(dots, 1)
+                 if rec.get("n_levels", 0) > 0 else 1.0)
     # roofline fraction: useful model flops per chip-second at the bound
     t_bound = max(terms.values())
     use_peak = PEAK_FLOPS
-    if rec.get("kind") == "rpq" and rec.get("engine_mode", "baseline") != "mxu":
+    if rec.get("kind") == "rpq" and rec.get("n_levels", 0) <= 0:
         use_peak = VPU_PEAK
     frac = min((mf / chips / use_peak) / t_bound, 1.0) if t_bound else 0.0
     return {

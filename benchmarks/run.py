@@ -16,7 +16,8 @@ def main() -> None:
     from . import (fig4_throughput, fig5_index_size, fig6_window,
                    fig7_query_size, fig10_deletions, fig11_vs_batch,
                    fig12_multi_query, fig13_query_churn,
-                   fig14_sharded_engine, roofline, table4_rspq)
+                   fig14_sharded_engine, fig15_backend_shootout,
+                   roofline, table4_rspq)
 
     scale = 0.4 if args.fast else 1.0
     modules = [
@@ -33,6 +34,9 @@ def main() -> None:
         # interpreter; run under XLA_FLAGS=--xla_force_host_platform_device_count=8
         # for the real sharded point — the CI slow tier does)
         ("fig14", lambda: fig14_sharded_engine.run(n_edges=int(400 * scale))),
+        # fig15 runs all three contraction backends through both executors
+        # (pallas/bucket kernels interpret off-TPU; see the module docstring)
+        ("fig15", lambda: fig15_backend_shootout.run(n_edges=int(240 * scale))),
         ("roofline", roofline.run),
     ]
     print("name,us_per_call,derived")

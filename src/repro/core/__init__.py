@@ -9,6 +9,14 @@ Public API:
     batch_rapq / streaming_oracle  -- batch baselines
 """
 from .automaton import DFA, compile_query
+from .backend import (
+    KNOWN_BACKENDS,
+    BucketBackend,
+    ContractionBackend,
+    JnpBackend,
+    PallasBackend,
+    resolve_backend,
+)
 from .batch import batch_rapq, batch_rspq_bruteforce, snapshot_from_edges, streaming_oracle
 from .engine import BatchedDenseRPQEngine, DenseRPQEngine, RegisteredQuery
 from .executor import Executor, LocalExecutor, QueryTables
@@ -17,6 +25,12 @@ from .reference import RAPQ, RSPQ, SnapshotGraph
 __all__ = [
     "DFA",
     "compile_query",
+    "ContractionBackend",
+    "JnpBackend",
+    "PallasBackend",
+    "BucketBackend",
+    "resolve_backend",
+    "KNOWN_BACKENDS",
     "RAPQ",
     "RSPQ",
     "SnapshotGraph",

@@ -1,0 +1,369 @@
+"""Contraction backends: the semiring round's hardware substrate as a
+first-class object (PR 4 tentpole).
+
+Before this layer existed, ``backend`` was a bare string threaded through
+six modules and silently treated as "jnp" whenever it matched nothing. A
+:class:`ContractionBackend` instead owns
+
+  * the operand REPRESENTATION the closure loop runs on —
+    :meth:`prepare_state` / :meth:`decode_state` convert from/to the
+    engine's canonical f32-timestamp arrays at the dispatch boundary, so
+    the loop itself never leaves the backend's representation (identity
+    for the float backends; level-quantized int32 for the bucket mode);
+  * the batched CONTRACTION over that representation —
+    :meth:`contract_batched` for the dense round's gathered form,
+    :meth:`contract_rows` for the shard-local form the mesh executor
+    feeds, :meth:`contract` for the legacy single-query round;
+  * its semiring ZERO in that representation (``-inf`` for timestamps,
+    level ``0`` for buckets) and an ``exact`` flag (False marks backends
+    whose results are a bounded coarsening of the float semiring rather
+    than bit-identical).
+
+Three implementations:
+
+``jnp`` (:class:`JnpBackend`)
+    Chunked pure-jnp oracle. Runs everywhere, bit-exact, the default.
+
+``pallas`` (:class:`PallasBackend`)
+    The fused batched VPU max-min kernel
+    (:func:`~repro.kernels.maxmin.maxmin.maxmin_matmul_fused`): one grid
+    launch per round over (J, m/bm, n/bn, k/bk) instead of a vmap of J
+    single-pair launches. Bit-exact (max/min never reassociates).
+
+``mxu_bucket`` (:class:`BucketBackend`)
+    Level-quantized boolean closure on the MXU (kernels/bucket): inside a
+    dispatch the (Q, N, N, K) state lives as int32 levels on an ABSOLUTE
+    time grid of step ``w_max / n_levels``, contractions decompose into T
+    boolean matmuls the MXU executes natively, and emit decodes levels
+    back to grid timestamps — i.e. to a COARSENED expiry. The exactness
+    guard (tested): the decoded state equals the float engine's state
+    mapped through the grid quantizer, so every float-valid pair is
+    reported and any extra pair's true bottleneck lies within one level
+    step of the expiry boundary.
+
+``resolve_backend`` is the single entry point: strings validate against
+``KNOWN_BACKENDS`` and raise on anything else ("palas" used to run jnp
+without a whisper), instances pass through. String-resolved backends are
+process-wide singletons so the jitted step functions (which take the
+backend as a static argument) share one compile cache.
+"""
+from __future__ import annotations
+
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.bucket.bucket import bucket_maxmin_fused
+from ..kernels.bucket.ref import bucket_maxmin_ref
+from ..kernels.maxmin.maxmin import maxmin_matmul, maxmin_matmul_fused
+from ..kernels.maxmin.ref import maxmin_matmul_ref
+
+NEG_INF = float("-inf")
+
+
+def _interp_default(interpret: Optional[bool]) -> bool:
+    """interpret=None -> Pallas interpreter everywhere but TPU (the CPU
+    validation path; TPU compiles the real kernel)."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return bool(interpret)
+
+
+class ContractionBackend:
+    """One relaxation round's contraction substrate (see module docstring).
+
+    Instances compare and hash BY CONFIGURATION (:meth:`config_key`):
+    they ride through ``jax.jit`` as static arguments and key the mesh
+    executor's step-function cache, so two identically-configured
+    instances share one compile cache (and a service group accepts them
+    as "the same backend"). Subclasses that add configuration attributes
+    must fold them into :meth:`config_key`.
+    """
+
+    name: str = "abstract"
+    exact: bool = True
+    #: semiring zero in the backend's operand representation
+    zero: float = NEG_INF
+
+    def config_key(self) -> tuple:
+        """Hashable full-configuration identity (type + every attribute
+        that changes traced behavior)."""
+        return (type(self).__name__, self.name)
+
+    def __eq__(self, other) -> bool:
+        return (isinstance(other, ContractionBackend)
+                and self.config_key() == other.config_key())
+
+    def __hash__(self) -> int:
+        return hash(self.config_key())
+
+    # -- state representation hooks ------------------------------------------
+
+    def encode(self, x: jnp.ndarray, now=None, w_max=None) -> jnp.ndarray:
+        """Timestamp array -> operand representation (identity for float
+        backends). ``now``/``w_max`` anchor representation grids that move
+        with the stream clock (bucket mode)."""
+        return x
+
+    def prepare_state(self, dist, adj, now=None, w_max=None):
+        """(dist, adj) f32 timestamps -> closure operands. Called once per
+        dispatch, before the round loop."""
+        return dist, adj
+
+    def decode_state(self, dist, now=None, w_max=None) -> jnp.ndarray:
+        """Closure-result operand -> f32 timestamps (the engine's canonical
+        inter-dispatch representation; checkpoints and emit read this)."""
+        return dist
+
+    # -- contraction ---------------------------------------------------------
+
+    def contract(self, d: jnp.ndarray, a: jnp.ndarray) -> jnp.ndarray:
+        """Single-pair maxmin over u: d (N, N)[x, u] x a (N, N)[u, v] ->
+        (N, N)[x, v] (legacy single-query round)."""
+        raise NotImplementedError
+
+    def contract_rows(self, d_s: jnp.ndarray, a_l: jnp.ndarray) -> jnp.ndarray:
+        """Batched maxmin over u for gathered transition rows:
+        d_s (J, N, N)[x, u] x a_l (J, N, N)[u, v] -> (J, N, N)[x, v]."""
+        raise NotImplementedError
+
+    def contract_batched(self, dist, adj, btt, mask) -> jnp.ndarray:
+        """The dense round's contraction: gather each transition row's
+        operands from dist (Q, N, N, K) / adj (L, N, N) per the flattened
+        table ``btt``, contract, and zero masked rows. ``mask`` is the
+        (J,) active-row mask (shape padding AND converged-lane masking
+        folded in by the caller). Returns (J, N, N) contributions in the
+        backend's representation; masked rows carry :attr:`zero`."""
+        d_s = dist[btt.qidx, :, :, btt.src]           # (J, N, N) [x, u]
+        a_l = adj[btt.lab]                            # (J, N, N) [u, v]
+        contrib = self.contract_rows(d_s, a_l)
+        return jnp.where(mask[:, None, None], contrib,
+                         jnp.asarray(self.zero, contrib.dtype))
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging nicety
+        return f"<{type(self).__name__} {self.name!r}>"
+
+
+class JnpBackend(ContractionBackend):
+    """Chunked pure-jnp (max, min) contraction — the oracle and default.
+
+    VPU-bound on TPU like the pallas kernel, but scheduled by XLA: the
+    (m, k, n) broadcast intermediate rematerializes per fusion rather than
+    tiling through VMEM. Bit-identical results (same op, same order)."""
+
+    name = "jnp"
+
+    def contract(self, d, a):
+        return maxmin_matmul_ref(d, a)
+
+    def contract_rows(self, d_s, a_l):
+        return jax.vmap(maxmin_matmul_ref)(d_s, a_l)
+
+
+class PallasBackend(ContractionBackend):
+    """Fused batched VPU max-min kernel (kernels/maxmin).
+
+    One grid launch covers every transition row of a round — grid
+    (J, m/bm, n/bn, k/bk), k innermost — so A/B tiles stream HBM→VMEM once
+    per output-tile visit instead of once per vmap instance, and the
+    output tile stays VMEM-resident across the k sweep. Exact: max/min
+    has no floating-point reassociation error, so results are
+    bit-identical to :class:`JnpBackend` (asserted by the conformance
+    suite and fig15).
+
+    ``interpret=None`` auto-selects the Pallas interpreter off-TPU (the
+    CPU validation path used by tests and CI's pallas-interpret leg).
+    """
+
+    name = "pallas"
+
+    def __init__(self, interpret: Optional[bool] = None,
+                 bm: int = 128, bn: int = 128, bk: int = 64):
+        self.interpret = interpret
+        self.bm, self.bn, self.bk = bm, bn, bk
+
+    def config_key(self) -> tuple:
+        return (type(self).__name__, self.interpret,
+                self.bm, self.bn, self.bk)
+
+    def contract(self, d, a):
+        return maxmin_matmul(d, a, bm=self.bm, bn=self.bn, bk=self.bk,
+                             interpret=_interp_default(self.interpret))
+
+    def contract_rows(self, d_s, a_l):
+        return maxmin_matmul_fused(d_s, a_l, bm=self.bm, bn=self.bn,
+                                   bk=self.bk,
+                                   interpret=_interp_default(self.interpret))
+
+
+class BucketBackend(ContractionBackend):
+    """Level-quantized boolean closure on the MXU (kernels/bucket).
+
+    Representation: timestamps quantize onto an ABSOLUTE grid of step
+    ``w_max / n_levels`` — level l decodes to ``origin + l * step`` where
+    ``origin = floor((now - w_max) / step) * step`` is the window's lower
+    edge snapped DOWN to the grid (so the grid never shifts under a value
+    between dispatches: re-encoding an on-grid value is the identity, and
+    the one-time coarsening error of ``< step`` per raw timestamp never
+    accumulates). Level 0 is the semiring zero: -inf, plus anything at or
+    below ``origin`` — i.e. values a full window old, dead for every
+    query's read-time threshold. ``n_levels + 1`` levels are allocated so
+    the sub-step slack between ``origin`` and ``now - w_max`` never clips
+    a live value.
+
+    Exactness guard: the grid map is monotone, so it commutes with max and
+    min — the level closure IS the float closure mapped through the grid,
+    elementwise (tests/test_backends.py asserts this equality against a
+    float engine run on the same stream). Decoded values land in
+    ``(true - GRID_EPS*step, true + step)`` (the EPS term is the fp snap
+    tolerance that keeps re-quantization idempotent — see
+    :attr:`GRID_EPS`), so emit misses no float-valid pair except within
+    that vanishing tolerance of the threshold; the error is a COARSENED
+    EXPIRY: an extra pair's true bottleneck lies within one step of its
+    query's window boundary.
+
+    Contraction: each level matmul decomposes into T boolean matmuls
+    (``C >= theta  iff  exists u: A >= theta and B >= theta``) the MXU
+    executes natively — ``use_pallas=True`` runs the fused batched kernel
+    (levels binarized in registers, A/B read from HBM once for all T
+    thresholds); the default jnp decomposition lowers to T XLA dots (MXU
+    on TPU, and the portable path everywhere else).
+    """
+
+    name = "mxu_bucket"
+    exact = False
+    zero = 0
+
+    #: FLOOR of the snap tolerance (in level-step units) for the grid
+    #: ceil: a decoded on-grid value re-encodes through rounded fp ops
+    #: (origin + l*step, then the division), so its ratio lands slightly
+    #: ABOVE the integer when the step is not exactly representable (e.g.
+    #: w=2.4, T=8). An unguarded ceil would then bump it a full level per
+    #: dispatch — unbounded upward drift. The error of the round trip is
+    #: ABSOLUTE (~a few ulps of the timestamp magnitude), so the applied
+    #: tolerance scales with the stream clock: max(GRID_EPS,
+    #: 8 * ulp(now) / step), clamped below half a level. Snapping anything
+    #: within tolerance of a grid line down to it restores idempotence;
+    #: the price is that a value within tol*step ABOVE a line decodes to
+    #: the line (rounds DOWN by < tol*step — at large clocks that is
+    #: simply the f32 resolution limit), so the coarsening bound is
+    #: (-tol*step, +step) rather than exactly [0, step).
+    GRID_EPS: float = 1e-4
+
+    def __init__(self, n_levels: int = 8, use_pallas: Optional[bool] = None,
+                 interpret: Optional[bool] = None):
+        if n_levels < 1:
+            raise ValueError(f"n_levels must be >= 1, got {n_levels}")
+        self.n_levels = int(n_levels)
+        self.use_pallas = use_pallas
+        self.interpret = interpret
+
+    def config_key(self) -> tuple:
+        return (type(self).__name__, self.n_levels, self.use_pallas,
+                self.interpret)
+
+    # -- the absolute level grid ---------------------------------------------
+
+    def _grid(self, now, w_max):
+        w = jnp.maximum(jnp.asarray(w_max, jnp.float32), 1e-30)
+        step = w / self.n_levels
+        now_f = jnp.asarray(now, jnp.float32)
+        now_safe = jnp.where(jnp.isfinite(now_f), now_f, jnp.float32(0.0))
+        origin = jnp.floor((now_safe - w) / step) * step
+        return origin, step
+
+    def encode(self, x, now=None, w_max=None):
+        if now is None or w_max is None:
+            raise ValueError(
+                "mxu_bucket needs the stream clock: pass now/w_max through "
+                "the closure (the executor dispatches do)")
+        origin, step = self._grid(now, w_max)
+        # ceil with a snap-down tolerance: keeps re-encoding a decoded
+        # value the identity under fp rounding, so the coarsening error
+        # never accumulates across dispatches. The round trip's error is
+        # absolute (~ulp of the clock magnitude), hence the clock-scaled
+        # term; the 0.45-level clamp stops the snap from ever swallowing
+        # half a level when the clock outgrows the grid's f32 resolution.
+        now_f = jnp.asarray(now, jnp.float32)
+        now_mag = jnp.where(jnp.isfinite(now_f), jnp.abs(now_f), 0.0)
+        ulp_now = now_mag * jnp.float32(2.0 ** -23)
+        tol = jnp.clip(8.0 * ulp_now / step, self.GRID_EPS, 0.45)
+        lvl = jnp.ceil((x - origin) / step - tol)
+        lvl = jnp.clip(lvl, 0.0, float(self.n_levels + 1))
+        lvl = jnp.where(jnp.isfinite(x) & (x > origin), lvl, 0.0)
+        return lvl.astype(jnp.int32)
+
+    def prepare_state(self, dist, adj, now=None, w_max=None):
+        return (self.encode(dist, now, w_max), self.encode(adj, now, w_max))
+
+    def decode_state(self, dist, now=None, w_max=None):
+        origin, step = self._grid(now, w_max)
+        return jnp.where(
+            dist > 0, origin + dist.astype(jnp.float32) * step,
+            jnp.float32(NEG_INF),
+        )
+
+    # -- contraction on levels -----------------------------------------------
+
+    @property
+    def _t_alloc(self) -> int:
+        return self.n_levels + 1
+
+    def _use_pallas(self) -> bool:
+        if self.use_pallas is None:
+            return jax.default_backend() == "tpu"
+        return bool(self.use_pallas)
+
+    def contract(self, d, a):
+        return bucket_maxmin_ref(d, a, self._t_alloc)
+
+    def contract_rows(self, d_s, a_l):
+        if self._use_pallas():
+            return bucket_maxmin_fused(
+                d_s, a_l, n_levels=self._t_alloc,
+                interpret=_interp_default(self.interpret))
+        # jnp threshold decomposition; XLA lowers each theta-dot to the MXU
+        out = jnp.zeros(d_s.shape[:2] + (a_l.shape[2],), jnp.int32)
+        for theta in range(1, self._t_alloc + 1):
+            db = (d_s >= theta).astype(jnp.bfloat16)
+            ab = (a_l >= theta).astype(jnp.bfloat16)
+            reach = jnp.einsum("jxu,juv->jxv", db, ab,
+                               preferred_element_type=jnp.float32) > 0.5
+            out = out + reach.astype(jnp.int32)
+        return out
+
+
+KNOWN_BACKENDS = ("jnp", "pallas", "mxu_bucket")
+
+_SINGLETONS = {}
+
+BackendLike = Union[str, ContractionBackend]
+
+
+def resolve_backend(spec: BackendLike) -> ContractionBackend:
+    """Resolve a backend name or instance to a :class:`ContractionBackend`.
+
+    Raises ``ValueError`` for unknown names — the old string plumbing ran
+    the jnp reference for ANY unrecognized string ("palas" silently got
+    jnp), so every construction path now validates here. String-named
+    backends are interned process-wide (stable identity keeps the jitted
+    steps' static-argument compile cache shared across engines)."""
+    if isinstance(spec, ContractionBackend):
+        return spec
+    if isinstance(spec, str):
+        if spec not in KNOWN_BACKENDS:
+            raise ValueError(
+                f"unknown contraction backend {spec!r}; known backends: "
+                f"{', '.join(KNOWN_BACKENDS)} (or pass a ContractionBackend "
+                f"instance)")
+        if spec not in _SINGLETONS:
+            _SINGLETONS[spec] = {
+                "jnp": JnpBackend,
+                "pallas": PallasBackend,
+                "mxu_bucket": BucketBackend,
+            }[spec]()
+        return _SINGLETONS[spec]
+    raise TypeError(
+        f"backend must be a name in {KNOWN_BACKENDS} or a ContractionBackend, "
+        f"got {type(spec).__name__}")

@@ -245,7 +245,7 @@ class BatchedDenseRPQEngine:
         queries: Sequence[RegisteredQuery],
         n_slots: int = 128,
         batch_size: int = 32,
-        backend: str = "jnp",
+        backend="jnp",  # name in backend.KNOWN_BACKENDS or a ContractionBackend
         executor: Optional[Executor] = None,
     ):
         queries = list(queries)
@@ -377,15 +377,15 @@ class BatchedDenseRPQEngine:
         self.not_contained = jnp.asarray(nc)
         self.windows = jnp.asarray(windows)
         self.live_mask = jnp.asarray(live)
-        self.tables = QueryTables(
-            self.btt, self.finals_mask, self.windows, self.live_mask,
-            int(live.sum()),
-        )
         if live.any():
             self.max_window = float(windows[live].max())
         # else: keep the previous retention threshold — with no live queries
         # the shared graph is retained at the last group policy so a future
         # registration still answers over the live window
+        self.tables = QueryTables(
+            self.btt, self.finals_mask, self.windows, self.live_mask,
+            int(live.sum()), float(self.max_window),
+        )
 
     def _repad_arrays(self) -> None:
         """Grow device state in place to the current (q_cap, label-slot, K)
@@ -930,7 +930,7 @@ class DenseRPQEngine(BatchedDenseRPQEngine):
         window: float,
         n_slots: int = 128,
         batch_size: int = 32,
-        backend: str = "jnp",
+        backend="jnp",
         path_semantics: str = "arbitrary",
         executor: Optional[Executor] = None,
     ):

@@ -42,6 +42,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .backend import BackendLike, ContractionBackend, resolve_backend
 from .semiring import (
     NEG_INF,
     BatchedTransitionTable,
@@ -71,13 +72,17 @@ def init_batched_arrays(
 class QueryTables(NamedTuple):
     """Per-lane metadata the engine rebuilds at lifecycle events and the
     executor consumes at every dispatch. ``n_live`` is the host-side live
-    lane count (for unmasked-regime round accounting)."""
+    lane count (for unmasked-regime round accounting); ``max_window`` is
+    the group's retention threshold (largest live window, sticky across an
+    empty query set) — clock-anchored backends (mxu_bucket) derive their
+    level grid from it at every dispatch."""
 
     btt: BatchedTransitionTable
     finals_mask: jnp.ndarray  # (Q, K) bool
     windows: jnp.ndarray      # (Q,) f32
     live_mask: jnp.ndarray    # (Q,) bool
     n_live: int
+    max_window: float = 0.0
 
 
 # ---------------------------------------------------------------------------
@@ -99,13 +104,15 @@ def _ingest(
     finals_mask: jnp.ndarray,  # (Q, K) bool
     windows: jnp.ndarray,      # (Q,) f32
     live_mask: jnp.ndarray,    # (Q,) bool: False for inert padding lanes
-    backend: str = "jnp",
+    w_max: jnp.ndarray,        # () f32 group retention threshold
+    backend: BackendLike = "jnp",
 ):
     eff_ts = jnp.where(mask, ts, NEG_INF)
     adj = arrays.adj.at[lab, src, dst].max(eff_ts, mode="drop")
     now = jnp.maximum(arrays.now, jnp.maximum(jnp.max(eff_ts), ts_floor))
     dist, rounds, qrounds = batched_closure(
-        arrays.dist, adj, btt, backend, query_mask=live_mask
+        arrays.dist, adj, btt, backend, query_mask=live_mask,
+        now=now, w_max=w_max,
     )
     low = now - windows
     valid = batched_valid_pairs(dist, finals_mask, low)
@@ -126,7 +133,8 @@ def _delete(
     finals_mask: jnp.ndarray,
     windows: jnp.ndarray,
     live_mask: jnp.ndarray,    # (Q,) bool
-    backend: str = "jnp",
+    w_max: jnp.ndarray,        # () f32
+    backend: BackendLike = "jnp",
 ):
     """Explicit deletion (negative tuple): clear adjacency entries and
     recompute every query's closure from scratch — the paper's uniform
@@ -138,7 +146,8 @@ def _delete(
     adj = arrays.adj.at[lab, src, dst].set(drop, mode="drop")
     dist0 = jnp.full_like(arrays.dist, NEG_INF)
     dist, rounds, qrounds = batched_closure(
-        dist0, adj, btt, backend, query_mask=live_mask
+        dist0, adj, btt, backend, query_mask=live_mask,
+        now=now, w_max=w_max,
     )
     valid_after = batched_valid_pairs(dist, finals_mask, low)
     invalidated = jnp.logical_and(valid_before, jnp.logical_not(valid_after))
@@ -195,8 +204,10 @@ class Executor:
     q_multiple: int = 1
     n_multiple: int = 1
 
-    def __init__(self, backend: str = "jnp"):
-        self.backend = backend
+    def __init__(self, backend: BackendLike = "jnp"):
+        # first-class ContractionBackend; unknown names raise HERE, at
+        # construction (they used to fall silently back to the jnp oracle)
+        self.backend: ContractionBackend = resolve_backend(backend)
         self.steps = 0  # jitted ingest/delete dispatches
         self._arrays: Optional[BatchedEngineArrays] = None
         # (rounds_dev, qrounds_dev, n_live) queue: converted lazily so the
@@ -282,6 +293,7 @@ class Executor:
             jnp.asarray(ts), jnp.asarray(mask),
             jnp.asarray(ts_floor, jnp.float32),
             tables.btt, tables.finals_mask, tables.windows, tables.live_mask,
+            jnp.asarray(tables.max_window, jnp.float32),
             backend=self.backend,
         )
         self._account(rounds, qrounds, tables.n_live)
@@ -297,6 +309,7 @@ class Executor:
             jnp.asarray(src), jnp.asarray(dst), jnp.asarray(lab),
             jnp.asarray(mask), jnp.asarray(ts_now, jnp.float32),
             tables.btt, tables.finals_mask, tables.windows, tables.live_mask,
+            jnp.asarray(tables.max_window, jnp.float32),
             backend=self.backend,
         )
         self._account(rounds, qrounds, tables.n_live)
@@ -312,7 +325,8 @@ class Executor:
         mask = tables.live_mask if query_mask is None else jnp.asarray(
             np.asarray(query_mask, bool))
         dist, rounds, qrounds = batched_closure(
-            a.dist, a.adj, tables.btt, self.backend, query_mask=mask
+            a.dist, a.adj, tables.btt, self.backend, query_mask=mask,
+            now=a.now, w_max=jnp.asarray(tables.max_window, jnp.float32),
         )
         self._arrays = a._replace(dist=dist)
         self._account(rounds, qrounds, tables.n_live)

@@ -14,10 +14,14 @@ plus the *base* term for transitions out of s0 (seed paths of length 1):
 The closure iterates rounds to a fixpoint (monotone, so `lax.while_loop`
 on a changed-flag terminates in at most product-graph-diameter rounds).
 
-Three interchangeable contraction back-ends:
-  * ``jnp``        chunked pure-jnp (CPU tests / oracle)
-  * ``pallas``     VPU max-min kernel (kernels/maxmin)
-  * ``mxu_bucket`` level-quantized boolean closure on the MXU (kernels/bucket)
+Every round is parameterized by a :class:`~repro.core.backend.ContractionBackend`
+object (PR 4) — ``jnp`` oracle, fused-batched ``pallas`` VPU kernel, or the
+level-quantized ``mxu_bucket`` MXU mode. Plain strings are accepted and
+VALIDATED (unknown names raise; they used to fall back to jnp silently).
+The closure entry points additionally thread ``now``/``w_max`` so a backend
+whose operand representation is anchored to the stream clock (the bucket
+level grid) can ``prepare_state``/``decode_state`` at the dispatch
+boundary; the round loop itself never leaves the backend's representation.
 """
 from __future__ import annotations
 
@@ -28,8 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..kernels.maxmin.maxmin import maxmin_matmul
-from ..kernels.maxmin.ref import maxmin_matmul_ref
+from .backend import BackendLike, ContractionBackend, resolve_backend
 
 NEG_INF = float("-inf")
 
@@ -75,23 +78,19 @@ class TransitionTable(NamedTuple):
         )
 
 
-def _contract(dist_s: jnp.ndarray, adj_l: jnp.ndarray, backend: str) -> jnp.ndarray:
-    """maxmin over u for a single transition: dist_s (N,N)[x,u] x adj_l
-    (N,N)[u,v] -> (N,N)[x,v]."""
-    if backend == "pallas":
-        return maxmin_matmul(dist_s, adj_l, interpret=jax.default_backend() != "tpu")
-    return maxmin_matmul_ref(dist_s, adj_l)
-
-
 def relax_round(
-    dist: jnp.ndarray,          # (N, N, K) f32
-    adj: jnp.ndarray,           # (L, N, N) f32
+    dist: jnp.ndarray,          # (N, N, K) in the backend's representation
+    adj: jnp.ndarray,           # (L, N, N)
     tt: TransitionTable,
-    backend: str = "jnp",
+    backend: BackendLike = "jnp",
 ) -> jnp.ndarray:
     """One relaxation round; returns the pointwise max of dist and all
-    transition contributions (monotone)."""
-    n = dist.shape[0]
+    transition contributions (monotone). Operands are in the backend's
+    representation (f32 timestamps for jnp/pallas, int32 levels for
+    mxu_bucket — callers of the raw round encode themselves; the closure
+    entry points do it via ``prepare_state``)."""
+    backend = resolve_backend(backend)
+    zero = jnp.asarray(backend.zero, dist.dtype)
 
     def per_transition(j, acc):
         s = tt.src[j]
@@ -100,12 +99,12 @@ def relax_round(
             jnp.moveaxis(dist, 2, 0), s, axis=0, keepdims=False
         )  # (N, N) [x, u]
         adj_l = jax.lax.dynamic_index_in_dim(adj, l, axis=0, keepdims=False)
-        contrib = _contract(dist_s, adj_l, backend)           # (N, N) [x, v]
+        contrib = backend.contract(dist_s, adj_l)             # (N, N) [x, v]
         # base term: seed (x, x, s0) = +inf => min(+inf, adj[l, x, v]) = adj
         contrib = jnp.where(tt.start_mask[j], jnp.maximum(contrib, adj_l), contrib)
         # scatter-max into destination state slice
         oh = tt.dst_onehot[j]                                  # (K,)
-        upd = jnp.where(oh[None, None, :] > 0, contrib[:, :, None], NEG_INF)
+        upd = jnp.where(oh[None, None, :] > 0, contrib[:, :, None], zero)
         return jnp.maximum(acc, upd)
 
     out = jax.lax.fori_loop(0, tt.src.shape[0], per_transition, dist)
@@ -116,12 +115,13 @@ def closure(
     dist: jnp.ndarray,
     adj: jnp.ndarray,
     tt: TransitionTable,
-    backend: str = "jnp",
+    backend: BackendLike = "jnp",
     max_rounds: int = 0,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Iterate relaxation to fixpoint. Returns (dist, rounds_used).
 
     max_rounds=0 -> bound by N*K (longest simple product path)."""
+    backend = resolve_backend(backend)
     n, _, k = dist.shape
     bound = max_rounds if max_rounds > 0 else n * k + 1
 
@@ -233,19 +233,11 @@ class BatchedTransitionTable(NamedTuple):
         )
 
 
-def _contract_batched(d: jnp.ndarray, a: jnp.ndarray, backend: str) -> jnp.ndarray:
-    """Batched maxmin over u: d (J,N,N)[x,u] x a (J,N,N)[u,v] -> (J,N,N)."""
-    if backend == "pallas":
-        interp = jax.default_backend() != "tpu"
-        return jax.vmap(lambda x, y: maxmin_matmul(x, y, interpret=interp))(d, a)
-    return jax.vmap(maxmin_matmul_ref)(d, a)
-
-
 def batched_relax_round(
-    dist: jnp.ndarray,          # (Q, N, N, K) f32
-    adj: jnp.ndarray,           # (L, N, N) f32 shared adjacency
+    dist: jnp.ndarray,          # (Q, N, N, K) in the backend's representation
+    adj: jnp.ndarray,           # (L, N, N) shared adjacency (same repr)
     btt: BatchedTransitionTable,
-    backend: str = "jnp",
+    backend: BackendLike = "jnp",
     query_mask: Optional[jnp.ndarray] = None,   # (Q,) bool, True = relax
 ) -> jnp.ndarray:
     """One relaxation round over ALL queries' transitions at once.
@@ -261,19 +253,21 @@ def batched_relax_round(
     buys exact per-query round accounting (and, on a Q-sharded deployment,
     the signal to skip a converged lane's contraction entirely), not fewer
     FLOPs on a single device."""
+    backend = resolve_backend(backend)
     q, n, _, k = dist.shape
     active = btt.active
     if query_mask is not None:
         active = jnp.logical_and(active, query_mask[btt.qidx])
-    d_s = dist[btt.qidx, :, :, btt.src]               # (J, N, N) [x, u]
-    a_l = adj[btt.lab]                                # (J, N, N) [u, v]
-    contrib = _contract_batched(d_s, a_l, backend)    # (J, N, N) [x, v]
+    # contraction (masked rows carry the semiring zero already)
+    contrib = backend.contract_batched(dist, adj, btt, active)  # (J, N, N)
     # base term: seed (x, x, s0) = +inf => min(+inf, adj[l, x, v]) = adj
-    contrib = jnp.where(btt.start_mask[:, None, None],
+    # (applied only to ACTIVE start rows so it cannot unmask a zeroed row)
+    a_l = adj[btt.lab]                                # (J, N, N) [u, v]
+    base_rows = jnp.logical_and(btt.start_mask, active)
+    contrib = jnp.where(base_rows[:, None, None],
                         jnp.maximum(contrib, a_l), contrib)
-    # shape-padding rows / converged queries contribute the semiring zero
-    contrib = jnp.where(active[:, None, None], contrib, NEG_INF)
-    # scatter-max into (query, dst-state) slices; empty segments fill -inf
+    # scatter-max into (query, dst-state) slices; empty segments fill the
+    # dtype minimum (below the semiring zero in every representation)
     seg = btt.qidx * k + btt.dst                      # (J,)
     scat = jax.ops.segment_max(contrib, seg, num_segments=q * k)
     upd = jnp.transpose(scat.reshape(q, k, n, n), (0, 2, 3, 1))
@@ -287,9 +281,11 @@ def batched_closure(
     dist: jnp.ndarray,
     adj: jnp.ndarray,
     btt: BatchedTransitionTable,
-    backend: str = "jnp",
+    backend: BackendLike = "jnp",
     max_rounds: int = 0,
     query_mask: Optional[jnp.ndarray] = None,   # (Q,) bool initial mask
+    now: Optional[jnp.ndarray] = None,          # () stream clock
+    w_max: Optional[jnp.ndarray] = None,        # () group's largest window
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Iterate batched relaxation with per-query convergence masking.
 
@@ -309,11 +305,19 @@ def batched_closure(
     settles), ``query_rounds`` is the (Q,) int32 per-query count of rounds
     the query actively relaxed. ``query_rounds.sum()`` vs Q * ``rounds``
     (benchmarks/fig12_multi_query.py) quantifies how much of the group's
-    relaxation is no-op tail a Q-sharded execution could skip."""
+    relaxation is no-op tail a Q-sharded execution could skip.
+
+    ``now``/``w_max`` (the stream clock and the group's largest window)
+    anchor backends whose operand representation moves with the clock:
+    ``prepare_state`` converts the f32 timestamp arrays once at entry,
+    every round runs in the backend's representation, ``decode_state``
+    converts back once at exit (identity for jnp/pallas)."""
+    backend = resolve_backend(backend)
     q, n, _, k = dist.shape
     bound = max_rounds if max_rounds > 0 else n * k + 1
     mask0 = (jnp.ones((q,), bool) if query_mask is None
              else jnp.asarray(query_mask, bool))
+    dist_op, adj_op = backend.prepare_state(dist, adj, now, w_max)
 
     def cond(carry):
         _d, mask, it, _qr = carry
@@ -321,17 +325,17 @@ def batched_closure(
 
     def body(carry):
         d, mask, it, qr = carry
-        nd = batched_relax_round(d, adj, btt, backend, query_mask=mask)
+        nd = batched_relax_round(d, adj_op, btt, backend, query_mask=mask)
         changed = jnp.any(nd > d, axis=(1, 2, 3))     # (Q,) per-query
         return nd, jnp.logical_and(mask, changed), it + 1, qr + mask
 
-    dist0 = batched_relax_round(dist, adj, btt, backend, query_mask=mask0)
-    changed0 = jnp.logical_and(mask0, jnp.any(dist0 > dist, axis=(1, 2, 3)))
+    dist0 = batched_relax_round(dist_op, adj_op, btt, backend, query_mask=mask0)
+    changed0 = jnp.logical_and(mask0, jnp.any(dist0 > dist_op, axis=(1, 2, 3)))
     qr0 = mask0.astype(jnp.int32)
     dist_f, _, rounds, query_rounds = jax.lax.while_loop(
         cond, body, (dist0, changed0, jnp.asarray(1, jnp.int32), qr0)
     )
-    return dist_f, rounds, query_rounds
+    return backend.decode_state(dist_f, now, w_max), rounds, query_rounds
 
 
 def batched_valid_pairs(
@@ -416,7 +420,7 @@ def shard_relax_round(
     start_mask: jnp.ndarray,   # (J_s,)
     active: jnp.ndarray,       # (J_s,)
     query_mask: jnp.ndarray,   # (Q_l,) bool, True = relax
-    backend: str = "jnp",
+    backend: BackendLike = "jnp",
     model_axis: Optional[str] = None,
     model_size: int = 1,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -432,12 +436,15 @@ def shard_relax_round(
 
     Masking semantics mirror :func:`batched_relax_round` exactly: masked
     lanes contribute the semiring zero and pass through untouched.
+    Operands are in the backend's representation (:func:`shard_closure`
+    converts at the dispatch boundary).
     """
+    backend = resolve_backend(backend)
     q_l, n, n_m, k = dist_blk.shape
     act = jnp.logical_and(active, query_mask[qidx])
     d_s = dist_blk[qidx, :, :, src]               # (J, N, N_m) [x, u_local]
     a_u = adj_u[lab]                              # (J, N_m, N) [u_local, v]
-    part = _contract_batched(d_s, a_u, backend)   # (J, N, N)   [x, v] partial
+    part = backend.contract_rows(d_s, a_u)        # (J, N, N)   [x, v] partial
     if model_axis is not None and model_size > 1:
         part = jax.lax.pmax(part, model_axis)
         vstart = jax.lax.axis_index(model_axis) * n_m
@@ -449,7 +456,8 @@ def shard_relax_round(
     a_v = adj_v[lab]                              # (J, N, N_m)
     contrib = jnp.where(start_mask[:, None, None],
                         jnp.maximum(contrib, a_v), contrib)
-    contrib = jnp.where(act[:, None, None], contrib, NEG_INF)
+    contrib = jnp.where(act[:, None, None], contrib,
+                        jnp.asarray(backend.zero, contrib.dtype))
     seg = qidx * k + dst
     scat = jax.ops.segment_max(contrib, seg, num_segments=q_l * k)
     upd = jnp.transpose(scat.reshape(q_l, k, n, n_m), (0, 2, 3, 1))
@@ -467,10 +475,12 @@ def shard_closure(
     adj_v: jnp.ndarray,
     rows: Tuple[jnp.ndarray, ...],   # six (J_s,) arrays (shard_transitions)
     query_mask: jnp.ndarray,         # (Q_l,) bool initial mask
-    backend: str = "jnp",
+    backend: BackendLike = "jnp",
     model_axis: Optional[str] = None,
     model_size: int = 1,
     max_rounds: int = 0,
+    now: Optional[jnp.ndarray] = None,    # () stream clock (replicated)
+    w_max: Optional[jnp.ndarray] = None,  # () group's largest window
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Shard-local closure with convergence-aware dispatch.
 
@@ -487,18 +497,29 @@ def shard_closure(
     skip/finish-early signal the mesh executor aggregates into its
     masked-skip counters), ``query_rounds`` (Q_l,) matches the local
     engine's per-lane accounting.
+
+    The backend's representation boundary sits INSIDE the run branch:
+    operands are encoded once per dispatch, the loop runs on them, and the
+    result decodes back to f32 timestamps. The skip branch returns the
+    raw block untouched (zero work, exact passthrough). Encoding is
+    elementwise and ``now`` is replicated, so the per-shard conversion is
+    collective-free.
     """
+    backend = resolve_backend(backend)
     qidx, src, lab, dst, start, active = rows
     q_l, n, _n_m, k = dist_blk.shape
     bound = max_rounds if max_rounds > 0 else n * k + 1
 
-    def one_round(d, mask):
+    def one_round(d, a_u, a_v, mask):
         return shard_relax_round(
-            d, adj_u, adj_v, qidx, src, lab, dst, start, active, mask,
+            d, a_u, a_v, qidx, src, lab, dst, start, active, mask,
             backend=backend, model_axis=model_axis, model_size=model_size)
 
     def run(_):
-        d0, ch0 = one_round(dist_blk, query_mask)
+        d_op = backend.encode(dist_blk, now, w_max)
+        au_op = backend.encode(adj_u, now, w_max)
+        av_op = backend.encode(adj_v, now, w_max)
+        d0, ch0 = one_round(d_op, au_op, av_op, query_mask)
         m0 = jnp.logical_and(query_mask, ch0)
         qr0 = query_mask.astype(jnp.int32)
         it0 = jnp.asarray(1, jnp.int32)
@@ -508,7 +529,7 @@ def shard_closure(
 
         def body(carry):
             d, mask, it, qr, _keep = carry
-            nd, ch = one_round(d, mask)
+            nd, ch = one_round(d, au_op, av_op, mask)
             nmask = jnp.logical_and(mask, ch)
             it = it + 1
             keep = jnp.logical_and(jnp.any(nmask), it < bound)
@@ -517,7 +538,7 @@ def shard_closure(
         keep0 = jnp.logical_and(jnp.any(m0), it0 < bound)
         d_f, _, it_f, qr_f, _ = jax.lax.while_loop(
             cond, body, (d0, m0, it0, qr0, keep0))
-        return d_f, it_f, qr_f
+        return backend.decode_state(d_f, now, w_max), it_f, qr_f
 
     def skip(_):
         return (dist_blk, jnp.asarray(0, jnp.int32),

@@ -34,6 +34,13 @@ into per-shard partials combined by `pmax` is exact, and each query's
 fixpoint is independent of every other query (transitions only read their
 owning lane's slices).
 
+The per-shard closure contracts with the executor's SELECTED
+:class:`~repro.core.backend.ContractionBackend` (PR 4): the fused batched
+pallas kernel or the mxu_bucket level mode run per shard exactly as they
+do locally (the mesh path used to hardcode the jnp oracle). Identity still
+holds per backend — even the bucket mode's quantization is deterministic,
+so mesh and local bucket runs emit the same streams.
+
 Tests run this on a host-local CPU mesh
 (``XLA_FLAGS=--xla_force_host_platform_device_count=8``, the tier1-sharded
 CI job); a single-device mesh degenerates to one shard and still exercises
@@ -75,60 +82,71 @@ def _row_specs(q_axes) -> Tuple[P, ...]:
     return tuple(P(q_axes, None) for _ in range(6))
 
 
-def make_sharded_closure(mesh: Mesh, backend: str,
+def make_sharded_closure(mesh: Mesh, backend,
                          q_axes=("data",), model_axis: str = "model"):
-    """shard_map-wrapped per-shard closure: (dist, adj, rows, mask0) ->
-    (dist', shard_rounds (n_shards,), query_rounds (Q,))."""
+    """shard_map-wrapped per-shard closure: (dist, adj_u, adj_v, rows, mask0,
+    now, w_max) -> (dist', shard_rounds (n_shards,), query_rounds (Q,)).
+    ``now``/``w_max`` are replicated scalars anchoring clock-dependent
+    backend representations (the bucket level grid); each active shard
+    encodes its own block (elementwise, collective-free)."""
     qa = q_axes[0] if len(q_axes) == 1 else tuple(q_axes)
     n_model = mesh.shape[model_axis]
     dist_spec = P(qa, None, model_axis, None)
 
-    def body(dist_blk, adj_u, adj_v, *rows_and_mask):
-        rows = tuple(r[0] for r in rows_and_mask[:6])
-        mask0 = rows_and_mask[6]
+    def body(dist_blk, adj_u, adj_v, *rest):
+        rows = tuple(r[0] for r in rest[:6])
+        mask0, now, w_max = rest[6], rest[7], rest[8]
         d_f, rounds, qrounds = shard_closure(
             dist_blk, adj_u, adj_v, rows, mask0, backend=backend,
             model_axis=model_axis if n_model > 1 else None,
-            model_size=n_model,
+            model_size=n_model, now=now, w_max=w_max,
         )
         return d_f, rounds.reshape(1), qrounds
 
     return shard_map(
         body, mesh=mesh,
         in_specs=(dist_spec, P(None, model_axis, None), P(None, None, model_axis),
-                  *_row_specs(qa), P(qa)),
+                  *_row_specs(qa), P(qa), P(), P()),
         out_specs=(dist_spec, P(qa), P(qa)),
         check_rep=False,
     )
 
 
-def make_sharded_round(mesh: Mesh, backend: str,
+def make_sharded_round(mesh: Mesh, backend,
                        q_axes=("data",), model_axis: str = "model"):
     """One convergence-masked relaxation round (no fixpoint loop) with the
     same sharding/skip structure — the unit launch/dryrun_rpq.py lowers for
-    the roofline (round count is data-dependent, so cost is per round)."""
+    the roofline (round count is data-dependent, so cost is per round). The
+    backend's representation boundary wraps the single round: an active
+    shard encodes, contracts, decodes; a masked shard skips all three."""
+    from ..core.backend import resolve_backend
+
+    backend = resolve_backend(backend)
     qa = q_axes[0] if len(q_axes) == 1 else tuple(q_axes)
     n_model = mesh.shape[model_axis]
     dist_spec = P(qa, None, model_axis, None)
 
-    def body(dist_blk, adj_u, adj_v, *rows_and_mask):
-        qidx, src, lab, dst, start, active = (r[0] for r in rows_and_mask[:6])
-        mask0 = rows_and_mask[6]
+    def body(dist_blk, adj_u, adj_v, *rest):
+        qidx, src, lab, dst, start, active = (r[0] for r in rest[:6])
+        mask0, now, w_max = rest[6], rest[7], rest[8]
 
         def run(_):
+            d_op = backend.encode(dist_blk, now, w_max)
             nd, _changed = shard_relax_round(
-                dist_blk, adj_u, adj_v, qidx, src, lab, dst, start, active,
+                d_op, backend.encode(adj_u, now, w_max),
+                backend.encode(adj_v, now, w_max),
+                qidx, src, lab, dst, start, active,
                 mask0, backend=backend,
                 model_axis=model_axis if n_model > 1 else None,
                 model_size=n_model)
-            return nd
+            return backend.decode_state(nd, now, w_max)
 
         return jax.lax.cond(jnp.any(mask0), run, lambda _: dist_blk, None)
 
     return shard_map(
         body, mesh=mesh,
         in_specs=(dist_spec, P(None, model_axis, None), P(None, None, model_axis),
-                  *_row_specs(qa), P(qa)),
+                  *_row_specs(qa), P(qa), P(), P()),
         out_specs=dist_spec,
         check_rep=False,
     )
@@ -136,14 +154,17 @@ def make_sharded_round(mesh: Mesh, backend: str,
 
 def batched_round_lowering(mesh: Mesh, btt: BatchedTransitionTable,
                            q_cap: int, n_slots: int,
-                           q_axes=("data",), backend: str = "jnp"):
+                           q_axes=("data",), backend="jnp"):
     """The dryrun lowering of the mesh executor's round: returns
     ``(round_fn, arg_specs, arg_shardings, out_sharding)`` for
-    ``round_fn(dist, adj, query_mask)`` with dist (q_cap, N, N, K) sharded
-    Q->q_axes / v->'model' and the (Q,) convergence mask as a runtime,
-    lane-sharded input. ``q_cap`` is the lane capacity after padding the
-    live query count up to a multiple of the lane-shard count (inert lanes
-    are exactly the engine's bucketed padding)."""
+    ``round_fn(dist, adj, query_mask, now, w_max)`` with dist
+    (q_cap, N, N, K) sharded Q->q_axes / v->'model', the (Q,) convergence
+    mask as a runtime, lane-sharded input, and the replicated stream-clock
+    scalars a clock-anchored backend (mxu_bucket) quantizes against.
+    ``q_cap`` is the lane capacity after padding the live query count up to
+    a multiple of the lane-shard count (inert lanes are exactly the
+    engine's bucketed padding). ``backend`` selects the contraction
+    substrate the cell lowers — the SAME object the engine would run."""
     n_shards = int(np.prod([mesh.shape[a] for a in q_axes]))
     if q_cap % n_shards:
         raise ValueError(f"q_cap {q_cap} not divisible by {n_shards} lane shards")
@@ -153,23 +174,27 @@ def batched_round_lowering(mesh: Mesh, btt: BatchedTransitionTable,
     dist_sh = NamedSharding(mesh, P(qa, None, "model", None))
     adj_sh = NamedSharding(mesh, P(None, None, "model"))
     mask_sh = NamedSharding(mesh, P(qa))
+    scalar_sh = NamedSharding(mesh, P())
     dist_spec = jax.ShapeDtypeStruct((q_cap, n_slots, n_slots, btt.k), jnp.float32)
     adj_spec = jax.ShapeDtypeStruct((btt.n_labels, n_slots, n_slots), jnp.float32)
     mask_spec = jax.ShapeDtypeStruct((q_cap,), jnp.bool_)
+    scalar_spec = jax.ShapeDtypeStruct((), jnp.float32)
 
-    def round_fn(dist, adj, query_mask):
-        return sharded_round(dist, adj, adj, *rows, query_mask)
+    def round_fn(dist, adj, query_mask, now, w_max):
+        return sharded_round(dist, adj, adj, *rows, query_mask, now, w_max)
 
-    return (round_fn, (dist_spec, adj_spec, mask_spec),
-            (dist_sh, adj_sh, mask_sh), dist_sh)
+    return (round_fn,
+            (dist_spec, adj_spec, mask_spec, scalar_spec, scalar_spec),
+            (dist_sh, adj_sh, mask_sh, scalar_sh, scalar_sh), dist_sh)
 
 
 @functools.lru_cache(maxsize=None)
-def _mesh_step_fns(mesh: Mesh, q_axes: Tuple[str, ...], backend: str):
+def _mesh_step_fns(mesh: Mesh, q_axes: Tuple[str, ...], backend):
     """Jitted mesh step functions + canonical shardings, cached per
-    (mesh, lane axes, backend) so every MeshExecutor on the same mesh
-    shares one compile cache (mirroring the module-level jits of the local
-    executor)."""
+    (mesh, lane axes, backend object) so every MeshExecutor on the same
+    mesh shares one compile cache (mirroring the module-level jits of the
+    local executor; string-named backends resolve to process-wide
+    singletons, so the cache key is stable)."""
     qa = q_axes[0] if len(q_axes) == 1 else tuple(q_axes)
     sh = dict(
         adj=NamedSharding(mesh, P(None, None, "model")),
@@ -182,11 +207,12 @@ def _mesh_step_fns(mesh: Mesh, q_axes: Tuple[str, ...], backend: str):
     lane_sh = NamedSharding(mesh, P(qa))
 
     def ingest_impl(arrays, src, dst, lab, ts, mask, ts_floor,
-                    rows, finals_mask, windows, live_mask):
+                    rows, finals_mask, windows, live_mask, w_max):
         eff_ts = jnp.where(mask, ts, NEG_INF)
         adj = arrays.adj.at[lab, src, dst].max(eff_ts, mode="drop")
         now = jnp.maximum(arrays.now, jnp.maximum(jnp.max(eff_ts), ts_floor))
-        dist, shard_rounds, qrounds = closure(arrays.dist, adj, adj, *rows, live_mask)
+        dist, shard_rounds, qrounds = closure(
+            arrays.dist, adj, adj, *rows, live_mask, now, w_max)
         low = now - windows
         valid = batched_valid_pairs(dist, finals_mask, low)
         new = jnp.logical_and(valid, jnp.logical_not(arrays.emitted))
@@ -195,7 +221,7 @@ def _mesh_step_fns(mesh: Mesh, q_axes: Tuple[str, ...], backend: str):
                 shard_rounds, qrounds)
 
     def delete_impl(arrays, src, dst, lab, mask, ts_now,
-                    rows, finals_mask, windows, live_mask):
+                    rows, finals_mask, windows, live_mask, w_max):
         now = jnp.maximum(arrays.now, ts_now)
         low = now - windows
         valid_before = batched_valid_pairs(arrays.dist, finals_mask, low)
@@ -203,15 +229,17 @@ def _mesh_step_fns(mesh: Mesh, q_axes: Tuple[str, ...], backend: str):
                          arrays.adj[lab, src, dst])
         adj = arrays.adj.at[lab, src, dst].set(drop, mode="drop")
         dist0 = jnp.full_like(arrays.dist, NEG_INF)
-        dist, shard_rounds, qrounds = closure(dist0, adj, adj, *rows, live_mask)
+        dist, shard_rounds, qrounds = closure(
+            dist0, adj, adj, *rows, live_mask, now, w_max)
         valid_after = batched_valid_pairs(dist, finals_mask, low)
         invalidated = jnp.logical_and(valid_before, jnp.logical_not(valid_after))
         return (BatchedEngineArrays(adj, dist, arrays.emitted, now),
                 invalidated, shard_rounds, qrounds)
 
-    def relax_impl(arrays, rows, query_mask):
+    def relax_impl(arrays, rows, query_mask, w_max):
         dist, shard_rounds, qrounds = closure(
-            arrays.dist, arrays.adj, arrays.adj, *rows, query_mask)
+            arrays.dist, arrays.adj, arrays.adj, *rows, query_mask,
+            arrays.now, w_max)
         return arrays._replace(dist=dist), shard_rounds, qrounds
 
     return dict(
@@ -238,15 +266,18 @@ class MeshExecutor(Executor):
     """
 
     def __init__(self, mesh: Optional[Mesh] = None, model_axis: int = 1,
-                 q_axes: Sequence[str] = ("data",), backend: str = "jnp"):
-        super().__init__(backend)
+                 q_axes: Sequence[str] = ("data",), backend="jnp"):
+        super().__init__(backend)  # resolves to a ContractionBackend
         self.mesh = mesh if mesh is not None else host_mesh(model_axis)
         self.q_axes = tuple(q_axes)
         self.n_shards = int(np.prod([self.mesh.shape[a] for a in self.q_axes]))
         self.n_model = self.mesh.shape["model"]
         self.q_multiple = self.n_shards
         self.n_multiple = self.n_model
-        fns = _mesh_step_fns(self.mesh, self.q_axes, backend)
+        # the RESOLVED backend object keys the cache (stable identity for
+        # string-named backends), and its contraction is what the per-shard
+        # closure runs — no jnp-oracle hardcode on the mesh path
+        fns = _mesh_step_fns(self.mesh, self.q_axes, self.backend)
         self._sh = fns["shardings"]
         self._jit_ingest = fns["ingest"]
         self._jit_delete = fns["delete"]
@@ -283,6 +314,7 @@ class MeshExecutor(Executor):
             jnp.asarray(ts), jnp.asarray(mask),
             jnp.asarray(ts_floor, jnp.float32),
             rows, tables.finals_mask, tables.windows, tables.live_mask,
+            jnp.asarray(tables.max_window, jnp.float32),
         )
         self._account(shard_rounds, qrounds, tables.n_live)
         self.steps += 1
@@ -297,6 +329,7 @@ class MeshExecutor(Executor):
             jnp.asarray(src), jnp.asarray(dst), jnp.asarray(lab),
             jnp.asarray(mask), jnp.asarray(ts_now, jnp.float32),
             rows, tables.finals_mask, tables.windows, tables.live_mask,
+            jnp.asarray(tables.max_window, jnp.float32),
         )
         self._account(shard_rounds, qrounds, tables.n_live)
         self.steps += 1
@@ -309,7 +342,8 @@ class MeshExecutor(Executor):
         mask = tables.live_mask if query_mask is None else jnp.asarray(
             np.asarray(query_mask, bool))
         self._arrays, shard_rounds, qrounds = self._jit_relax(
-            self._arrays, rows, mask)
+            self._arrays, rows, mask,
+            jnp.asarray(tables.max_window, jnp.float32))
         self._account(shard_rounds, qrounds, tables.n_live)
 
     # -- accounting ----------------------------------------------------------

@@ -83,5 +83,80 @@ def maxmin_matmul(
 
 
 def maxmin_matmul_batched(a: jnp.ndarray, b: jnp.ndarray, **kw) -> jnp.ndarray:
-    """Batched over a leading J dim (one slice per DFA transition)."""
+    """Batched over a leading J dim (one slice per DFA transition).
+
+    Legacy vmap form: one grid launch PER transition row. The engine's
+    batched round uses :func:`maxmin_matmul_fused` instead (all rows share
+    one launch); this stays as the conformance oracle for it."""
     return jax.vmap(lambda x, y: maxmin_matmul(x, y, **kw))(a, b)
+
+
+def _maxmin_fused_kernel(a_ref, b_ref, o_ref):
+    """Grid = (J, m/bm, n/bn, k/bk), k innermost (minor): the (1, bm, bn)
+    output tile stays VMEM-resident across the k-sweep, and the leading J
+    dim walks transition rows WITHIN one launch — row j+1's A/B tiles
+    stream HBM→VMEM while row j drains, with no per-row launch/teardown
+    (the cost the vmap-of-single-pair form pays J times per round)."""
+
+    @pl.when(pl.program_id(3) == 0)
+    def _init():
+        o_ref[...] = jnp.full_like(o_ref, NEG_INF)
+
+    a = a_ref[0]  # (bm, bk) VMEM tile of row j
+    b = b_ref[0]  # (bk, bn)
+    c = jnp.max(jnp.minimum(a[:, :, None], b[None, :, :]), axis=1)
+    o_ref[0] = jnp.maximum(o_ref[0], c)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def maxmin_matmul_fused(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 64,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Fused batched (max, min) matmul: ONE pallas launch for all J rows.
+
+    a: (J, m, k), b: (J, k, n) -> (J, m, n) with out[j] = maxmin(a[j], b[j]).
+    This is the engine's batched-round contraction (one row per DFA
+    transition): compared with ``vmap(maxmin_matmul)`` the whole round is a
+    single grid, so each row's A/B tiles cross HBM→VMEM once per (i, j)
+    output tile revisit instead of once per vmap instance, and the VPU sees
+    an uninterrupted (J * m/bm * n/bn * k/bk)-step schedule.
+
+    Inputs are padded with -inf (the semiring zero) to block multiples. In
+    ``interpret`` mode (CPU validation) blocks clamp to the 8-aligned
+    problem so small engines don't pay 128x128 padding per row.
+    """
+    j, m, k = a.shape
+    j2, k2, n = b.shape
+    assert j == j2 and k == k2, (a.shape, b.shape)
+    dtype = a.dtype
+    if interpret:
+        bm = min(bm, m + (-m) % 8)
+        bn = min(bn, n + (-n) % 8)
+        bk = min(bk, k + (-k) % 8)
+    mp, np_, kp = (-m) % bm, (-n) % bn, (-k) % bk
+    if mp or kp:
+        a = jnp.pad(a, ((0, 0), (0, mp), (0, kp)), constant_values=NEG_INF)
+    if np_ or kp:
+        b = jnp.pad(b, ((0, 0), (0, kp), (0, np_)), constant_values=NEG_INF)
+    _, M, K = a.shape
+    _, _, N = b.shape
+
+    grid = (j, M // bm, N // bn, K // bk)
+    out = pl.pallas_call(
+        _maxmin_fused_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), lambda jj, i, jn, kk: (jj, i, kk)),
+            pl.BlockSpec((1, bk, bn), lambda jj, i, jn, kk: (jj, kk, jn)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda jj, i, jn, kk: (jj, i, jn)),
+        out_shape=jax.ShapeDtypeStruct((j, M, N), dtype),
+        interpret=interpret,
+    )(a, b)
+    return out[:, :m, :n]

@@ -26,7 +26,9 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..core.automaton import compile_query
-from ..core.semiring import NEG_INF, BatchedTransitionTable, TransitionTable
+from ..core.backend import BucketBackend, resolve_backend
+from ..core.semiring import (NEG_INF, BatchedTransitionTable, TransitionTable,
+                             relax_round)
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                            "benchmarks", "results", "dryrun")
@@ -54,33 +56,6 @@ def _cost_dict(ca):
     if isinstance(ca, (list, tuple)):
         return ca[0] if ca else {}
     return ca or {}
-
-
-def relax_round_mxu_bucket(dist_lvl, adj_lvl, tt: TransitionTable, n_levels: int):
-    """Level-quantized relaxation on the MXU: T boolean matmuls per DFA
-    transition (kernels/bucket decomposition), pure-jnp form so GSPMD can
-    partition it. Levels are int32 in [0, T]; dots run in bf16 -> f32."""
-    n = dist_lvl.shape[0]
-
-    def per_transition(j, acc):
-        s = tt.src[j]
-        l = tt.lab[j]
-        d_s = jax.lax.dynamic_index_in_dim(
-            jnp.moveaxis(dist_lvl, 2, 0), s, axis=0, keepdims=False)  # (x,u)
-        a_l = jax.lax.dynamic_index_in_dim(adj_lvl, l, axis=0, keepdims=False)
-
-        contrib = jnp.zeros((n, n), jnp.int32)
-        for theta in range(1, n_levels + 1):  # static unroll: T MXU dots
-            db = (d_s >= theta).astype(jnp.bfloat16)
-            ab = (a_l >= theta).astype(jnp.bfloat16)
-            reach = jnp.dot(db, ab, preferred_element_type=jnp.float32) > 0.5
-            contrib = contrib + reach.astype(jnp.int32)
-        contrib = jnp.where(tt.start_mask[j], jnp.maximum(contrib, a_l), contrib)
-        upd = jnp.where(tt.dst_onehot[j][None, None, :] > 0,
-                        contrib[:, :, None], 0)
-        return jnp.maximum(acc, upd)
-
-    return jax.lax.fori_loop(0, tt.src.shape[0], per_transition, dist_lvl)
 
 
 def make_ring_round(mesh, tt: TransitionTable, n_slots: int, multi_pod: bool):
@@ -211,7 +186,7 @@ def run_rpq_cell(name: str, n_slots: int, query: str, v_chunk: int,
     # not the cell's single query
     query_tag, meta_k, meta_labels = query, dfa.k, dfa.n_labels
     n_transitions = len(dfa.transitions())
-    if mode == "batched":
+    if mode.startswith("batched"):
         # Q stacked queries, shared adjacency — a thin wrapper over the
         # MeshExecutor round lowering (distributed/executor.py): the lane
         # axis is SHARDED over the data axes (padded with inert lanes to a
@@ -220,9 +195,15 @@ def run_rpq_cell(name: str, n_slots: int, query: str, v_chunk: int,
         # a runtime input — a lane shard whose queries have all converged
         # skips its contraction entirely (lax.cond inside shard_map), which
         # is the production form of the masked round the
-        # BatchedDenseRPQEngine iterates.
+        # BatchedDenseRPQEngine iterates. A "batched-<backend>" mode lowers
+        # the SAME cell with that contraction backend (e.g. batched-pallas,
+        # batched-mxu_bucket), so the roofline prices whichever substrate
+        # the engine is configured to run.
         from ..distributed.executor import batched_round_lowering
 
+        be_name = mode.split("-", 1)[1] if "-" in mode else "jnp"
+        backend = (BucketBackend(n_levels=N_LEVELS, use_pallas=False)
+                   if be_name == "mxu_bucket" else resolve_backend(be_name))
         dfas = [compile_query(q) for q in BATCHED_QUERIES]
         labels = sorted(set().union(*[set(d.labels) for d in dfas]))
         btt = BatchedTransitionTable.from_dfas(dfas, labels)
@@ -233,7 +214,7 @@ def run_rpq_cell(name: str, n_slots: int, query: str, v_chunk: int,
         n_lane_shards = int(np.prod([mesh.shape[a] for a in q_axes]))
         q_cap = len(dfas) + (-len(dfas)) % n_lane_shards
         round_fn, arg_specs, arg_shardings, dist_sh = batched_round_lowering(
-            mesh, btt, q_cap, n_slots, q_axes=q_axes)
+            mesh, btt, q_cap, n_slots, q_axes=q_axes, backend=backend)
         dist_spec, adj_spec = arg_specs[0], arg_specs[1]
     elif mode == "ring":
         dist_spec = jax.ShapeDtypeStruct((n_slots, n_slots, dfa.k), dtype)
@@ -253,7 +234,13 @@ def run_rpq_cell(name: str, n_slots: int, query: str, v_chunk: int,
 
         def round_fn(dist, adj):
             if mode == "mxu":
-                out = relax_round_mxu_bucket(dist, adj, tt, N_LEVELS)
+                # level-quantized single-query round through the engine's
+                # own BucketBackend contraction (the old hand-rolled
+                # relax_round_mxu_bucket special case, deleted in PR 4):
+                # pure-jnp T-dot decomposition so GSPMD can partition it
+                out = relax_round(
+                    dist, adj, tt,
+                    BucketBackend(n_levels=N_LEVELS, use_pallas=False))
             else:
                 out = relax_round_vchunked(dist, adj, tt, v_chunk)
             return jax.lax.with_sharding_constraint(out, dist_sh)
@@ -304,7 +291,15 @@ def run_rpq_cell(name: str, n_slots: int, query: str, v_chunk: int,
         "collectives_by_kind_extrap": by_kind,
         # semiring ops (max+min per MAC-equivalent) for the analytic term:
         "semiring_ops": 2.0 * n_transitions * n_slots**3,
-        "n_levels": N_LEVELS if mode == "mxu" else 0,
+        # every level-quantized lowering (single-query "mxu" AND the
+        # batched bucket-backend cell) is priced by its EXECUTED boolean
+        # dot count: BucketBackend allocates n_levels + 1 thresholds (the
+        # extra level absorbs the origin-snap slack), so T+1 dots run
+        "n_levels": (N_LEVELS if (mode == "mxu" or mode.endswith("mxu_bucket"))
+                     else 0),
+        "level_dots": (N_LEVELS + 1
+                       if (mode == "mxu" or mode.endswith("mxu_bucket"))
+                       else 0),
     }
     with open(path, "w") as f:
         json.dump(result, f, indent=1)

@@ -19,14 +19,29 @@ convergence-aware dispatch, :mod:`repro.distributed.executor`); an
 :class:`~repro.core.executor.Executor` instance is also accepted. Result
 streams are identical across executors (tests/test_executor.py).
 
-Async result decode (PR 3): with ``async_decode=True`` the service defers
-the device→host transfer of each ingest's emit frontier by one event — the
-transfer of dispatch *i* overlaps dispatch *i+1* instead of blocking the
-hot path (engine :class:`~repro.core.engine.PendingResults`; decode safety
-is preserved by interner snapshots, and the handle is resolved before any
-expiry, deletion, lifecycle event, or the end of :meth:`ingest`, so the
-returned report is complete). Recorded latencies then measure dispatch
-time only.
+Async result decode (PR 3, deepened PR 4): with ``async_decode=True`` the
+service defers the device→host transfer of each ingest's emit frontier
+behind a bounded FIFO of up to ``async_depth`` in-flight dispatches — the
+transfer of dispatch *i* overlaps dispatches *i+1..i+k* instead of
+blocking the hot path (engine :class:`~repro.core.engine.PendingResults`;
+decode safety is preserved by per-dispatch interner snapshots and strict
+FIFO drain order, and all handles resolve before any expiry, deletion,
+lifecycle event, or the end of :meth:`ingest`, so the returned report is
+complete). Recorded latencies then measure dispatch time only.
+
+Adaptive micro-batching (PR 4, opt-in ``adaptive_batch=True``): dense
+inserts buffer into micro-batches whose size doubles/halves (power-of-two
+bucketing, capped at ``max_batch``) from the executor's skip counters at
+each slide boundary — a large no-op relaxation tail means dispatch
+overhead dominates useful work, so the batch grows; decisions land in
+``batch_size_log`` and B > 1 carries the engine's documented
+batch-boundary skew.
+
+Contraction backends (PR 4): dense registrations accept ``backend`` as a
+name ("jnp" | "pallas" | "mxu_bucket") or a
+:class:`~repro.core.backend.ContractionBackend` instance, validated AT
+REGISTRATION (unknown names raise with the known list — they used to fall
+back to jnp silently). Both executors run the selected backend.
 
 RSPQ fallback (PR 3): a dense lane running ``path_semantics="simple"``
 over-approximates when its automaton lacks the containment property and a
@@ -80,6 +95,7 @@ import time
 from typing import Dict, List, Optional, Set, Tuple, Union
 
 from ..core.automaton import compile_query
+from ..core.backend import resolve_backend
 from ..core.engine import BatchedDenseRPQEngine, PendingResults, RegisteredQuery
 from ..core.executor import Executor, LocalExecutor
 from ..core.reference import RAPQ, RSPQ
@@ -187,12 +203,32 @@ class PersistentQueryService:
     def __init__(self, window: float, slide: float,
                  executor: Union[str, Executor] = "local",
                  async_decode: bool = False,
-                 rspq_fallback: bool = True):
+                 async_depth: int = 1,
+                 rspq_fallback: bool = True,
+                 adaptive_batch: bool = False,
+                 max_batch: int = 32):
         self.window = float(window)
         self.slide = float(slide)
         self._executor_spec = executor
         self._async_decode = bool(async_decode)
+        # bounded deferred-decode FIFO: up to `async_depth` dispatches may
+        # be in flight before the oldest emit frontier is pulled off the
+        # device (async_decode=True, depth 1 = the PR 3 single-handle
+        # behavior). Handles resolve in dispatch order — the engine's
+        # monotone per-query result sets require FIFO decode — and each
+        # snapshots the interner at dispatch, so slot recycling between
+        # dispatch and resolve cannot remap decoded pairs.
+        self._async_depth = max(1, int(async_depth))
         self._rspq_fallback = bool(rspq_fallback)
+        # adaptive micro-batching (opt-in): grow/shrink the dense group's
+        # batch_size in x2 steps from the executor's skip counters — see
+        # ingest(). B > 1 trades the documented batch-boundary skew for
+        # fewer dispatches, so it is never on by default.
+        self._adaptive_batch = bool(adaptive_batch)
+        self._max_batch = max(1, int(max_batch))
+        self._adapt_marks: Optional[Tuple[int, int]] = None
+        #: (tuples_seen_so_far, chosen_size) history of adaptive decisions
+        self.batch_size_log: List[Tuple[int, int]] = []
         # reference (pointer) engines, one per query
         self._ref_engines: Dict[str, object] = {}
         # dense queries: name -> registration kwargs; grouped lazily until
@@ -203,7 +239,7 @@ class PersistentQueryService:
         self.stats: Dict[str, QueryStats] = {}
         self._next_expiry = slide
 
-    def _make_executor(self, backend: str) -> Executor:
+    def _make_executor(self, backend) -> Executor:
         if isinstance(self._executor_spec, Executor):
             return self._executor_spec
         if self._executor_spec == "mesh":
@@ -248,6 +284,11 @@ class PersistentQueryService:
         if name in self.stats and (name in self._dense_specs
                                    or name in self._ref_engines):
             raise ValueError(f"query {name!r} already registered")
+        if engine == "dense":
+            # validate NOW, with the known-backend list ("palas" used to run
+            # the jnp oracle without a whisper); resolving also interns
+            # string names so the group's backend set dedupes by identity
+            backend = resolve_backend(backend)
         dfa = compile_query(expr)
         initial: Set[Tuple] = set()
         if engine == "dense":
@@ -352,23 +393,91 @@ class PersistentQueryService:
         """Feed the whole stream; returns an :class:`IngestReport`: the new
         result pairs per query (dict interface), with the pairs invalidated
         by explicit deletions alongside in ``.invalidated`` and any
-        dense→RSPQ switches in ``.fallbacks``."""
+        dense→RSPQ switches in ``.fallbacks``.
+
+        With ``adaptive_batch=True`` (opt-in) dense inserts are buffered
+        into micro-batches whose size the service steers from the
+        executor's skip counters: at each slide boundary it reads the
+        interval's ``query_rounds_total`` vs ``unmasked_query_rounds_total``
+        delta — a large no-op relaxation tail means most of each dispatch's
+        work is already-converged lanes riding along, so per-event dispatch
+        overhead dominates useful work and the micro-batch DOUBLES (up to
+        ``max_batch``); a small tail means the lanes genuinely relax every
+        round and the batch HALVES back toward the exact per-tuple regime
+        (B is always a power-of-two multiple of 1, so the bucketed jit
+        cache sees few distinct shapes). Decisions land in
+        :attr:`batch_size_log`; B > 1 carries the engine's documented
+        batch-boundary skew, which is why this is never on by default.
+        """
         self._ensure_group()
         self._ingest_started = True
         new_results: Dict[str, Set[Tuple]] = {name: set() for name in self.stats}
         invalidated: Dict[str, Set[Tuple]] = {name: set() for name in self.stats}
         fallbacks: Dict[str, str] = {}
-        pending: List[PendingResults] = []  # at most one in flight
+        pending: List[PendingResults] = []  # bounded FIFO (async_depth)
+        dense_buf: List = []               # adaptive micro-batch buffer
 
-        def resolve_pending() -> None:
-            while pending:
+        def resolve_pending(limit: int = 0) -> None:
+            """Resolve outstanding decode handles down to `limit` (dispatch
+            order; each handle snapshotted the interner at dispatch)."""
+            while len(pending) > limit:
                 fresh = pending.pop(0).resolve()
                 for qi, spec in self._group.live_items():
                     new_results[spec.name] |= fresh[qi]
 
+        def flush_dense() -> None:
+            """Dispatch the buffered dense inserts as one micro-batch."""
+            if not dense_buf:
+                return
+            batch = [(s.src, s.dst, s.label, s.ts) for s in dense_buf]
+            t0 = time.perf_counter_ns() if record_latency else 0
+            handle = self._group.insert_batch_pending(batch)
+            pending.append(handle)
+            # pull results down to the in-flight budget: depth k means the
+            # device->host transfer of dispatch i overlaps dispatches
+            # i+1..i+k instead of blocking the hot path
+            resolve_pending(self._async_depth if self._async_decode else 0)
+            dt = (time.perf_counter_ns() - t0) / 1e3 if record_latency else 0.0
+            for qi, spec in self._group.live_items():
+                st = self.stats[spec.name]
+                st.tuples += len(batch)
+                if record_latency:
+                    # one dispatch serves the whole group; each member
+                    # observes the group's step latency (dispatch-only
+                    # under async_decode), amortized over the micro-batch
+                    st.latencies_us.extend([dt / len(batch)] * len(batch))
+            dense_buf.clear()
+            self._maybe_fallback(fallbacks, lambda: resolve_pending(0))
+
+        def adapt_batch() -> None:
+            """Steer the dense micro-batch size from the interval's no-op
+            relaxation tail (see docstring)."""
+            if not self._adaptive_batch or self._group is None:
+                return
+            ex = self._group.executor
+            qr, uqr = ex.query_rounds_total, ex.unmasked_query_rounds_total
+            if self._adapt_marks is not None:
+                dqr = qr - self._adapt_marks[0]
+                duqr = uqr - self._adapt_marks[1]
+                if duqr > 0:
+                    noop_frac = 1.0 - dqr / duqr
+                    b = self._group.batch_size
+                    if noop_frac >= 0.3 and b < self._max_batch:
+                        b *= 2
+                    elif noop_frac < 0.1 and b > 1:
+                        b //= 2
+                    if b != self._group.batch_size:
+                        self._group.batch_size = b
+                        seen = max((self.stats[s.name].tuples
+                                    for _qi, s in self._group.live_items()),
+                                   default=0)
+                        self.batch_size_log.append((seen, b))
+            self._adapt_marks = (qr, uqr)
+
         for sgt in stream:
             # lazy expiration at slide boundaries (eager evaluation)
             if sgt.ts >= self._next_expiry:
+                flush_dense()
                 resolve_pending()
                 if self._group is not None:
                     self._group.expire(sgt.ts)
@@ -376,42 +485,30 @@ class PersistentQueryService:
                     eng.expire(sgt.ts)
                 while self._next_expiry <= sgt.ts:
                     self._next_expiry += self.slide
+                adapt_batch()
             # snapshot BEFORE the dense step: a fallback fired by this very
             # event must not re-feed the event to its new reference engine
             refs_this_event = list(self._ref_engines.items())
             if self._group is not None:
-                t0 = time.perf_counter_ns() if record_latency else 0
                 if sgt.op == "+":
-                    handle = self._group.insert_batch_pending(
-                        [(sgt.src, sgt.dst, sgt.label, sgt.ts)])
-                    inv = None
-                    if self._async_decode:
-                        # overlap: this dispatch is in flight; NOW pull the
-                        # previous event's results off the device
-                        prev, pending[:] = pending[:], [handle]
-                        for p in prev:
-                            fresh = p.resolve()
-                            for qi, spec in self._group.live_items():
-                                new_results[spec.name] |= fresh[qi]
-                    else:
-                        fresh = handle.resolve()
-                        for qi, spec in self._group.live_items():
-                            new_results[spec.name] |= fresh[qi]
+                    dense_buf.append(sgt)
+                    if (not self._adaptive_batch
+                            or len(dense_buf) >= self._group.batch_size):
+                        flush_dense()
                 else:
+                    flush_dense()
                     resolve_pending()
+                    t0 = time.perf_counter_ns() if record_latency else 0
                     inv = self._group.delete(sgt.src, sgt.dst, sgt.label, sgt.ts)
-                dt = (time.perf_counter_ns() - t0) / 1e3 if record_latency else 0.0
-                for qi, spec in self._group.live_items():
-                    st = self.stats[spec.name]
-                    st.tuples += 1
-                    if inv is not None:
+                    dt = ((time.perf_counter_ns() - t0) / 1e3
+                          if record_latency else 0.0)
+                    for qi, spec in self._group.live_items():
+                        st = self.stats[spec.name]
+                        st.tuples += 1
                         invalidated[spec.name] |= inv[qi]
-                    if record_latency:
-                        # one dispatch serves the whole group; each member
-                        # observes the group's step latency (dispatch-only
-                        # under async_decode)
-                        st.latencies_us.append(dt)
-                self._maybe_fallback(fallbacks, resolve_pending)
+                        if record_latency:
+                            st.latencies_us.append(dt)
+                    self._maybe_fallback(fallbacks, lambda: resolve_pending(0))
             for name, eng in refs_this_event:
                 t0 = time.perf_counter_ns() if record_latency else 0
                 if sgt.op == "+":
@@ -425,6 +522,7 @@ class PersistentQueryService:
                 st.tuples += 1
                 if record_latency:
                     st.latencies_us.append((time.perf_counter_ns() - t0) / 1e3)
+        flush_dense()
         resolve_pending()
         for name in self.stats:
             st = self.stats[name]

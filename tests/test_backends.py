@@ -1,0 +1,418 @@
+"""Contraction-backend conformance (PR 4): every ContractionBackend vs the
+jnp oracle engine on CPU (Pallas/bucket kernels under ``interpret=True``),
+with deletions, both path semantics, query churn, and BOTH executors.
+
+Bars per backend:
+  * jnp / pallas — EXACT: per-event result streams bit-identical to the
+    jnp engine (max/min never reassociates), Local and Mesh.
+  * mxu_bucket — BOUNDED COARSENING: the decoded dist equals the float
+    engine's dist mapped through the level grid (the exactness guard —
+    checked elementwise), so results are a superset of the float engine's
+    and every extra pair's true bottleneck sits within one level step of
+    its query's expiry boundary. Mesh-vs-local bucket result streams are
+    still bit-identical (same deterministic quantization per shard).
+
+Plus the fused-kernel oracles and the unknown-backend validation
+regression ("palas" used to silently run the jnp reference).
+"""
+import random
+
+import jax
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import compile_query
+from repro.core.backend import (
+    KNOWN_BACKENDS,
+    BucketBackend,
+    JnpBackend,
+    PallasBackend,
+    resolve_backend,
+)
+from repro.core.engine import BatchedDenseRPQEngine, DenseRPQEngine, RegisteredQuery
+from repro.distributed.executor import MeshExecutor
+
+QUERIES = ["a*", "a . b*", "(a | b)*", "a . b* . c"]
+LABELS = ["a", "b", "c"]
+N_LEVELS = 8
+
+
+def _backend(name):
+    """Fresh CPU-testable instance per test (interpret=True for kernels)."""
+    return {
+        "jnp": lambda: JnpBackend(),
+        "pallas": lambda: PallasBackend(interpret=True),
+        "bucket-jnp": lambda: BucketBackend(n_levels=N_LEVELS,
+                                            use_pallas=False),
+        "bucket-pallas": lambda: BucketBackend(n_levels=N_LEVELS,
+                                               use_pallas=True,
+                                               interpret=True),
+    }[name]()
+
+
+EXACT = ["pallas"]
+COARSE = ["bucket-jnp", "bucket-pallas"]
+
+
+def _random_events(rng, n_vertices, n_edges, t_max, deletions=True):
+    live, events, t_used = {}, [], sorted(
+        rng.sample(range(1, t_max), k=min(n_edges, t_max - 1)))
+    for t in t_used:
+        u, v = rng.randrange(n_vertices), rng.randrange(n_vertices)
+        lab = rng.choice(LABELS)
+        if deletions and live and rng.random() < 0.15:
+            du, dv, dl = rng.choice(sorted(live))
+            del live[(du, dv, dl)]
+            events.append(("-", du, dv, dl, float(t)))
+        else:
+            live[(u, v, lab)] = t
+            events.append(("+", u, v, lab, float(t)))
+    return events
+
+
+def _specs(rng, n_queries, window):
+    specs = []
+    for qi in range(n_queries):
+        expr = rng.choice(QUERIES)
+        dfa = compile_query(expr)
+        semantics = "arbitrary"
+        if dfa.has_containment_property and rng.random() < 0.4:
+            semantics = "simple"
+        specs.append(RegisteredQuery(f"q{qi}", dfa, window, semantics))
+    return specs
+
+
+def _assert_grid_consistent(dist_f, dist_b, now, w_max, n_levels=N_LEVELS):
+    """The bucket exactness guard, origin-free form.
+
+    Origins are always multiples of the step on the ABSOLUTE grid, so a
+    stored level decodes to ``step * ceil(true_ts / step)`` regardless of
+    which dispatch wrote it. Hence, elementwise:
+
+      * every finite bucket entry equals the grid-ceil of the float
+        engine's entry (the level closure IS the grid-mapped float
+        closure), and
+      * every entry the bucket dropped to -inf sat at/below the window
+        origin of its writing dispatch — i.e. at/below the CURRENT origin,
+        dead for every query's read-time threshold.
+
+    (A naive comparison against the current-origin quantizer fails on
+    stale entries: the clock advances between dispatches — expiry,
+    out-of-alphabet events — and dist is only rewritten at dispatches.)"""
+    step = np.float32(w_max) / np.float32(n_levels)
+    origin = np.float32(
+        np.floor((np.float32(now) - np.float32(w_max)) / step) * step)
+    expected = (np.ceil(dist_f / step) * step).astype(np.float32)
+    finite_b = np.isfinite(dist_b)
+    np.testing.assert_array_equal(dist_b[finite_b], expected[finite_b])
+    assert np.all(dist_f[~finite_b] <= origin + 1e-4), (
+        "bucket dropped a value still above the window origin")
+
+
+# ---------------------------------------------------------------------------
+# fused kernels vs their per-row oracles
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("J,m,k,n", [(1, 8, 8, 8), (6, 20, 13, 17),
+                                     (3, 33, 70, 9)])
+def test_fused_maxmin_matches_vmap_oracle(J, m, k, n):
+    from repro.kernels.maxmin.maxmin import maxmin_matmul_fused
+    from repro.kernels.maxmin.ref import maxmin_matmul_naive
+
+    rng = np.random.default_rng(J * 100 + m + k + n)
+    a = rng.uniform(0, 1000, (J, m, k)).astype(np.float32)
+    a[rng.random(a.shape) > 0.6] = -np.inf
+    b = rng.uniform(0, 1000, (J, k, n)).astype(np.float32)
+    b[rng.random(b.shape) > 0.6] = -np.inf
+    ref = np.stack([np.asarray(maxmin_matmul_naive(a[j], b[j]))
+                    for j in range(J)])
+    out = np.asarray(maxmin_matmul_fused(a, b, interpret=True))
+    np.testing.assert_allclose(ref, out)
+
+
+@pytest.mark.parametrize("J,m,k,n,T", [(4, 16, 16, 16, 4), (2, 20, 33, 9, 8)])
+def test_fused_bucket_matches_exact_oracle(J, m, k, n, T):
+    from repro.kernels.bucket.bucket import bucket_maxmin_fused
+    from repro.kernels.bucket.ref import bucket_maxmin_exact
+
+    rng = np.random.default_rng(J + m + k + n + T)
+    a = rng.integers(0, T + 1, (J, m, k)).astype(np.int32)
+    b = rng.integers(0, T + 1, (J, k, n)).astype(np.int32)
+    ref = np.stack([np.asarray(bucket_maxmin_exact(a[j], b[j]))
+                    for j in range(J)])
+    out = np.asarray(bucket_maxmin_fused(a, b, n_levels=T, interpret=True))
+    np.testing.assert_array_equal(ref, out)
+
+
+# ---------------------------------------------------------------------------
+# exact backends: bit-identical engine conformance, Local + Mesh, churn
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend_name", EXACT)
+@pytest.mark.parametrize("seed", [0, 1])
+def test_exact_backend_matches_jnp_local(backend_name, seed):
+    """Per-event result streams (inserts, deletions, expiry, mixed
+    semantics) identical to the jnp engine on the LocalExecutor."""
+    rng = random.Random(seed)
+    window = rng.choice([10.0, 25.0])
+    specs = _specs(rng, 3, window)
+    ref = BatchedDenseRPQEngine(specs, n_slots=12, batch_size=1)
+    eng = BatchedDenseRPQEngine(specs, n_slots=12, batch_size=1,
+                                backend=_backend(backend_name))
+    for i, (op, u, v, lab, ts) in enumerate(
+            _random_events(rng, 6, 22, 60)):
+        if op == "+":
+            assert ref.insert(u, v, lab, ts) == eng.insert(u, v, lab, ts), i
+        else:
+            assert ref.delete(u, v, lab, ts) == eng.delete(u, v, lab, ts), i
+        if i % 6 == 5:
+            ref.expire(ts)
+            eng.expire(ts)
+    for qi in range(3):
+        assert ref.per_query_results[qi] == eng.per_query_results[qi]
+    np.testing.assert_array_equal(
+        np.asarray(ref.batched_arrays.dist), np.asarray(eng.batched_arrays.dist))
+
+
+@pytest.mark.parametrize("backend_name", EXACT + COARSE)
+def test_backend_mesh_matches_local_with_churn(backend_name):
+    """MeshExecutor runs the SELECTED backend per shard: result streams are
+    bit-identical to the same backend on LocalExecutor (even for the
+    bucket mode — quantization is deterministic), across mid-stream
+    register/deregister and deletions."""
+    rng = random.Random(7)
+    window = 25.0
+    base = [RegisteredQuery("q0", compile_query("a . b*"), window),
+            RegisteredQuery("q1", compile_query("(a | b)*"), window)]
+    local = BatchedDenseRPQEngine(base, n_slots=12, batch_size=1,
+                                  backend=_backend(backend_name))
+    mesh = BatchedDenseRPQEngine(
+        base, n_slots=12, batch_size=1,
+        executor=MeshExecutor(backend=_backend(backend_name)))
+    late = RegisteredQuery("late", compile_query("a*"), window)
+    for i, (op, u, v, lab, ts) in enumerate(
+            _random_events(rng, 6, 24, 70)):
+        if i == 8:
+            assert local.register_query(late) == mesh.register_query(late)
+        if i == 16:
+            local.deregister_query("q0")
+            mesh.deregister_query("q0")
+        if op == "+":
+            fl, fm = local.insert(u, v, lab, ts), mesh.insert(u, v, lab, ts)
+        else:
+            fl, fm = local.delete(u, v, lab, ts), mesh.delete(u, v, lab, ts)
+        for qi_l, spec in local.live_items():
+            assert fl[qi_l] == fm[mesh.lane_of(spec.name)], (i, spec.name)
+        if i % 7 == 6:
+            local.expire(ts)
+            mesh.expire(ts)
+    for qi_l, spec in local.live_items():
+        assert (local.per_query_results[qi_l]
+                == mesh.per_query_results[mesh.lane_of(spec.name)])
+
+
+# ---------------------------------------------------------------------------
+# bucket mode: the exactness guard and the coarsening bound
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend_name", COARSE)
+def test_bucket_dist_is_grid_mapped_float_dist(backend_name):
+    """THE exactness guard: at every event, the bucket engine's stored
+    dist equals the float engine's dist mapped through the level grid,
+    elementwise (level closure == grid map of the float closure — the map
+    is monotone, so it commutes with max-min; the absolute grid makes
+    re-quantization across dispatches the identity)."""
+    rng = random.Random(3)
+    window = 20.0
+    specs = _specs(rng, 2, window)
+    ref = BatchedDenseRPQEngine(specs, n_slots=10, batch_size=1)
+    eng = BatchedDenseRPQEngine(specs, n_slots=10, batch_size=1,
+                                backend=_backend(backend_name))
+    for i, (op, u, v, lab, ts) in enumerate(
+            _random_events(rng, 5, 20, 55)):
+        if op == "+":
+            ref.insert(u, v, lab, ts)
+            eng.insert(u, v, lab, ts)
+        else:
+            ref.delete(u, v, lab, ts)
+            eng.delete(u, v, lab, ts)
+        if i % 5 == 4:
+            ref.expire(ts)
+            eng.expire(ts)
+        now = float(np.asarray(ref.batched_arrays.now))
+        _assert_grid_consistent(np.asarray(ref.batched_arrays.dist),
+                                np.asarray(eng.batched_arrays.dist),
+                                now, window)
+
+
+def test_bucket_results_superset_with_bounded_boundary_error():
+    """Coarsening bound: the bucket engine reports every float-valid pair,
+    and at any instant an extra VALID pair's true best bottleneck sits
+    within one level step of its query's expiry threshold."""
+    rng = random.Random(11)
+    window = 24.0
+    step = window / N_LEVELS
+    specs = _specs(rng, 3, window)
+    ref = BatchedDenseRPQEngine(specs, n_slots=12, batch_size=1)
+    eng = BatchedDenseRPQEngine(specs, n_slots=12, batch_size=1,
+                                backend=BucketBackend(n_levels=N_LEVELS,
+                                                      use_pallas=False))
+    finals = np.asarray(ref.finals_mask)
+    for i, (op, u, v, lab, ts) in enumerate(
+            _random_events(rng, 6, 30, 80)):
+        if op == "+":
+            fr = ref.insert(u, v, lab, ts)
+            fe = eng.insert(u, v, lab, ts)
+        else:
+            ref.delete(u, v, lab, ts)
+            eng.delete(u, v, lab, ts)
+            continue
+        # every float-fresh pair is already in the bucket's cumulative set
+        # (it may have been emitted EARLIER there — decoded ts >= true ts)
+        for qi in range(3):
+            assert fr[qi] <= eng.per_query_results[qi], (i, qi)
+            # snapshot validity: extras are boundary cases only
+            vr = ref.current_results(qi)
+            ve = eng.current_results(qi)
+            assert vr <= ve, (i, qi, vr - ve)
+            extras = ve - vr
+            if not extras:
+                continue
+            a = ref.batched_arrays
+            dist = np.asarray(a.dist[qi])
+            best = np.where(finals[qi][None, None, :], dist, -np.inf).max(2)
+            low = float(np.asarray(a.now)) - specs[qi].window
+            for (x, y) in extras:
+                b = best[ref.slot_of[x], ref.slot_of[y]]
+                assert low - step - 1e-4 <= b <= low + 1e-4, (
+                    i, qi, (x, y), b, low, step)
+    for qi in range(3):
+        assert ref.per_query_results[qi] <= eng.per_query_results[qi]
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31), window=st.sampled_from([8.0, 16.0, 40.0]))
+def test_bucket_grid_property_random(seed, window):
+    """Property form of the exactness guard on random single-query
+    streams: final bucket dist == grid map of final float dist."""
+    rng = random.Random(seed)
+    dfa = compile_query("a . b*")
+    ref = DenseRPQEngine(dfa, window, n_slots=8, batch_size=1)
+    eng = DenseRPQEngine(dfa, window, n_slots=8, batch_size=1,
+                         backend=BucketBackend(n_levels=N_LEVELS,
+                                               use_pallas=False))
+    for (op, u, v, lab, ts) in _random_events(rng, 5, 14, 40,
+                                              deletions=False):
+        ref.insert(u, v, lab, ts)
+        eng.insert(u, v, lab, ts)
+    now = float(np.asarray(ref.batched_arrays.now))
+    _assert_grid_consistent(np.asarray(ref.batched_arrays.dist),
+                            np.asarray(eng.batched_arrays.dist), now, window)
+
+
+@pytest.mark.parametrize("t0", [0.0, 19999.0])
+def test_bucket_no_drift_on_inexact_step(t0):
+    """Regression: with a step that is NOT exactly representable (w=2.4,
+    T=8 -> step=0.3), re-encoding a decoded on-grid value computes its
+    grid ratio slightly above the integer; an unguarded ceil bumped it a
+    full level per dispatch, accumulating unbounded upward drift (a pair
+    could outlive its window indefinitely). The round-trip fp error is
+    ABSOLUTE (~ulp of the clock), so the snap tolerance scales with
+    ``now`` — the t0=19999 leg pins the large-clock regime a fixed
+    level-relative epsilon missed. Every finite bucket entry must stay
+    within one level step of the float engine's across many dispatches,
+    and never fall below it by more than the snap tolerance."""
+    dfa = compile_query("(a | b)*")
+    window = 2.4
+    step = window / N_LEVELS  # 0.3: inexact in binary
+    ref = DenseRPQEngine(dfa, window, n_slots=8, batch_size=1)
+    eng = DenseRPQEngine(dfa, window, n_slots=8, batch_size=1,
+                         backend=BucketBackend(n_levels=N_LEVELS,
+                                               use_pallas=False))
+    rng = random.Random(5)
+    t = t0
+    for i in range(80):  # many dispatches over a long-lived edge set
+        t += 0.07
+        u, v = rng.randrange(5), rng.randrange(5)
+        lab = rng.choice(["a", "b"])
+        ref.insert(u, v, lab, t)
+        eng.insert(u, v, lab, t)
+        df = np.asarray(ref.batched_arrays.dist)
+        db = np.asarray(eng.batched_arrays.dist)
+        finite = np.isfinite(db)
+        # snap tolerance actually applied at this clock (ulp-scaled)
+        tol = max(BucketBackend.GRID_EPS, 8 * abs(t) * 2.0 ** -23 / step)
+        tol = min(tol, 0.45) * step
+        assert np.all(db[finite] <= df[finite] + step + 1e-5), (
+            f"event {i}: bucket value drifted beyond one level step")
+        assert np.all(db[finite] >= df[finite] - tol - 1e-5), (
+            f"event {i}: bucket value fell below the snap tolerance")
+
+
+# ---------------------------------------------------------------------------
+# validation: unknown backends raise at construction (satellite regression)
+# ---------------------------------------------------------------------------
+
+
+def test_unknown_backend_raises_everywhere():
+    """'palas' used to silently run the jnp reference — now every
+    construction path validates against the known-backend list."""
+    dfa = compile_query("a*")
+    with pytest.raises(ValueError, match="jnp.*pallas.*mxu_bucket"):
+        DenseRPQEngine(dfa, 10.0, backend="palas")
+    with pytest.raises(ValueError, match="known backends"):
+        resolve_backend("palas")
+    with pytest.raises(ValueError, match="known backends"):
+        MeshExecutor(backend="mxu-bucket")
+    from repro.streaming.service import PersistentQueryService
+
+    svc = PersistentQueryService(window=10.0, slide=2.0)
+    with pytest.raises(ValueError, match="known backends"):
+        svc.register("q", "a*", engine="dense", backend="palas")
+    # the round functions validate too (they resolve the same way)
+    from repro.core.semiring import BatchedTransitionTable, batched_relax_round
+    import jax.numpy as jnp
+
+    btt = BatchedTransitionTable.from_dfas([dfa], dfa.labels)
+    dist = jnp.full((1, 4, 4, btt.k), -jnp.inf)
+    adj = jnp.full((btt.n_labels, 4, 4), -jnp.inf)
+    with pytest.raises(ValueError, match="known backends"):
+        batched_relax_round(dist, adj, btt, "palas")
+    assert set(KNOWN_BACKENDS) == {"jnp", "pallas", "mxu_bucket"}
+
+
+def test_known_backend_strings_resolve_to_singletons():
+    """String-named backends intern: stable identity keeps the jit compile
+    cache shared across engines."""
+    assert resolve_backend("jnp") is resolve_backend("jnp")
+    assert resolve_backend("pallas") is resolve_backend("pallas")
+    b = BucketBackend(n_levels=4)
+    assert resolve_backend(b) is b
+
+
+def test_backends_compare_by_configuration():
+    """Backends hash/compare by config: equal-but-distinct instances share
+    jit compile caches AND count as 'one backend' for a service group
+    (regression: identity-based dedup rejected two identically-configured
+    instances at first ingest)."""
+    assert BucketBackend(n_levels=8) == BucketBackend(n_levels=8)
+    assert hash(BucketBackend(n_levels=8)) == hash(BucketBackend(n_levels=8))
+    assert BucketBackend(n_levels=8) != BucketBackend(n_levels=4)
+    assert PallasBackend(interpret=True) == PallasBackend(interpret=True)
+    assert PallasBackend(interpret=True) != PallasBackend(interpret=False)
+    assert JnpBackend() != PallasBackend()
+
+    from repro.streaming.generators import so_like
+    from repro.streaming.service import PersistentQueryService
+    from repro.streaming.stream import Stream
+
+    svc = PersistentQueryService(window=50.0, slide=10.0)
+    svc.register("q1", "a2q*", engine="dense", n_slots=16,
+                 backend=BucketBackend(n_levels=8, use_pallas=False))
+    svc.register("q2", "c2a*", engine="dense", n_slots=16,
+                 backend=BucketBackend(n_levels=8, use_pallas=False))
+    svc.ingest(Stream(list(so_like(8, 20, seed=1))))  # must not raise

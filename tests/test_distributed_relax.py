@@ -16,10 +16,10 @@ sys.path.insert(0, "src")
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core.automaton import compile_query
+from repro.core.backend import BucketBackend
 from repro.core.semiring import NEG_INF, TransitionTable, relax_round
 from repro.launch.mesh import mesh_context
 from repro.launch.dryrun_rpq import (N_LEVELS, make_ring_round,
-                                     relax_round_mxu_bucket,
                                      relax_round_vchunked)
 
 mesh = jax.make_mesh((2, 4), ("data", "model"))
@@ -58,15 +58,18 @@ with mesh_context(mesh):
 np.testing.assert_allclose(np.asarray(out2), ref_hi)
 print("ring OK")
 
-# 3) MXU bucket mode on quantized levels
+# 3) MXU bucket mode on quantized levels — the engine's BucketBackend
+# contraction through the generic backend-parameterized round (the old
+# relax_round_mxu_bucket special case is gone)
 T = N_LEVELS
 lv = lambda x: np.where(np.isfinite(x), np.clip(np.ceil(x / (100.0 / T)), 0, T), 0).astype(np.int32)
 dist_lv, adj_lv = lv(dist), lv(adj)
 ref_lv = np.asarray(relax_round(jnp.asarray(dist_lv.astype(np.float32)),
                                 jnp.asarray(np.where(adj_lv > 0, adj_lv, -np.inf).astype(np.float32)), tt))
 ref_lv = np.where(np.isfinite(ref_lv), ref_lv, 0).astype(np.int32)
+bucket = BucketBackend(n_levels=T, use_pallas=False)
 with mesh_context(mesh):
-    out3 = jax.jit(lambda d, a: relax_round_mxu_bucket(d, a, tt, T),
+    out3 = jax.jit(lambda d, a: relax_round(d, a, tt, bucket),
                    in_shardings=(dist_sh, adj_sh))(jnp.asarray(dist_lv), jnp.asarray(adj_lv))
 np.testing.assert_array_equal(np.asarray(out3), ref_lv)
 print("mxu OK")

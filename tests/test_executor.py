@@ -241,6 +241,55 @@ def test_async_decode_matches_sync_per_batch():
     assert svc_s.results("arb") == svc_a.results("arb") == seen_s
 
 
+@pytest.mark.parametrize("depth", [2, 4])
+def test_async_depth_bounded_fifo_matches_sync(depth):
+    """PR 4 satellite: up to `async_depth` dispatches in flight before the
+    oldest frontier is pulled — reports stay identical to the blocking path
+    across slicing, expiry boundaries, and deletions (FIFO drain order)."""
+    tuples = _tuples()
+    svc_s = _service("local", async_decode=False)
+    svc_d = PersistentQueryService(window=WINDOW, slide=SLIDE,
+                                   executor="local", async_decode=True,
+                                   async_depth=depth)
+    for name, expr, kw in [
+        ("arb", "a2q . c2a*", {}),
+        ("plus", "(a2q | c2a)+", {}),
+        ("smp", "(a2q | c2a | c2q)*", {"path_semantics": "simple"}),
+    ]:
+        svc_d.register(name, expr, engine="dense", n_slots=32, **kw)
+    for i in range(0, len(tuples), 13):
+        batch = tuples[i:i + 13]
+        rep_s = svc_s.ingest(Stream(batch))
+        rep_d = svc_d.ingest(Stream(batch))
+        for name in NAMES:
+            assert rep_s[name] == rep_d[name], (i, name, depth)
+            assert rep_s.invalidated[name] == rep_d.invalidated[name]
+    for name in NAMES:
+        assert svc_s.results(name) == svc_d.results(name)
+
+
+def test_async_pending_survives_compaction():
+    """Interner-snapshot safety at depth > 1: handles dispatched BEFORE a
+    compaction that recycles their pairs' slots must decode against the
+    snapshot, not the mutated interner. Engine-level: queue several
+    pending dispatches, force expiry/recycling, then resolve."""
+    dfa = compile_query("a . b*")
+    eng = DenseRPQEngine(dfa, window=3.0, n_slots=6, batch_size=1)
+    oracle = DenseRPQEngine(dfa, window=3.0, n_slots=6, batch_size=1)
+    handles = []
+    fresh_oracle = []
+    # distinct vertices per step so expiry leaves dead slots to recycle
+    for t in range(1, 10):
+        u, v = f"u{t}", f"v{t}"
+        handles.append(eng.insert_batch_pending([(u, v, "a", float(t))]))
+        fresh_oracle.append(oracle.insert(u, v, "a", float(t)))
+    eng.expire(9.0)      # recycles slots of expired vertices
+    oracle.expire(9.0)
+    for h, fo in zip(handles, fresh_oracle):
+        assert h.resolve()[0] == fo
+    assert eng.results == oracle.results
+
+
 @pytest.mark.parametrize("writer,reader", [("local", "mesh"), ("mesh", "local")])
 def test_checkpoint_cross_restore_between_executors(writer, reader):
     """A checkpoint written under one executor restores under the other

@@ -108,6 +108,22 @@ def test_sharded_engine_benchmark():
 
 
 @pytest.mark.slow
+def test_backend_shootout_benchmark():
+    """benchmarks/fig15_backend_shootout in the CI slow tier: jnp vs
+    pallas (fused batched kernel, interpret on CPU) vs mxu_bucket through
+    BOTH executors on 8 virtual devices — per-event identity for the exact
+    backends and the bucket level-coarsening bound are asserted inside."""
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.fig15_backend_shootout"],
+        capture_output=True, text=True, timeout=2400,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "XLA_FLAGS": "--xla_force_host_platform_device_count=8"},
+    )
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "[ok] backend shootout" in proc.stdout
+
+
+@pytest.mark.slow
 def test_dryrun_machinery_smoke():
     """Full dry-run protocol on one cell in a subprocess (512 host devices):
     lower + compile + memory/cost/collective scrape must all succeed."""
