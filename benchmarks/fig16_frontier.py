@@ -1,0 +1,168 @@
+"""Beyond-paper figure: frontier-restricted ingest (PR 5 tentpole) vs the
+dense relaxation on LOW-DEGREE streaming windows — the workload class the
+ROADMAP's "sparse / frontier-compressed dist" lever targets.
+
+Two sparse generators (paper §5.1.2 analogues): the RDF-ish ``yago_like``
+stream (many labels, Zipf frequency, uniformly random endpoints) and the
+schema-driven ``gmark_like`` stream (tunable cycle-closing fraction). On
+both, a micro-batch of B=1 inserted edges dirties only the handful of
+source rows that already reach the new edge's source — so the frontier
+dispatch contracts a (Q, F, N, K) slab instead of the full (Q, N, N, K)
+closure, and per-event cost is O(R·J·F·N²) instead of O(R·J·N³).
+
+Asserted, not sampled, per generator / Q / executor:
+  * the frontier engine's per-event result stream is BIT-identical to the
+    dense engine's (the frontier reaches the same fixpoint; overflow falls
+    back to the dense loop in-dispatch);
+  * on the headline config (gmark, Q=8, local executor) aggregate edges/s
+    is >= 2x the dense path (the PR's acceptance target — checked in
+    ``__main__``, reported here).
+
+Run with host-local virtual devices for a real lane-sharded mesh point:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python -m benchmarks.fig16_frontier
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Sequence
+
+import jax
+
+from repro.core.automaton import compile_query
+from repro.core.engine import BatchedDenseRPQEngine, RegisteredQuery
+from repro.streaming.generators import gmark_like, yago_like
+
+from .common import emit
+
+LABELS = ["p0", "p1", "p2", "p3"]
+EXPRS = ["p0 . p1*", "p0*", "(p0 | p1)*", "p1 . p2* . p3", "p2 . p3*",
+         "p0 . p1 . p2*", "p1*", "(p2 | p3)*"]
+
+
+def _specs(n_queries: int, window: float) -> List[RegisteredQuery]:
+    exprs = (EXPRS * ((n_queries + len(EXPRS) - 1) // len(EXPRS)))[:n_queries]
+    return [RegisteredQuery(f"q{i}", compile_query(e), window)
+            for i, e in enumerate(exprs)]
+
+
+def _stream(generator: str, n_vertices: int, n_edges: int):
+    if generator == "yago":
+        return list(yago_like(n_vertices, n_edges, n_labels=len(LABELS),
+                              seed=7))
+    return list(gmark_like(n_vertices, n_edges, LABELS, seed=5,
+                           cyclicity=0.15))
+
+
+def _mk_executor(ename: str, frontier: str, frontier_cap: int):
+    if ename == "local":
+        from repro.core.executor import LocalExecutor
+
+        return LocalExecutor("jnp", frontier=frontier,
+                             frontier_cap=frontier_cap)
+    from repro.distributed.executor import MeshExecutor
+
+    return MeshExecutor(backend="jnp", frontier=frontier,
+                        frontier_cap=frontier_cap)
+
+
+def _drive(specs, stream, slide, n_slots, ename, frontier, frontier_cap=16):
+    def make():
+        return BatchedDenseRPQEngine(
+            specs, n_slots=n_slots, batch_size=1,
+            executor=_mk_executor(ename, frontier, frontier_cap))
+
+    # warm the jit cache out of the timed loop (both the steady-state
+    # ingest shape and the expiry step)
+    g = make()
+    for sgt in stream[:3]:
+        g.insert(sgt.src, sgt.dst, sgt.label, sgt.ts)
+        g.expire(sgt.ts)
+    g = make()
+    next_exp = slide
+    events: List[List] = []
+    t0 = time.perf_counter()
+    for sgt in stream:
+        if sgt.ts >= next_exp:
+            g.expire(sgt.ts)
+            while next_exp <= sgt.ts:
+                next_exp += slide
+        events.append(g.insert(sgt.src, sgt.dst, sgt.label, sgt.ts))
+    return time.perf_counter() - t0, events, g
+
+
+def run(n_queries: int = 8, n_edges: int = 260, n_vertices: int = 96,
+        n_slots: int = 112, window: float = 12.0, slide: float = 4.0,
+        generator: str = "gmark",
+        executors: Sequence[str] = ("local",)) -> Dict:
+    specs = _specs(n_queries, window)
+    stream = _stream(generator, n_vertices, n_edges)
+    agg = n_queries * len(stream)
+
+    out: Dict = {"ok": True, "generator": generator, "n_queries": n_queries,
+                 "devices": len(jax.devices()), "configs": {}}
+    for ename in executors:
+        wall_d, ev_d, g_d = _drive(specs, stream, slide, n_slots, ename, "off")
+        wall_f, ev_f, g_f = _drive(specs, stream, slide, n_slots, ename,
+                                   "auto")
+        # per-event result-stream identity: frontier == dense, every lane
+        assert len(ev_d) == len(ev_f)
+        for i, (fd, ff) in enumerate(zip(ev_d, ev_f)):
+            for qi in range(n_queries):
+                assert fd[qi] == ff[qi], (
+                    f"{generator}/{ename} event {i} lane {qi}: frontier != "
+                    f"dense ({fd[qi] ^ ff[qi]})")
+        st = g_f.executor.frontier_stats
+        speedup = wall_d / wall_f
+        cfg = {
+            "agg_eps_dense": agg / wall_d,
+            "agg_eps_frontier": agg / wall_f,
+            "speedup": speedup,
+            "rounds_dense": g_d.executor.rounds_total,
+            "rounds_frontier": g_f.executor.rounds_total,
+            "occupancy": st["occupancy"],
+            "fallbacks": st["fallbacks"],
+            "dispatches": st["dispatches"],
+            "frontier_cap": st["cap"],
+        }
+        out["configs"][ename] = cfg
+        emit(f"fig16/{generator}/Q={n_queries}/{ename}/dense",
+             wall_d / agg * 1e6, f"agg_eps={agg / wall_d:.0f}")
+        emit(f"fig16/{generator}/Q={n_queries}/{ename}/frontier",
+             wall_f / agg * 1e6,
+             f"agg_eps={agg / wall_f:.0f} speedup={speedup:.2f}x "
+             f"occ={st['occupancy']:.3f} fallbacks={st['fallbacks']}"
+             f"/{st['dispatches']} cap={st['cap']}")
+    return out
+
+
+def _report(tag: str, r: Dict) -> None:
+    for ename, cfg in r["configs"].items():
+        print(f"[ok] fig16 {tag} {ename}: frontier == dense per event; "
+              f"{cfg['speedup']:.2f}x agg edges/s, occupancy "
+              f"{cfg['occupancy']:.3f}, fallbacks {cfg['fallbacks']}")
+
+
+if __name__ == "__main__":
+    # headline: the sparse gMark stream at Q=8 on the local executor — the
+    # PR's acceptance config (the mesh/yago/Q=32 points below keep their
+    # own per-event identity assertions but trade edge count for wall
+    # budget; identity across executors is also pinned by
+    # tests/test_frontier.py under 8 virtual devices)
+    head = run(n_queries=8, generator="gmark", executors=("local",))
+    _report("gmark Q=8", head)
+    mesh = run(n_queries=8, n_edges=140, generator="gmark",
+               executors=("mesh",))
+    _report("gmark Q=8", mesh)
+    yago = run(n_queries=8, n_edges=200, generator="yago",
+               executors=("local",))
+    _report("yago Q=8", yago)
+    # a deeper group: the frontier win must survive 4x the transition rows
+    r32 = run(n_queries=32, n_edges=80, generator="gmark",
+              executors=("local",))
+    _report("gmark Q=32", r32)
+    headline = head["configs"]["local"]["speedup"]
+    assert headline >= 2.0, f"frontier speedup {headline:.2f}x < 2x target"
+    print(f"[ok] frontier >= 2x dense on sparse windows at Q=8 "
+          f"({headline:.2f}x)")

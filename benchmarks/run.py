@@ -1,23 +1,47 @@
 """Benchmark harness: one module per paper table/figure. Prints
 ``name,us_per_call,derived`` CSV rows (paper-faithful reference engine AND
 the dense TPU engine where applicable) plus the roofline table from the
-dry-run artifacts."""
+dry-run artifacts.
+
+Each module's ``run()`` return value is also written as a machine-readable
+``benchmarks/results/BENCH_<name>.json`` summary (edges/s, rounds, skip
+fractions, frontier occupancy, ... — whatever the module reports), so the
+perf trajectory is tracked ACROSS PRs instead of living only in scrollback:
+diff two checkouts' BENCH files to see what a change did to throughput.
+"""
 from __future__ import annotations
 
 import argparse
+import json
+import os
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+def _write_summary(name: str, result) -> None:
+    """BENCH_<name>.json next to the dry-run artifacts. Non-JSON-able
+    leaves (device arrays, engines) degrade to their repr — the summary is
+    for trend diffs, not restoration."""
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump({"name": name, "result": result}, f, indent=1,
+                  default=lambda o: repr(o), sort_keys=True)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="", help="substring filter on module name")
     ap.add_argument("--fast", action="store_true", help="smaller sizes")
+    ap.add_argument("--no-summaries", action="store_true",
+                    help="skip writing BENCH_*.json result summaries")
     args = ap.parse_args()
 
     from . import (fig4_throughput, fig5_index_size, fig6_window,
                    fig7_query_size, fig10_deletions, fig11_vs_batch,
                    fig12_multi_query, fig13_query_churn,
                    fig14_sharded_engine, fig15_backend_shootout,
-                   roofline, table4_rspq)
+                   fig16_frontier, roofline, table4_rspq)
 
     scale = 0.4 if args.fast else 1.0
     modules = [
@@ -37,13 +61,19 @@ def main() -> None:
         # fig15 runs all three contraction backends through both executors
         # (pallas/bucket kernels interpret off-TPU; see the module docstring)
         ("fig15", lambda: fig15_backend_shootout.run(n_edges=int(240 * scale))),
+        # fig16: frontier-restricted ingest vs the dense relaxation on
+        # sparse low-degree windows (per-event identity asserted inside)
+        ("fig16", lambda: fig16_frontier.run(n_edges=int(260 * scale),
+                                             executors=("local",))),
         ("roofline", roofline.run),
     ]
     print("name,us_per_call,derived")
     for name, fn in modules:
         if args.only and args.only not in name:
             continue
-        fn()
+        result = fn()
+        if not args.no_summaries:
+            _write_summary(name, result)
 
 
 if __name__ == "__main__":

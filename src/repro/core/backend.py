@@ -174,12 +174,16 @@ class PallasBackend(ContractionBackend):
 
     ``interpret=None`` auto-selects the Pallas interpreter off-TPU (the
     CPU validation path used by tests and CI's pallas-interpret leg).
+    Block sizes default to the kernels' shape-aware table (``bm=None`` —
+    skinny frontier slabs get a small bm / wide bn instead of 8x row
+    padding); pass explicit ints to pin them.
     """
 
     name = "pallas"
 
     def __init__(self, interpret: Optional[bool] = None,
-                 bm: int = 128, bn: int = 128, bk: int = 64):
+                 bm: Optional[int] = None, bn: Optional[int] = None,
+                 bk: Optional[int] = None):
         self.interpret = interpret
         self.bm, self.bn, self.bk = bm, bn, bk
 

@@ -69,6 +69,19 @@ shape-static — the mask buys exact accounting (executor counters
 ``query_rounds_total`` vs ``unmasked_query_rounds_total``) — while the mesh
 executor turns the same mask into skipped contractions per lane shard.
 
+Frontier-restricted ingest (beyond-paper, PR 5): with ``frontier="on" |
+"auto"`` the executor's ingest dispatch relaxes only the source rows the
+micro-batch dirties (seeded in-dispatch from the batch's source slots —
+the engine already threads them through ``ingest_batch``), so per-event
+cost is O(J·F·N²) instead of O(J·N³); overflow falls back to the dense
+loop inside the dispatch, so results are bit-identical in every mode.
+Explicit deletions, lane-seeding closures (:meth:`register_query`), and
+checkpoint adoption stay on the dense closure — each is a from-scratch
+re-derivation that dirties every row by construction — and compaction
+needs no frontier bookkeeping because no frontier state persists across
+dispatches (the dirty set is recomputed per ingest, so slot recycling and
+vertex-axis growth cannot invalidate stale row indices).
+
 Key property of the (max, min) formulation (beyond-paper, §Perf): *window
 expiry needs no index maintenance* — a pair is valid iff its bottleneck
 timestamp exceeds ``now - |W_q|``, so expiry is a threshold at read time.
@@ -247,6 +260,8 @@ class BatchedDenseRPQEngine:
         batch_size: int = 32,
         backend="jnp",  # name in backend.KNOWN_BACKENDS or a ContractionBackend
         executor: Optional[Executor] = None,
+        frontier: str = "off",   # off | on | auto (executor ingest mode)
+        frontier_cap: int = 32,
     ):
         queries = list(queries)
         if not queries:
@@ -257,7 +272,10 @@ class BatchedDenseRPQEngine:
         names = [q.name for q in queries]
         if len(set(names)) != len(names):
             raise ValueError(f"duplicate query names: {names}")
-        self.executor = executor if executor is not None else LocalExecutor(backend)
+        # frontier kwargs configure the default executor only; an explicit
+        # executor instance arrives already configured
+        self.executor = executor if executor is not None else LocalExecutor(
+            backend, frontier=frontier, frontier_cap=frontier_cap)
         self.backend = self.executor.backend
         self.lane_specs: List[Optional[RegisteredQuery]] = list(queries)
         # round lane capacity to the executor's shard quantum (inert padding
@@ -933,11 +951,13 @@ class DenseRPQEngine(BatchedDenseRPQEngine):
         backend="jnp",
         path_semantics: str = "arbitrary",
         executor: Optional[Executor] = None,
+        frontier: str = "off",
+        frontier_cap: int = 32,
     ):
         super().__init__(
             [RegisteredQuery("q0", dfa, float(window), path_semantics)],
             n_slots=n_slots, batch_size=batch_size, backend=backend,
-            executor=executor,
+            executor=executor, frontier=frontier, frontier_cap=frontier_cap,
         )
         self.dfa = dfa
         self.window = float(window)

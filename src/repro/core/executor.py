@@ -48,7 +48,14 @@ from .semiring import (
     BatchedTransitionTable,
     batched_closure,
     batched_valid_pairs,
+    frontier_closure,
 )
+
+FRONTIER_MODES = ("off", "on", "auto")
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(int(n) - 1, 1).bit_length()
 
 
 class BatchedEngineArrays(NamedTuple):
@@ -91,6 +98,30 @@ class QueryTables(NamedTuple):
 # ---------------------------------------------------------------------------
 
 
+def apply_batch(arrays: BatchedEngineArrays, src, dst, lab, ts, mask,
+                ts_floor):
+    """The ingest dispatch prologue, shared by the dense and frontier
+    forms on BOTH executors: fold the masked batch into the adjacency
+    (newest-timestamp max) and advance the stream clock. Returns
+    ``(adj, now)``."""
+    eff_ts = jnp.where(mask, ts, NEG_INF)
+    adj = arrays.adj.at[lab, src, dst].max(eff_ts, mode="drop")
+    now = jnp.maximum(arrays.now, jnp.maximum(jnp.max(eff_ts), ts_floor))
+    return adj, now
+
+
+def emit_new(arrays: BatchedEngineArrays, dist, adj, now, finals_mask,
+             windows):
+    """The ingest dispatch epilogue, shared likewise: per-query window
+    validity at the new clock, diffed against the emitted frontier.
+    Returns ``(new_arrays, new)``."""
+    low = now - windows
+    valid = batched_valid_pairs(dist, finals_mask, low)
+    new = jnp.logical_and(valid, jnp.logical_not(arrays.emitted))
+    emitted = jnp.logical_or(arrays.emitted, valid)
+    return BatchedEngineArrays(adj, dist, emitted, now), new
+
+
 @functools.partial(jax.jit, static_argnames=("backend",), donate_argnums=(0,))
 def _ingest(
     arrays: BatchedEngineArrays,
@@ -107,18 +138,45 @@ def _ingest(
     w_max: jnp.ndarray,        # () f32 group retention threshold
     backend: BackendLike = "jnp",
 ):
-    eff_ts = jnp.where(mask, ts, NEG_INF)
-    adj = arrays.adj.at[lab, src, dst].max(eff_ts, mode="drop")
-    now = jnp.maximum(arrays.now, jnp.maximum(jnp.max(eff_ts), ts_floor))
+    adj, now = apply_batch(arrays, src, dst, lab, ts, mask, ts_floor)
     dist, rounds, qrounds = batched_closure(
         arrays.dist, adj, btt, backend, query_mask=live_mask,
         now=now, w_max=w_max,
     )
-    low = now - windows
-    valid = batched_valid_pairs(dist, finals_mask, low)
-    new = jnp.logical_and(valid, jnp.logical_not(arrays.emitted))
-    emitted = jnp.logical_or(arrays.emitted, valid)
-    return BatchedEngineArrays(adj, dist, emitted, now), new, rounds, qrounds
+    out, new = emit_new(arrays, dist, adj, now, finals_mask, windows)
+    return out, new, rounds, qrounds
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "f_cap"),
+                   donate_argnums=(0,))
+def _ingest_frontier(
+    arrays: BatchedEngineArrays,
+    src: jnp.ndarray,
+    dst: jnp.ndarray,
+    lab: jnp.ndarray,
+    ts: jnp.ndarray,
+    mask: jnp.ndarray,
+    ts_floor: jnp.ndarray,
+    btt: BatchedTransitionTable,
+    finals_mask: jnp.ndarray,
+    windows: jnp.ndarray,
+    live_mask: jnp.ndarray,
+    w_max: jnp.ndarray,
+    backend: BackendLike = "jnp",
+    f_cap: int = 32,
+):
+    """Frontier-restricted ingest: identical to :func:`_ingest` except the
+    closure relaxes only the rows the batch dirtied (seeded in-dispatch
+    from the batch itself), falling back to the dense loop when a lane's
+    dirty set overflows ``f_cap`` (a runtime bit, not a recompile).
+    Results are bit-identical to the dense dispatch by construction."""
+    adj, now = apply_batch(arrays, src, dst, lab, ts, mask, ts_floor)
+    dist, rounds, qrounds, fstats = frontier_closure(
+        arrays.dist, adj, btt, backend, src, mask, f_cap,
+        query_mask=live_mask, now=now, w_max=w_max,
+    )
+    out, new = emit_new(arrays, dist, adj, now, finals_mask, windows)
+    return out, new, rounds, qrounds, fstats
 
 
 @functools.partial(jax.jit, static_argnames=("backend",), donate_argnums=(0,))
@@ -204,18 +262,40 @@ class Executor:
     q_multiple: int = 1
     n_multiple: int = 1
 
-    def __init__(self, backend: BackendLike = "jnp"):
+    def __init__(self, backend: BackendLike = "jnp",
+                 frontier: str = "off", frontier_cap: int = 32):
         # first-class ContractionBackend; unknown names raise HERE, at
         # construction (they used to fall silently back to the jnp oracle)
         self.backend: ContractionBackend = resolve_backend(backend)
+        if frontier not in FRONTIER_MODES:
+            raise ValueError(
+                f"unknown frontier mode {frontier!r}; known modes: "
+                f"{', '.join(FRONTIER_MODES)}")
+        if frontier_cap < 1:
+            raise ValueError(f"frontier_cap must be >= 1, got {frontier_cap}")
+        #: frontier-restricted ingest: "off" = dense dispatch only (the
+        #: pre-PR 5 path, bit-identical), "on" = frontier dispatch at a
+        #: FIXED capacity, "auto" = frontier dispatch whose capacity grows
+        #: ×2 when overflow fallbacks are observed (compile-cache friendly)
+        self.frontier = frontier
+        self.frontier_cap = _next_pow2(frontier_cap) if frontier_cap > 1 else 1
         self.steps = 0  # jitted ingest/delete dispatches
         self._arrays: Optional[BatchedEngineArrays] = None
-        # (rounds_dev, qrounds_dev, n_live) queue: converted lazily so the
-        # per-dispatch hot path never blocks on a device->host sync
-        self._pending_counts: List[Tuple[object, object, int]] = []
+        # (rounds_dev, qrounds_dev, n_live, fstats_dev|None, n_slots) queue:
+        # converted lazily so the per-dispatch hot path never blocks on a
+        # device->host sync
+        self._pending_counts: List[Tuple[object, object, int, object, int]] = []
         self._rounds_total = 0
         self._query_rounds_total = 0
         self._unmasked_query_rounds_total = 0
+        # frontier telemetry (aggregated from FrontierStats at flush)
+        self._frontier_dispatches = 0
+        self._frontier_fallbacks = 0
+        self._frontier_rows_relaxed = 0
+        self._frontier_dense_row_equiv = 0
+        self._frontier_seed_rows = 0
+        self._frontier_max_lane_rows = 0
+        self._frontier_growth_mark = 0
 
     # -- state ---------------------------------------------------------------
 
@@ -286,7 +366,15 @@ class Executor:
                      tables: QueryTables):
         """One jitted ingest dispatch for the whole query group. Returns the
         per-query NEW-validity matrix as a DEVICE array (the engine decodes
-        it, possibly deferred so the transfer overlaps the next dispatch)."""
+        it, possibly deferred so the transfer overlaps the next dispatch).
+
+        With ``frontier != "off"`` the dispatch is the frontier-restricted
+        one: per-event work scales with the rows the batch dirties, not N
+        (overflow falls back to the dense loop in-dispatch; results are
+        bit-identical either way)."""
+        if self.frontier != "off":
+            return self._ingest_frontier_dispatch(
+                src, dst, lab, ts, mask, ts_floor, tables)
         self._arrays, new, rounds, qrounds = _ingest(
             self._arrays,
             jnp.asarray(src), jnp.asarray(dst), jnp.asarray(lab),
@@ -297,6 +385,21 @@ class Executor:
             backend=self.backend,
         )
         self._account(rounds, qrounds, tables.n_live)
+        self.steps += 1
+        return new
+
+    def _ingest_frontier_dispatch(self, src, dst, lab, ts, mask,
+                                  ts_floor: float, tables: QueryTables):
+        self._arrays, new, rounds, qrounds, fstats = _ingest_frontier(
+            self._arrays,
+            jnp.asarray(src), jnp.asarray(dst), jnp.asarray(lab),
+            jnp.asarray(ts), jnp.asarray(mask),
+            jnp.asarray(ts_floor, jnp.float32),
+            tables.btt, tables.finals_mask, tables.windows, tables.live_mask,
+            jnp.asarray(tables.max_window, jnp.float32),
+            backend=self.backend, f_cap=self.frontier_cap,
+        )
+        self._account(rounds, qrounds, tables.n_live, fstats)
         self.steps += 1
         return new
 
@@ -369,21 +472,87 @@ class Executor:
 
     # -- round accounting ----------------------------------------------------
 
-    def _account(self, rounds, qrounds, n_live: int) -> None:
-        self._pending_counts.append((rounds, qrounds, n_live))
-        if len(self._pending_counts) >= 256:
+    def _account(self, rounds, qrounds, n_live: int, fstats=None) -> None:
+        n = int(self._arrays.dist.shape[1]) if self._arrays is not None else 0
+        self._pending_counts.append((rounds, qrounds, n_live, fstats, n))
+        # auto-frontier flushes more eagerly: the ×2 capacity growth reads
+        # the flushed overflow telemetry, and reacting a couple hundred
+        # dispatches late would strand the stream on the dense fallback
+        limit = 64 if self.frontier == "auto" else 256
+        if len(self._pending_counts) >= limit:
             self._flush_counts()
 
     def _flush_counts(self) -> None:
-        for rounds, qrounds, n_live in self._pending_counts:
+        for rounds, qrounds, n_live, fstats, n in self._pending_counts:
             self._consume_count(rounds, qrounds, n_live)
+            self._consume_frontier(fstats, rounds, n_live, n)
         self._pending_counts.clear()
+        self._maybe_grow_frontier()
 
     def _consume_count(self, rounds, qrounds, n_live: int) -> None:
         r = int(np.asarray(rounds))
         self._rounds_total += r
         self._query_rounds_total += int(np.asarray(qrounds).sum())
         self._unmasked_query_rounds_total += n_live * r
+
+    def _consume_frontier(self, fstats, rounds, n_live: int, n: int) -> None:
+        """Aggregate one dispatch's FrontierStats. Works on scalar stats
+        (local) and per-shard arrays (mesh) alike: sums/maxes reduce both."""
+        if fstats is None:
+            return
+        self._frontier_dispatches += 1
+        self._frontier_fallbacks += int(
+            np.asarray(fstats.fell_back).astype(np.int64).sum())
+        self._frontier_rows_relaxed += int(
+            np.asarray(fstats.rows_relaxed).astype(np.int64).sum())
+        self._frontier_seed_rows += int(
+            np.asarray(fstats.seed_rows).astype(np.int64).sum())
+        self._frontier_max_lane_rows = max(
+            self._frontier_max_lane_rows,
+            int(np.asarray(fstats.max_lane_rows).max()))
+        # what a dense loop of the same dispatch relaxes: every live lane
+        # rides every round over all N rows (occupancy denominator; for a
+        # mesh dispatch `rounds` is per-shard — the max is the sync count)
+        r = int(np.asarray(rounds).max())
+        self._frontier_dense_row_equiv += n_live * n * r
+
+    def _maybe_grow_frontier(self) -> None:
+        """``frontier="auto"``: grow the frontier capacity ×2 toward the
+        largest observed lane frontier whenever new overflow fallbacks were
+        flushed. Capacity is a trace-time shape, so growth means one new
+        compile per ×2 step — the same bucketing discipline as Q/K."""
+        if self.frontier != "auto":
+            return
+        if self._frontier_fallbacks <= self._frontier_growth_mark:
+            return
+        self._frontier_growth_mark = self._frontier_fallbacks
+        n = (int(self._arrays.dist.shape[1])
+             if self._arrays is not None else self._frontier_max_lane_rows)
+        limit = _next_pow2(n)
+        target = min(_next_pow2(max(self._frontier_max_lane_rows,
+                                    self.frontier_cap * 2)), limit)
+        while self.frontier_cap < target:
+            self.frontier_cap *= 2
+
+    @property
+    def frontier_stats(self) -> Dict[str, object]:
+        """Aggregate frontier telemetry: dispatches taken, overflow
+        fallbacks, rows relaxed (summed over rounds) vs the dense-loop row
+        equivalent, seed occupancy, and the current capacity."""
+        self._flush_counts()
+        dense_rows = self._frontier_dense_row_equiv
+        return {
+            "mode": self.frontier,
+            "cap": self.frontier_cap,
+            "dispatches": self._frontier_dispatches,
+            "fallbacks": self._frontier_fallbacks,
+            "rows_relaxed": self._frontier_rows_relaxed,
+            "dense_row_equiv": dense_rows,
+            "seed_rows": self._frontier_seed_rows,
+            "max_lane_rows": self._frontier_max_lane_rows,
+            "occupancy": (self._frontier_rows_relaxed / dense_rows
+                          if dense_rows else 0.0),
+        }
 
     @property
     def rounds_total(self) -> int:

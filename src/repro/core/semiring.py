@@ -22,6 +22,13 @@ The closure entry points additionally thread ``now``/``w_max`` so a backend
 whose operand representation is anchored to the stream clock (the bucket
 level grid) can ``prepare_state``/``decode_state`` at the dispatch
 boundary; the round loop itself never leaves the backend's representation.
+
+Since PR 5 the ingest closure also comes in a FRONTIER-RESTRICTED form
+(:func:`frontier_closure` / :func:`shard_frontier_closure`): only the
+source rows a micro-batch dirties are gathered and relaxed, making
+per-event work O(J·F·N²) instead of O(J·N³) on low-degree windows, with an
+in-dispatch dense fallback on frontier overflow (bit-identical results
+always — see the frontier section below).
 """
 from __future__ import annotations
 
@@ -277,6 +284,38 @@ def batched_relax_round(
     return out
 
 
+def _masked_closure_loop(
+    dist_op: jnp.ndarray,
+    adj_op: jnp.ndarray,
+    btt: BatchedTransitionTable,
+    backend: ContractionBackend,
+    mask0: jnp.ndarray,
+    bound: int,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """The convergence-masked fixpoint loop on operands ALREADY in the
+    backend's representation (shared by :func:`batched_closure` and the
+    frontier path's overflow fallback — the fallback must run the exact
+    dense loop so a fallback dispatch stays bit-identical to ``frontier="off"``)."""
+
+    def cond(carry):
+        _d, mask, it, _qr = carry
+        return jnp.logical_and(jnp.any(mask), it < bound)
+
+    def body(carry):
+        d, mask, it, qr = carry
+        nd = batched_relax_round(d, adj_op, btt, backend, query_mask=mask)
+        changed = jnp.any(nd > d, axis=(1, 2, 3))     # (Q,) per-query
+        return nd, jnp.logical_and(mask, changed), it + 1, qr + mask
+
+    dist0 = batched_relax_round(dist_op, adj_op, btt, backend, query_mask=mask0)
+    changed0 = jnp.logical_and(mask0, jnp.any(dist0 > dist_op, axis=(1, 2, 3)))
+    qr0 = mask0.astype(jnp.int32)
+    dist_f, _, rounds, query_rounds = jax.lax.while_loop(
+        cond, body, (dist0, changed0, jnp.asarray(1, jnp.int32), qr0)
+    )
+    return dist_f, rounds, query_rounds
+
+
 def batched_closure(
     dist: jnp.ndarray,
     adj: jnp.ndarray,
@@ -318,23 +357,8 @@ def batched_closure(
     mask0 = (jnp.ones((q,), bool) if query_mask is None
              else jnp.asarray(query_mask, bool))
     dist_op, adj_op = backend.prepare_state(dist, adj, now, w_max)
-
-    def cond(carry):
-        _d, mask, it, _qr = carry
-        return jnp.logical_and(jnp.any(mask), it < bound)
-
-    def body(carry):
-        d, mask, it, qr = carry
-        nd = batched_relax_round(d, adj_op, btt, backend, query_mask=mask)
-        changed = jnp.any(nd > d, axis=(1, 2, 3))     # (Q,) per-query
-        return nd, jnp.logical_and(mask, changed), it + 1, qr + mask
-
-    dist0 = batched_relax_round(dist_op, adj_op, btt, backend, query_mask=mask0)
-    changed0 = jnp.logical_and(mask0, jnp.any(dist0 > dist_op, axis=(1, 2, 3)))
-    qr0 = mask0.astype(jnp.int32)
-    dist_f, _, rounds, query_rounds = jax.lax.while_loop(
-        cond, body, (dist0, changed0, jnp.asarray(1, jnp.int32), qr0)
-    )
+    dist_f, rounds, query_rounds = _masked_closure_loop(
+        dist_op, adj_op, btt, backend, mask0, bound)
     return backend.decode_state(dist_f, now, w_max), rounds, query_rounds
 
 
@@ -346,6 +370,209 @@ def batched_valid_pairs(
     acc = jnp.where(finals[:, None, None, :], dist, NEG_INF)
     best = jnp.max(acc, axis=3)
     return best > low[:, None, None]
+
+
+# ---------------------------------------------------------------------------
+# Frontier-restricted relaxation (PR 5 tentpole)
+#
+# The dense round contracts ALL N source rows of every lane even when a
+# micro-batch of B inserted edges can only perturb a few of them. But the
+# (max, min) recurrence couples dist[q, x, v, t] only to dist[q, x, u, s] —
+# the SAME source row x — so each row evolves independently given the shared
+# adjacency, and a closure that was at fixpoint before the batch can only
+# change on rows that either start at an inserted edge's source (the base
+# term) or already reach one with a finite entry (any longer path through a
+# new edge factors as x →* u → v, and the x →* u prefix is recorded at the
+# pre-batch fixpoint). Those DIRTY rows are an O(Q·N²·K) elementwise
+# reduction to find — cheap next to the O(J·N³) contraction they avoid —
+# and a round restricted to them reaches the exact dense fixpoint: clean
+# rows are provably stable (their round-1 update is a no-op), and dirty
+# rows see the same contributions they would in the dense round.
+#
+# F (the frontier capacity) is a trace-time shape, bucketed ×2 by the
+# executor so compile caches are reused; when the live frontier overflows F
+# the dispatch falls back to the dense loop IN-DISPATCH (lax.cond) — sound
+# and bit-identical, since the dense round is a superset — so worst-case
+# cost never exceeds the dense path. Rows that stop changing are masked out
+# (never re-added: a row's fate depends only on itself), so the frontier
+# only shrinks across rounds and per-event work is O(R·J·F·N²).
+# ---------------------------------------------------------------------------
+
+
+class FrontierStats(NamedTuple):
+    """Per-dispatch frontier telemetry (device scalars; the executor queues
+    them with the round counters and converts lazily)."""
+
+    seed_rows: jnp.ndarray      # () int32 dirty rows across all lanes
+    max_lane_rows: jnp.ndarray  # () int32 largest single-lane frontier
+    rows_relaxed: jnp.ndarray   # () int32 sum over rounds of rows relaxed
+    fell_back: jnp.ndarray      # () bool dense fallback taken (overflow)
+
+
+def frontier_seed(
+    dist: jnp.ndarray,          # (Q, N, N, K) f32 timestamps (pre-encode)
+    src: jnp.ndarray,           # (B,) int32 inserted-edge source slots
+    smask: jnp.ndarray,         # (B,) bool batch padding mask
+    query_mask: Optional[jnp.ndarray] = None,   # (Q,) bool live lanes
+) -> jnp.ndarray:
+    """(Q, N) bool dirty-row mask for a batch of inserted edges: rows
+    x = src (base term) plus rows with a finite entry reaching an inserted
+    edge's source in any DFA state. Computed on the RAW f32 timestamps
+    (finite = ``> -inf``), which is exact for the float backends and a
+    conservative superset for clock-anchored representations (an ancient
+    finite timestamp encodes to the bucket zero; relaxing its row is then a
+    no-op, never an error)."""
+    q, n, _, k = dist.shape
+    idx = jnp.where(smask, src, n)     # out-of-range -> dropped
+    src_mask = jnp.zeros((n,), bool).at[idx].set(True, mode="drop")
+    reach = jnp.any(
+        jnp.logical_and(dist > NEG_INF, src_mask[None, None, :, None]),
+        axis=(2, 3),
+    )                                   # (Q, N) rows reaching a batch source
+    dirty = jnp.logical_or(reach, src_mask[None, :])
+    if query_mask is not None:
+        dirty = jnp.logical_and(dirty, query_mask[:, None])
+    return dirty
+
+
+def pack_frontier(
+    dirty: jnp.ndarray, f_cap: int
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Compact a (Q, N) dirty mask into per-lane row indices.
+
+    Returns ``(rows, rowmask, counts)``: rows (Q, F) int32 (first
+    ``min(count, F)`` slots hold the dirty row ids in ascending order,
+    padding is 0 — harmless: padded slots are masked and a masked slot's
+    contribution is the semiring zero), rowmask (Q, F) bool, counts (Q,)
+    int32 of TRUE dirty rows (counts > F signals overflow; the overflowing
+    rows are dropped here, which is why callers must take the dense
+    fallback in that case)."""
+    q, n = dirty.shape
+    cnt = jnp.sum(dirty, axis=1).astype(jnp.int32)
+    pos = jnp.cumsum(dirty, axis=1) - 1                  # (Q, N)
+    pos = jnp.where(dirty, jnp.minimum(pos, f_cap), f_cap)
+    rows = jnp.zeros((q, f_cap), jnp.int32).at[
+        jnp.arange(q)[:, None], pos
+    ].set(jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[None, :], (q, n)),
+          mode="drop")
+    rowmask = jnp.arange(f_cap)[None, :] < jnp.minimum(cnt, f_cap)[:, None]
+    return rows, rowmask, cnt
+
+
+def frontier_relax_round(
+    dist: jnp.ndarray,          # (Q, N, N, K) in the backend's representation
+    adj: jnp.ndarray,           # (L, N, N) shared adjacency (same repr)
+    btt: BatchedTransitionTable,
+    backend: BackendLike,
+    rows: jnp.ndarray,          # (Q, F) int32 frontier row indices
+    rowmask: jnp.ndarray,       # (Q, F) bool valid-slot mask
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One relaxation round restricted to the frontier rows.
+
+    Gathers the (Q, F, N, K) slab of dirty source rows, contracts it
+    against the shared adjacency through the backend's ``contract_rows``
+    hook (the same substrate the dense round uses — pallas/bucket kernels
+    see a skinny (F, N) operand), applies the base term at the frontier
+    rows, scatter-maxes the slab back, and reports which slots changed.
+    Returns ``(dist', changed)`` with changed (Q, F) already intersected
+    with ``rowmask`` — the next round's mask (a row whose round produced no
+    update is at its fixpoint forever: it depends only on itself)."""
+    backend = resolve_backend(backend)
+    q, n, _, k = dist.shape
+    f = rows.shape[1]
+    zero = jnp.asarray(backend.zero, dist.dtype)
+    lane = jnp.arange(q)[:, None]
+    slab = dist[lane, rows]                            # (Q, F, N, K)
+    slab_s = slab[btt.qidx, :, :, btt.src]             # (J, F, N) [f, u]
+    a_l = adj[btt.lab]                                 # (J, N, N) [u, v]
+    contrib = backend.contract_rows(slab_s, a_l)       # (J, F, N) [f, v]
+    # base term at the frontier rows: adj[l, x, v] for x = rows[q, f]
+    rows_j = rows[btt.qidx]                            # (J, F)
+    a_base = jnp.take_along_axis(a_l, rows_j[:, :, None], axis=1)
+    base_rows = jnp.logical_and(btt.start_mask, btt.active)
+    contrib = jnp.where(base_rows[:, None, None],
+                        jnp.maximum(contrib, a_base), contrib)
+    # zero inactive transition rows and invalid/converged frontier slots
+    act = jnp.logical_and(btt.active[:, None], rowmask[btt.qidx])  # (J, F)
+    contrib = jnp.where(act[:, :, None], contrib, zero)
+    seg = btt.qidx * k + btt.dst
+    scat = jax.ops.segment_max(contrib, seg, num_segments=q * k)  # (QK, F, N)
+    upd = jnp.transpose(scat.reshape(q, k, f, n), (0, 2, 3, 1))   # (Q, F, N, K)
+    new_slab = jnp.maximum(slab, upd)
+    changed = jnp.logical_and(
+        jnp.any(new_slab > slab, axis=(2, 3)), rowmask)
+    out = dist.at[lane, rows].max(new_slab)
+    return out, changed
+
+
+def frontier_closure(
+    dist: jnp.ndarray,
+    adj: jnp.ndarray,
+    btt: BatchedTransitionTable,
+    backend: BackendLike,
+    src: jnp.ndarray,           # (B,) int32 inserted-edge source slots
+    smask: jnp.ndarray,         # (B,) bool batch padding mask
+    f_cap: int,                 # trace-time frontier capacity (bucketed ×2)
+    query_mask: Optional[jnp.ndarray] = None,
+    max_rounds: int = 0,
+    now: Optional[jnp.ndarray] = None,
+    w_max: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, FrontierStats]:
+    """Frontier-restricted closure with in-dispatch dense fallback.
+
+    Seeds the frontier from the batch itself (see :func:`frontier_seed`),
+    iterates frontier rounds until every row settles, and — when any
+    lane's dirty set overflows ``f_cap`` — runs the exact dense masked
+    loop instead (``lax.cond``: both branches are traced, the choice is a
+    runtime bit, so there is no recompile storm on overflow). Results are
+    bit-identical to :func:`batched_closure` either way.
+
+    Returns ``(dist, rounds, query_rounds, stats)``. ``query_rounds``
+    counts rounds a lane had a non-empty frontier — a live lane the batch
+    never dirtied counts ZERO rounds here (the dense loop charges every
+    live lane its round-1 no-op), which is exactly the per-event work
+    decoupling the frontier buys."""
+    backend = resolve_backend(backend)
+    q, n, _, k = dist.shape
+    bound = max_rounds if max_rounds > 0 else n * k + 1
+    mask0 = (jnp.ones((q,), bool) if query_mask is None
+             else jnp.asarray(query_mask, bool))
+    dirty = frontier_seed(dist, src, smask, mask0)
+    rows, rowmask0, cnt = pack_frontier(dirty, f_cap)
+    seed_rows = jnp.sum(cnt)
+    max_lane_rows = jnp.max(cnt)
+    overflow = jnp.any(cnt > f_cap)
+    dist_op, adj_op = backend.prepare_state(dist, adj, now, w_max)
+
+    def dense_branch(_):
+        d_f, rounds, qrounds = _masked_closure_loop(
+            dist_op, adj_op, btt, backend, mask0, bound)
+        live_rows = jnp.sum(mask0.astype(jnp.int32)) * n
+        return d_f, rounds, qrounds, rounds * live_rows
+
+    def frontier_branch(_):
+        def cond(carry):
+            _d, rm, it, _qr, _rr = carry
+            return jnp.logical_and(jnp.any(rm), it < bound)
+
+        def body(carry):
+            d, rm, it, qr, rr = carry
+            nd, changed = frontier_relax_round(d, adj_op, btt, backend,
+                                               rows, rm)
+            qactive = jnp.any(rm, axis=1).astype(jnp.int32)
+            return (nd, changed, it + 1, qr + qactive,
+                    rr + jnp.sum(rm.astype(jnp.int32)))
+
+        d_f, _, rounds, qrounds, rr = jax.lax.while_loop(
+            cond, body,
+            (dist_op, rowmask0, jnp.asarray(0, jnp.int32),
+             jnp.zeros((q,), jnp.int32), jnp.asarray(0, jnp.int32)))
+        return d_f, rounds, qrounds, rr
+
+    dist_f, rounds, qrounds, rows_relaxed = jax.lax.cond(
+        overflow, dense_branch, frontier_branch, None)
+    stats = FrontierStats(seed_rows, max_lane_rows, rows_relaxed, overflow)
+    return backend.decode_state(dist_f, now, w_max), rounds, qrounds, stats
 
 
 # ---------------------------------------------------------------------------
@@ -510,34 +737,13 @@ def shard_closure(
     q_l, n, _n_m, k = dist_blk.shape
     bound = max_rounds if max_rounds > 0 else n * k + 1
 
-    def one_round(d, a_u, a_v, mask):
-        return shard_relax_round(
-            d, a_u, a_v, qidx, src, lab, dst, start, active, mask,
-            backend=backend, model_axis=model_axis, model_size=model_size)
-
     def run(_):
         d_op = backend.encode(dist_blk, now, w_max)
         au_op = backend.encode(adj_u, now, w_max)
         av_op = backend.encode(adj_v, now, w_max)
-        d0, ch0 = one_round(d_op, au_op, av_op, query_mask)
-        m0 = jnp.logical_and(query_mask, ch0)
-        qr0 = query_mask.astype(jnp.int32)
-        it0 = jnp.asarray(1, jnp.int32)
-
-        def cond(carry):
-            return carry[4]
-
-        def body(carry):
-            d, mask, it, qr, _keep = carry
-            nd, ch = one_round(d, au_op, av_op, mask)
-            nmask = jnp.logical_and(mask, ch)
-            it = it + 1
-            keep = jnp.logical_and(jnp.any(nmask), it < bound)
-            return nd, nmask, it, qr + mask.astype(jnp.int32), keep
-
-        keep0 = jnp.logical_and(jnp.any(m0), it0 < bound)
-        d_f, _, it_f, qr_f, _ = jax.lax.while_loop(
-            cond, body, (d0, m0, it0, qr0, keep0))
+        d_f, it_f, qr_f = _shard_dense_loop(
+            d_op, au_op, av_op, rows, query_mask, backend,
+            model_axis, model_size, bound)
         return backend.decode_state(d_f, now, w_max), it_f, qr_f
 
     def skip(_):
@@ -547,3 +753,200 @@ def shard_closure(
     # uniform across the model peers of this lane shard (query_mask is
     # replicated along model), so collectives inside `run` stay safe
     return jax.lax.cond(jnp.any(query_mask), run, skip, None)
+
+
+def _shard_dense_loop(
+    d_op: jnp.ndarray,
+    au_op: jnp.ndarray,
+    av_op: jnp.ndarray,
+    rows: Tuple[jnp.ndarray, ...],
+    query_mask: jnp.ndarray,
+    backend: ContractionBackend,
+    model_axis: Optional[str],
+    model_size: int,
+    bound: int,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """The shard-local masked fixpoint loop on encoded operands (shared by
+    :func:`shard_closure` and the frontier path's overflow fallback)."""
+    qidx, src, lab, dst, start, active = rows
+
+    def one_round(d, mask):
+        return shard_relax_round(
+            d, au_op, av_op, qidx, src, lab, dst, start, active, mask,
+            backend=backend, model_axis=model_axis, model_size=model_size)
+
+    d0, ch0 = one_round(d_op, query_mask)
+    m0 = jnp.logical_and(query_mask, ch0)
+    qr0 = query_mask.astype(jnp.int32)
+    it0 = jnp.asarray(1, jnp.int32)
+
+    def cond(carry):
+        return carry[4]
+
+    def body(carry):
+        d, mask, it, qr, _keep = carry
+        nd, ch = one_round(d, mask)
+        nmask = jnp.logical_and(mask, ch)
+        it = it + 1
+        keep = jnp.logical_and(jnp.any(nmask), it < bound)
+        return nd, nmask, it, qr + mask.astype(jnp.int32), keep
+
+    keep0 = jnp.logical_and(jnp.any(m0), it0 < bound)
+    d_f, _, it_f, qr_f, _ = jax.lax.while_loop(
+        cond, body, (d0, m0, it0, qr0, keep0))
+    return d_f, it_f, qr_f
+
+
+def _shard_frontier_round(
+    d_op: jnp.ndarray,         # (Q_l, N, N_m, K) encoded lane block
+    au_op: jnp.ndarray,        # (L, N_m, N) encoded adjacency, u rows local
+    av_op: jnp.ndarray,        # (L, N, N_m) encoded adjacency, v cols local
+    rows: Tuple[jnp.ndarray, ...],
+    frows: jnp.ndarray,        # (Q_l, F) frontier row indices (replicated
+                               # across the model peers of this lane shard)
+    rowmask: jnp.ndarray,      # (Q_l, F) valid-slot mask (replicated)
+    backend: ContractionBackend,
+    model_axis: Optional[str],
+    model_size: int,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One frontier-restricted round on one lane shard: the shard-local
+    form of :func:`frontier_relax_round` — the (Q_l, F, N_m, K) slab
+    contracts over the LOCAL u block, partials max-combine across the
+    model axis (exact), and ``changed`` is synchronized across model peers
+    so the frontier mask stays uniform (the condition that keeps the
+    collectives inside the closure loop safe)."""
+    qidx, src, lab, dst, start, active = rows
+    q_l, n, n_m, k = d_op.shape
+    f = frows.shape[1]
+    zero = jnp.asarray(backend.zero, d_op.dtype)
+    lane = jnp.arange(q_l)[:, None]
+    slab = d_op[lane, frows]                           # (Q_l, F, N_m, K)
+    slab_s = slab[qidx, :, :, src]                     # (J, F, N_m) [f, u_l]
+    a_u = au_op[lab]                                   # (J, N_m, N)
+    part = backend.contract_rows(slab_s, a_u)          # (J, F, N) partial
+    if model_axis is not None and model_size > 1:
+        part = jax.lax.pmax(part, model_axis)
+        vstart = jax.lax.axis_index(model_axis) * n_m
+        contrib = jax.lax.dynamic_slice(
+            part, (0, 0, vstart), (part.shape[0], f, n_m))
+    else:
+        contrib = part
+    # base term at the frontier rows (the x axis of a_v is the FULL N)
+    a_v = av_op[lab]                                   # (J, N, N_m)
+    rows_j = frows[qidx]                               # (J, F)
+    a_base = jnp.take_along_axis(a_v, rows_j[:, :, None], axis=1)
+    base_rows = jnp.logical_and(start, active)
+    contrib = jnp.where(base_rows[:, None, None],
+                        jnp.maximum(contrib, a_base), contrib)
+    act = jnp.logical_and(active[:, None], rowmask[qidx])
+    contrib = jnp.where(act[:, :, None], contrib, zero)
+    seg = qidx * k + dst
+    scat = jax.ops.segment_max(contrib, seg, num_segments=q_l * k)
+    upd = jnp.transpose(scat.reshape(q_l, k, f, n_m), (0, 2, 3, 1))
+    new_slab = jnp.maximum(slab, upd)
+    changed = jnp.logical_and(
+        jnp.any(new_slab > slab, axis=(2, 3)), rowmask)
+    if model_axis is not None and model_size > 1:
+        changed = jax.lax.pmax(changed.astype(jnp.int32), model_axis) > 0
+    return d_op.at[lane, frows].max(new_slab), changed
+
+
+def shard_frontier_closure(
+    dist_blk: jnp.ndarray,
+    adj_u: jnp.ndarray,
+    adj_v: jnp.ndarray,
+    rows: Tuple[jnp.ndarray, ...],
+    query_mask: jnp.ndarray,
+    src: jnp.ndarray,            # (B,) int32 batch source slots (replicated)
+    smask: jnp.ndarray,          # (B,) bool batch padding mask
+    f_cap: int,
+    backend: BackendLike = "jnp",
+    model_axis: Optional[str] = None,
+    model_size: int = 1,
+    max_rounds: int = 0,
+    now: Optional[jnp.ndarray] = None,
+    w_max: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, ...]:
+    """Shard-local frontier closure: the ingest form of
+    :func:`shard_closure` with the frontier gather composed into the
+    per-shard skip — a shard SKIPS the closure entirely when its lanes are
+    all converged/inert OR the batch dirtied none of its rows (the dirty
+    reduction runs over the shard's local u block, max-combined across the
+    model peers, so the decision is uniform and collective-free beyond one
+    pmax). An overflowing shard falls back to ITS OWN dense loop
+    (lax.cond): other shards keep their frontier rounds.
+
+    Returns ``(dist_blk, rounds, query_rounds, rows_relaxed, fell_back,
+    seed_rows, max_lane_rows)`` — the last four are this shard's
+    :class:`FrontierStats` terms, aggregated host-side by the executor."""
+    backend = resolve_backend(backend)
+    q_l, n, n_m, k = dist_blk.shape
+    bound = max_rounds if max_rounds > 0 else n * k + 1
+    # dirty rows on the RAW timestamp block (conservative for clock-
+    # anchored representations, exact for the float backends)
+    if model_axis is not None and model_size > 1:
+        u_start = jax.lax.axis_index(model_axis) * n_m
+    else:
+        u_start = 0
+    lidx = src - u_start
+    lidx = jnp.where(
+        jnp.logical_and(smask,
+                        jnp.logical_and(lidx >= 0, lidx < n_m)), lidx, n_m)
+    src_local = jnp.zeros((n_m,), bool).at[lidx].set(True, mode="drop")
+    reach = jnp.any(
+        jnp.logical_and(dist_blk > NEG_INF,
+                        src_local[None, None, :, None]), axis=(2, 3))
+    if model_axis is not None and model_size > 1:
+        reach = jax.lax.pmax(reach.astype(jnp.int32), model_axis) > 0
+    gidx = jnp.where(smask, src, n)
+    src_global = jnp.zeros((n,), bool).at[gidx].set(True, mode="drop")
+    dirty = jnp.logical_and(jnp.logical_or(reach, src_global[None, :]),
+                            query_mask[:, None])
+    frows, rowmask0, cnt = pack_frontier(dirty, f_cap)
+    seed_rows = jnp.sum(cnt)
+    max_lane_rows = jnp.max(cnt)
+    overflow = jnp.any(cnt > f_cap)
+
+    def run(_):
+        d_op = backend.encode(dist_blk, now, w_max)
+        au_op = backend.encode(adj_u, now, w_max)
+        av_op = backend.encode(adj_v, now, w_max)
+
+        def dense(_):
+            d_f, it, qr = _shard_dense_loop(
+                d_op, au_op, av_op, rows, query_mask, backend,
+                model_axis, model_size, bound)
+            live_rows = jnp.sum(query_mask.astype(jnp.int32)) * n
+            return d_f, it, qr, it * live_rows
+
+        def frontier(_):
+            def cond(carry):
+                _d, rm, it, _qr, _rr = carry
+                return jnp.logical_and(jnp.any(rm), it < bound)
+
+            def body(carry):
+                d, rm, it, qr, rr = carry
+                nd, changed = _shard_frontier_round(
+                    d, au_op, av_op, rows, frows, rm, backend,
+                    model_axis, model_size)
+                qactive = jnp.any(rm, axis=1).astype(jnp.int32)
+                return (nd, changed, it + 1, qr + qactive,
+                        rr + jnp.sum(rm.astype(jnp.int32)))
+
+            d_f, _, it, qr, rr = jax.lax.while_loop(
+                cond, body,
+                (d_op, rowmask0, jnp.asarray(0, jnp.int32),
+                 jnp.zeros((q_l,), jnp.int32), jnp.asarray(0, jnp.int32)))
+            return d_f, it, qr, rr
+
+        d_f, it, qr, rr = jax.lax.cond(overflow, dense, frontier, None)
+        return backend.decode_state(d_f, now, w_max), it, qr, rr
+
+    def skip(_):
+        return (dist_blk, jnp.asarray(0, jnp.int32),
+                jnp.zeros((q_l,), jnp.int32), jnp.asarray(0, jnp.int32))
+
+    # any dirty row anywhere on this shard? (uniform across model peers:
+    # `dirty` folds the pmax'd reach and the replicated masks)
+    d, it, qr, rr = jax.lax.cond(jnp.any(cnt > 0), run, skip, None)
+    return d, it, qr, rr, overflow, seed_rows, max_lane_rows

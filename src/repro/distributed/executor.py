@@ -57,12 +57,20 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from ..core.executor import BatchedEngineArrays, Executor, QueryTables
+from ..core.executor import (
+    BatchedEngineArrays,
+    Executor,
+    QueryTables,
+    apply_batch,
+    emit_new,
+)
 from ..core.semiring import (
     NEG_INF,
     BatchedTransitionTable,
+    FrontierStats,
     batched_valid_pairs,
     shard_closure,
+    shard_frontier_closure,
     shard_relax_round,
     shard_transitions,
 )
@@ -112,6 +120,40 @@ def make_sharded_closure(mesh: Mesh, backend,
     )
 
 
+def make_sharded_frontier_closure(mesh: Mesh, backend, f_cap: int,
+                                  q_axes=("data",), model_axis: str = "model"):
+    """shard_map-wrapped frontier closure (the ingest form): (dist, adj_u,
+    adj_v, rows, mask0, src, smask, now, w_max) -> (dist', shard_rounds,
+    query_rounds, rows_relaxed, fell_back, seed_rows, max_lane_rows) with
+    the per-shard stats shaped (n_shards,). Each shard seeds its own
+    frontier from the (replicated) batch source slots, skips the closure
+    entirely when nothing on it is dirty, and falls back to ITS OWN dense
+    loop on overflow — other shards keep the frontier rounds."""
+    qa = q_axes[0] if len(q_axes) == 1 else tuple(q_axes)
+    n_model = mesh.shape[model_axis]
+    dist_spec = P(qa, None, model_axis, None)
+
+    def body(dist_blk, adj_u, adj_v, *rest):
+        rows = tuple(r[0] for r in rest[:6])
+        mask0, src, smask, now, w_max = rest[6:11]
+        d_f, rounds, qrounds, rr, fb, seed, mx = shard_frontier_closure(
+            dist_blk, adj_u, adj_v, rows, mask0, src, smask, f_cap,
+            backend=backend,
+            model_axis=model_axis if n_model > 1 else None,
+            model_size=n_model, now=now, w_max=w_max,
+        )
+        return (d_f, rounds.reshape(1), qrounds, rr.reshape(1),
+                fb.reshape(1), seed.reshape(1), mx.reshape(1))
+
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(dist_spec, P(None, model_axis, None), P(None, None, model_axis),
+                  *_row_specs(qa), P(qa), P(None), P(None), P(), P()),
+        out_specs=(dist_spec, P(qa), P(qa), P(qa), P(qa), P(qa), P(qa)),
+        check_rep=False,
+    )
+
+
 def make_sharded_round(mesh: Mesh, backend,
                        q_axes=("data",), model_axis: str = "model"):
     """One convergence-masked relaxation round (no fixpoint loop) with the
@@ -150,6 +192,80 @@ def make_sharded_round(mesh: Mesh, backend,
         out_specs=dist_spec,
         check_rep=False,
     )
+
+
+def make_sharded_frontier_round(mesh: Mesh, backend,
+                                q_axes=("data",), model_axis: str = "model"):
+    """One frontier-restricted relaxation round (no fixpoint loop) with the
+    same sharding/skip structure as :func:`make_sharded_round` — the unit
+    launch/dryrun_rpq.py lowers so the roofline prices the frontier
+    dispatch at O(J·F·N²) instead of the dense O(J·N³). The (Q, F) frontier
+    row indices and slot mask ride as runtime, lane-sharded inputs; a shard
+    whose rowmask is empty skips encode/contract/decode entirely."""
+    from ..core.backend import resolve_backend
+    from ..core.semiring import _shard_frontier_round
+
+    backend = resolve_backend(backend)
+    qa = q_axes[0] if len(q_axes) == 1 else tuple(q_axes)
+    n_model = mesh.shape[model_axis]
+    dist_spec = P(qa, None, model_axis, None)
+
+    def body(dist_blk, adj_u, adj_v, *rest):
+        rows = tuple(r[0] for r in rest[:6])
+        frows, rowmask, now, w_max = rest[6:10]
+
+        def run(_):
+            d_op = backend.encode(dist_blk, now, w_max)
+            nd, _changed = _shard_frontier_round(
+                d_op, backend.encode(adj_u, now, w_max),
+                backend.encode(adj_v, now, w_max),
+                rows, frows, rowmask, backend,
+                model_axis if n_model > 1 else None, n_model)
+            return backend.decode_state(nd, now, w_max)
+
+        return jax.lax.cond(jnp.any(rowmask), run, lambda _: dist_blk, None)
+
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(dist_spec, P(None, model_axis, None), P(None, None, model_axis),
+                  *_row_specs(qa), P(qa, None), P(qa, None), P(), P()),
+        out_specs=dist_spec,
+        check_rep=False,
+    )
+
+
+def frontier_round_lowering(mesh: Mesh, btt: BatchedTransitionTable,
+                            q_cap: int, n_slots: int, f_cap: int,
+                            q_axes=("data",), backend="jnp"):
+    """Dryrun lowering of the frontier round: like
+    :func:`batched_round_lowering` but the contraction is restricted to a
+    (q_cap, f_cap) frontier — ``round_fn(dist, adj, frows, rowmask, now,
+    w_max)``. Returns ``(round_fn, arg_specs, arg_shardings,
+    out_sharding)``."""
+    n_shards = int(np.prod([mesh.shape[a] for a in q_axes]))
+    if q_cap % n_shards:
+        raise ValueError(f"q_cap {q_cap} not divisible by {n_shards} lane shards")
+    rows = shard_transitions(btt, q_cap, n_shards)
+    sharded_round = make_sharded_frontier_round(mesh, backend, q_axes=q_axes)
+    qa = q_axes[0] if len(q_axes) == 1 else tuple(q_axes)
+    dist_sh = NamedSharding(mesh, P(qa, None, "model", None))
+    adj_sh = NamedSharding(mesh, P(None, None, "model"))
+    frow_sh = NamedSharding(mesh, P(qa, None))
+    scalar_sh = NamedSharding(mesh, P())
+    dist_spec = jax.ShapeDtypeStruct((q_cap, n_slots, n_slots, btt.k), jnp.float32)
+    adj_spec = jax.ShapeDtypeStruct((btt.n_labels, n_slots, n_slots), jnp.float32)
+    frows_spec = jax.ShapeDtypeStruct((q_cap, f_cap), jnp.int32)
+    rmask_spec = jax.ShapeDtypeStruct((q_cap, f_cap), jnp.bool_)
+    scalar_spec = jax.ShapeDtypeStruct((), jnp.float32)
+
+    def round_fn(dist, adj, frows, rowmask, now, w_max):
+        return sharded_round(dist, adj, adj, *rows, frows, rowmask, now, w_max)
+
+    return (round_fn,
+            (dist_spec, adj_spec, frows_spec, rmask_spec, scalar_spec,
+             scalar_spec),
+            (dist_sh, adj_sh, frow_sh, frow_sh, scalar_sh, scalar_sh),
+            dist_sh)
 
 
 def batched_round_lowering(mesh: Mesh, btt: BatchedTransitionTable,
@@ -208,17 +324,11 @@ def _mesh_step_fns(mesh: Mesh, q_axes: Tuple[str, ...], backend):
 
     def ingest_impl(arrays, src, dst, lab, ts, mask, ts_floor,
                     rows, finals_mask, windows, live_mask, w_max):
-        eff_ts = jnp.where(mask, ts, NEG_INF)
-        adj = arrays.adj.at[lab, src, dst].max(eff_ts, mode="drop")
-        now = jnp.maximum(arrays.now, jnp.maximum(jnp.max(eff_ts), ts_floor))
+        adj, now = apply_batch(arrays, src, dst, lab, ts, mask, ts_floor)
         dist, shard_rounds, qrounds = closure(
             arrays.dist, adj, adj, *rows, live_mask, now, w_max)
-        low = now - windows
-        valid = batched_valid_pairs(dist, finals_mask, low)
-        new = jnp.logical_and(valid, jnp.logical_not(arrays.emitted))
-        emitted = jnp.logical_or(arrays.emitted, valid)
-        return (BatchedEngineArrays(adj, dist, emitted, now), new,
-                shard_rounds, qrounds)
+        out, new = emit_new(arrays, dist, adj, now, finals_mask, windows)
+        return out, new, shard_rounds, qrounds
 
     def delete_impl(arrays, src, dst, lab, mask, ts_now,
                     rows, finals_mask, windows, live_mask, w_max):
@@ -253,6 +363,36 @@ def _mesh_step_fns(mesh: Mesh, q_axes: Tuple[str, ...], backend):
     )
 
 
+@functools.lru_cache(maxsize=None)
+def _mesh_frontier_ingest(mesh: Mesh, q_axes: Tuple[str, ...], backend,
+                          f_cap: int):
+    """Jitted frontier ingest for the mesh executor, cached per (mesh, lane
+    axes, backend, frontier capacity) — capacity grows ×2 like Q/K
+    bucketing, so each step of the auto-growth compiles once and the
+    previous steps' entries stay warm for other groups."""
+    fns = _mesh_step_fns(mesh, q_axes, backend)
+    sh = fns["shardings"]
+    qa = q_axes[0] if len(q_axes) == 1 else tuple(q_axes)
+    closure = make_sharded_frontier_closure(mesh, backend, f_cap,
+                                            q_axes=q_axes)
+    state_sh = BatchedEngineArrays(sh["adj"], sh["dist"], sh["emitted"],
+                                  sh["now"])
+    lane_sh = NamedSharding(mesh, P(qa))
+
+    def ingest_impl(arrays, src, dst, lab, ts, mask, ts_floor,
+                    rows, finals_mask, windows, live_mask, w_max):
+        adj, now = apply_batch(arrays, src, dst, lab, ts, mask, ts_floor)
+        dist, shard_rounds, qrounds, rr, fb, seed, mx = closure(
+            arrays.dist, adj, adj, *rows, live_mask, src, mask, now, w_max)
+        out, new = emit_new(arrays, dist, adj, now, finals_mask, windows)
+        return out, new, shard_rounds, qrounds, rr, fb, seed, mx
+
+    return jax.jit(
+        ingest_impl, donate_argnums=(0,),
+        out_shardings=(state_sh, sh["emitted"], lane_sh, lane_sh,
+                       lane_sh, lane_sh, lane_sh, lane_sh))
+
+
 class MeshExecutor(Executor):
     """Sharded executor: Q lanes over the mesh's data axis (optionally the
     vertex axis over model), convergence-aware per-shard dispatch.
@@ -266,8 +406,9 @@ class MeshExecutor(Executor):
     """
 
     def __init__(self, mesh: Optional[Mesh] = None, model_axis: int = 1,
-                 q_axes: Sequence[str] = ("data",), backend="jnp"):
-        super().__init__(backend)  # resolves to a ContractionBackend
+                 q_axes: Sequence[str] = ("data",), backend="jnp",
+                 frontier: str = "off", frontier_cap: int = 32):
+        super().__init__(backend, frontier=frontier, frontier_cap=frontier_cap)
         self.mesh = mesh if mesh is not None else host_mesh(model_axis)
         self.q_axes = tuple(q_axes)
         self.n_shards = int(np.prod([self.mesh.shape[a] for a in self.q_axes]))
@@ -308,6 +449,22 @@ class MeshExecutor(Executor):
                      tables: QueryTables):
         q_cap = self._arrays.dist.shape[0]
         rows = self._rows_for(tables.btt, q_cap)
+        if self.frontier != "off":
+            ingest = _mesh_frontier_ingest(
+                self.mesh, self.q_axes, self.backend, self.frontier_cap)
+            (self._arrays, new, shard_rounds, qrounds,
+             rr, fb, seed, mx) = ingest(
+                self._arrays,
+                jnp.asarray(src), jnp.asarray(dst), jnp.asarray(lab),
+                jnp.asarray(ts), jnp.asarray(mask),
+                jnp.asarray(ts_floor, jnp.float32),
+                rows, tables.finals_mask, tables.windows, tables.live_mask,
+                jnp.asarray(tables.max_window, jnp.float32),
+            )
+            self._account(shard_rounds, qrounds, tables.n_live,
+                          FrontierStats(seed, mx, rr, fb))
+            self.steps += 1
+            return new
         self._arrays, new, shard_rounds, qrounds = self._jit_ingest(
             self._arrays,
             jnp.asarray(src), jnp.asarray(dst), jnp.asarray(lab),

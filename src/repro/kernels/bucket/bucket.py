@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..maxmin.maxmin import pick_block_sizes
+
 
 def _bucket_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_levels: int, k_steps: int):
     @pl.when(pl.program_id(2) == 0)
@@ -47,19 +49,22 @@ def bucket_maxmin(
     b_lvl: jnp.ndarray,
     *,
     n_levels: int,
-    bm: int = 128,
-    bn: int = 128,
-    bk: int = 128,
+    bm: int = None,
+    bn: int = None,
+    bk: int = None,
     interpret: bool = False,
 ) -> jnp.ndarray:
     """Level-quantized bottleneck matmul on the MXU.
 
     a_lvl: (m, k) int32 in [0, T]; b_lvl: (k, n) int32. Returns (m, n) int32
-    = max_k min(a, b). Level 0 = unreachable (semiring zero).
+    = max_k min(a, b). Level 0 = unreachable (semiring zero). Block sizes
+    default to the shape-aware table (kernels/maxmin ``pick_block_sizes``).
     """
     m, k = a_lvl.shape
     k2, n = b_lvl.shape
     assert k == k2
+    abm, abn, abk = pick_block_sizes(m, k, n)
+    bm, bn, bk = bm or abm, bn or abn, bk or abk
     mp, np_, kp = (-m) % bm, (-n) % bn, (-k) % bk
     if mp or kp:
         a_lvl = jnp.pad(a_lvl, ((0, mp), (0, kp)), constant_values=0)
@@ -120,21 +125,25 @@ def bucket_maxmin_fused(
     b_lvl: jnp.ndarray,
     *,
     n_levels: int,
-    bm: int = 128,
-    bn: int = 128,
-    bk: int = 128,
+    bm: int = None,
+    bn: int = None,
+    bk: int = None,
     interpret: bool = False,
 ) -> jnp.ndarray:
     """Fused batched level-quantized bottleneck matmul on the MXU.
 
     a_lvl: (J, m, k) int32 in [0, T]; b_lvl: (J, k, n). Returns (J, m, n)
     int32 with out[j] = max_k min(a[j], b[j]) computed exactly on levels
-    (level 0 = unreachable). One launch for all J rows. In ``interpret``
-    mode blocks clamp to the 8-aligned problem (CPU validation path).
+    (level 0 = unreachable). One launch for all J rows; blocks default to
+    the shape-aware table (the frontier's skinny slabs get small bm). In
+    ``interpret`` mode blocks clamp to the 8-aligned problem (CPU
+    validation path).
     """
     j, m, k = a_lvl.shape
     j2, k2, n = b_lvl.shape
     assert j == j2 and k == k2, (a_lvl.shape, b_lvl.shape)
+    abm, abn, abk = pick_block_sizes(m, k, n)
+    bm, bn, bk = bm or abm, bn or abn, bk or abk
     if interpret:
         bm = min(bm, m + (-m) % 8)
         bn = min(bn, n + (-n) % 8)

@@ -23,6 +23,41 @@ from jax.experimental import pallas as pl
 
 NEG_INF = float("-inf")
 
+# Shape-aware block-size table (PR 5 satellite): rows keyed by the M extent
+# of the contraction. The dense round's operands are square-ish (M = N), but
+# the frontier-restricted round feeds SKINNY (F, N) slabs — a fixed 128-row
+# block would pad a F=16 slab 8x and waste 7/8 of every VPU tile. Small-M
+# rows trade bm down and bn up (the broadcast intermediate bm*bk*bn*4B stays
+# ≲ 8 MiB of VMEM either way); bn keeps the 128-lane alignment.
+_BLOCK_TABLE = (
+    # (max M, (bm, bn, bk))
+    (8,    (8, 256, 128)),
+    (16,   (16, 256, 128)),
+    (32,   (32, 256, 128)),
+    (64,   (64, 128, 128)),
+    (None, (128, 128, 64)),
+)
+
+
+def pick_block_sizes(m: int, k: int, n: int):
+    """Derive (bm, bn, bk) from the operand shapes (table-driven).
+
+    Blocks clamp to the 8-aligned (m, k) and 128-aligned (n) problem so a
+    tiny engine never pays full-tile padding; results are bit-identical for
+    ANY block choice (padding is the semiring zero), so this is purely a
+    memory-schedule decision — regression-tested against the jnp oracle on
+    odd/small shapes in tests/test_kernels.py."""
+    def r8(x):
+        return max(x + (-x) % 8, 8)
+
+    def r128(x):
+        return max(x + (-x) % 128, 128)
+
+    for cap, (bm, bn, bk) in _BLOCK_TABLE:
+        if cap is None or m <= cap:
+            return (min(bm, r8(m)), min(bn, r128(n)), min(bk, r8(k)))
+    raise AssertionError("unreachable: table ends with a None row")
+
 
 def _maxmin_kernel(a_ref, b_ref, o_ref, *, bk: int):
     """Grid = (m/bm, n/bn, k/bk); k is the innermost (minor) grid dim so the
@@ -44,21 +79,25 @@ def maxmin_matmul(
     a: jnp.ndarray,
     b: jnp.ndarray,
     *,
-    bm: int = 128,
-    bn: int = 128,
-    bk: int = 64,
+    bm: int = None,
+    bn: int = None,
+    bk: int = None,
     interpret: bool = False,
 ) -> jnp.ndarray:
     """(max, min) matmul via pallas_call. a: (m, k), b: (k, n) -> (m, n).
 
     Inputs are padded (with -inf, the semiring zero) to block multiples.
-    ``interpret=True`` runs the kernel body in Python on CPU (validation
-    path on this host; TPU is the deployment target).
+    Block sizes default to the shape-aware table (:func:`pick_block_sizes`);
+    pass explicit ints to pin them. ``interpret=True`` runs the kernel body
+    in Python on CPU (validation path on this host; TPU is the deployment
+    target).
     """
     m, k = a.shape
     k2, n = b.shape
     assert k == k2, (a.shape, b.shape)
     dtype = a.dtype
+    abm, abn, abk = pick_block_sizes(m, k, n)
+    bm, bn, bk = bm or abm, bn or abn, bk or abk
     mp, np_, kp = (-m) % bm, (-n) % bn, (-k) % bk
     if mp or kp:
         a = jnp.pad(a, ((0, mp), (0, kp)), constant_values=NEG_INF)
@@ -113,9 +152,9 @@ def maxmin_matmul_fused(
     a: jnp.ndarray,
     b: jnp.ndarray,
     *,
-    bm: int = 128,
-    bn: int = 128,
-    bk: int = 64,
+    bm: int = None,
+    bn: int = None,
+    bk: int = None,
     interpret: bool = False,
 ) -> jnp.ndarray:
     """Fused batched (max, min) matmul: ONE pallas launch for all J rows.
@@ -127,14 +166,19 @@ def maxmin_matmul_fused(
     output tile revisit instead of once per vmap instance, and the VPU sees
     an uninterrupted (J * m/bm * n/bn * k/bk)-step schedule.
 
-    Inputs are padded with -inf (the semiring zero) to block multiples. In
-    ``interpret`` mode (CPU validation) blocks clamp to the 8-aligned
-    problem so small engines don't pay 128x128 padding per row.
+    Block sizes default to the shape-aware table (:func:`pick_block_sizes`)
+    — the frontier round's skinny (F, N) slabs get a small bm and a wide bn
+    instead of 8x row padding. Inputs are padded with -inf (the semiring
+    zero) to block multiples. In ``interpret`` mode (CPU validation) blocks
+    clamp to the 8-aligned problem so small engines don't pay 128x128
+    padding per row.
     """
     j, m, k = a.shape
     j2, k2, n = b.shape
     assert j == j2 and k == k2, (a.shape, b.shape)
     dtype = a.dtype
+    abm, abn, abk = pick_block_sizes(m, k, n)
+    bm, bn, bk = bm or abm, bn or abn, bk or abk
     if interpret:
         bm = min(bm, m + (-m) % 8)
         bn = min(bn, n + (-n) % 8)

@@ -43,6 +43,10 @@ RPQ_CELLS = [
 N_LEVELS = 8  # |W|/beta buckets for the MXU mode (paper: 1-month/1-day ~ 30;
               # 8 keeps the napkin conservative)
 
+F_CAP = 256   # frontier capacity the "batched-frontier" cell lowers: the
+              # dirty-row slab is (Q, F, N, K) with F << N, so the round's
+              # contraction prices O(J·F·N²) instead of O(J·N³)
+
 # multi-query serving cell (mode="batched"): the Table-2 workload stacked
 # into ONE (Q, N, N, K) relaxation — the BatchedDenseRPQEngine's round on
 # the production mesh
@@ -198,12 +202,14 @@ def run_rpq_cell(name: str, n_slots: int, query: str, v_chunk: int,
         # BatchedDenseRPQEngine iterates. A "batched-<backend>" mode lowers
         # the SAME cell with that contraction backend (e.g. batched-pallas,
         # batched-mxu_bucket), so the roofline prices whichever substrate
-        # the engine is configured to run.
-        from ..distributed.executor import batched_round_lowering
+        # the engine is configured to run. "batched-frontier" lowers the
+        # FRONTIER-restricted round instead: the (Q, F) dirty-row indices
+        # ride as runtime inputs and the contraction touches an (F, N)
+        # slab per transition — O(F·N²), the PR 5 per-event cost model.
+        from ..distributed.executor import (batched_round_lowering,
+                                            frontier_round_lowering)
 
-        be_name = mode.split("-", 1)[1] if "-" in mode else "jnp"
-        backend = (BucketBackend(n_levels=N_LEVELS, use_pallas=False)
-                   if be_name == "mxu_bucket" else resolve_backend(be_name))
+        suffix = mode.split("-", 1)[1] if "-" in mode else "jnp"
         dfas = [compile_query(q) for q in BATCHED_QUERIES]
         labels = sorted(set().union(*[set(d.labels) for d in dfas]))
         btt = BatchedTransitionTable.from_dfas(dfas, labels)
@@ -213,8 +219,16 @@ def run_rpq_cell(name: str, n_slots: int, query: str, v_chunk: int,
         q_axes = ("pod", "data") if multi_pod else ("data",)
         n_lane_shards = int(np.prod([mesh.shape[a] for a in q_axes]))
         q_cap = len(dfas) + (-len(dfas)) % n_lane_shards
-        round_fn, arg_specs, arg_shardings, dist_sh = batched_round_lowering(
-            mesh, btt, q_cap, n_slots, q_axes=q_axes, backend=backend)
+        if suffix == "frontier":
+            round_fn, arg_specs, arg_shardings, dist_sh = \
+                frontier_round_lowering(mesh, btt, q_cap, n_slots,
+                                        min(F_CAP, n_slots), q_axes=q_axes)
+        else:
+            backend = (BucketBackend(n_levels=N_LEVELS, use_pallas=False)
+                       if suffix == "mxu_bucket" else resolve_backend(suffix))
+            round_fn, arg_specs, arg_shardings, dist_sh = \
+                batched_round_lowering(mesh, btt, q_cap, n_slots,
+                                       q_axes=q_axes, backend=backend)
         dist_spec, adj_spec = arg_specs[0], arg_specs[1]
     elif mode == "ring":
         dist_spec = jax.ShapeDtypeStruct((n_slots, n_slots, dfa.k), dtype)
@@ -290,7 +304,12 @@ def run_rpq_cell(name: str, n_slots: int, query: str, v_chunk: int,
         * ((mesh.shape["model"] - 1) if mode == "ring" else 1),
         "collectives_by_kind_extrap": by_kind,
         # semiring ops (max+min per MAC-equivalent) for the analytic term:
-        "semiring_ops": 2.0 * n_transitions * n_slots**3,
+        # the frontier round contracts an (F, N) slab per transition row —
+        # O(F·N²) — instead of the dense (N, N) row block's O(N³)
+        "semiring_ops": (2.0 * n_transitions * min(F_CAP, n_slots) * n_slots**2
+                         if mode.endswith("frontier")
+                         else 2.0 * n_transitions * n_slots**3),
+        "frontier_cap": min(F_CAP, n_slots) if mode.endswith("frontier") else 0,
         # every level-quantized lowering (single-query "mxu" AND the
         # batched bucket-backend cell) is priced by its EXECUTED boolean
         # dot count: BucketBackend allocates n_levels + 1 thresholds (the
@@ -310,7 +329,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--cell", default="")
     ap.add_argument("--mesh", default="both", choices=["pod", "multipod", "both"])
-    ap.add_argument("--modes", default="baseline,mxu,ring,batched")
+    ap.add_argument("--modes", default="baseline,mxu,ring,batched,batched-frontier")
     ap.add_argument("--force", action="store_true")
     args = ap.parse_args()
     meshes = {"pod": [False], "multipod": [True], "both": [False, True]}[args.mesh]

@@ -97,7 +97,7 @@ from typing import Dict, List, Optional, Set, Tuple, Union
 from ..core.automaton import compile_query
 from ..core.backend import resolve_backend
 from ..core.engine import BatchedDenseRPQEngine, PendingResults, RegisteredQuery
-from ..core.executor import Executor, LocalExecutor
+from ..core.executor import FRONTIER_MODES, Executor, LocalExecutor
 from ..core.reference import RAPQ, RSPQ
 
 
@@ -115,15 +115,21 @@ class IngestReport(Dict[str, Set[Tuple]]):
     """New result pairs per query (a plain dict, so existing callers keep
     working), with the deletion-invalidated pairs alongside in
     :attr:`invalidated` (name -> set of (x, y) pairs a negative tuple
-    removed from the valid answer set) and the queries switched to the
-    exact reference RSPQ path in :attr:`fallbacks` (name -> reason)."""
+    removed from the valid answer set), the queries switched to the
+    exact reference RSPQ path in :attr:`fallbacks` (name -> reason), and —
+    when the dense group runs frontier-restricted ingest — the call's
+    frontier telemetry in :attr:`frontier_stats` (rows relaxed vs the
+    dense-loop row equivalent, overflow-fallback count, current capacity;
+    empty dict with ``frontier="off"``)."""
 
     def __init__(self, new: Dict[str, Set[Tuple]],
                  invalidated: Dict[str, Set[Tuple]],
-                 fallbacks: Optional[Dict[str, str]] = None):
+                 fallbacks: Optional[Dict[str, str]] = None,
+                 frontier_stats: Optional[Dict[str, object]] = None):
         super().__init__(new)
         self.invalidated: Dict[str, Set[Tuple]] = invalidated
         self.fallbacks: Dict[str, str] = dict(fallbacks or {})
+        self.frontier_stats: Dict[str, object] = dict(frontier_stats or {})
 
 
 class RSPQFallback:
@@ -206,10 +212,29 @@ class PersistentQueryService:
                  async_depth: int = 1,
                  rspq_fallback: bool = True,
                  adaptive_batch: bool = False,
-                 max_batch: int = 32):
+                 max_batch: int = 32,
+                 frontier: str = "off",
+                 frontier_cap: int = 32):
         self.window = float(window)
         self.slide = float(slide)
         self._executor_spec = executor
+        # frontier-restricted ingest (PR 5): "off" = dense dispatch only,
+        # "on" = frontier at a fixed capacity, "auto" = frontier whose
+        # capacity grows ×2 on observed overflow fallbacks. Results are
+        # bit-identical in every mode (overflow falls back to the dense
+        # loop IN-DISPATCH); the knob only moves per-event cost between
+        # O(J·N³) and O(J·F·N²). Per-interval telemetry lands in
+        # :attr:`frontier_log` and each ingest's delta in
+        # ``IngestReport.frontier_stats``.
+        if frontier not in FRONTIER_MODES:
+            raise ValueError(
+                f"unknown frontier mode {frontier!r} "
+                f"({' | '.join(FRONTIER_MODES)})")
+        self._frontier = frontier
+        self._frontier_cap = int(frontier_cap)
+        #: (tuples_seen_so_far, per-interval frontier stats delta) history
+        self.frontier_log: List[Tuple[int, Dict[str, object]]] = []
+        self._frontier_mark: Optional[Dict[str, object]] = None
         self._async_decode = bool(async_decode)
         # bounded deferred-decode FIFO: up to `async_depth` dispatches may
         # be in flight before the oldest emit frontier is pulled off the
@@ -245,11 +270,40 @@ class PersistentQueryService:
         if self._executor_spec == "mesh":
             from ..distributed.executor import MeshExecutor
 
-            return MeshExecutor(backend=backend)
+            return MeshExecutor(backend=backend, frontier=self._frontier,
+                                frontier_cap=self._frontier_cap)
         if self._executor_spec == "local":
-            return LocalExecutor(backend)
+            return LocalExecutor(backend, frontier=self._frontier,
+                                 frontier_cap=self._frontier_cap)
         raise ValueError(
             f"unknown executor {self._executor_spec!r} (local | mesh | instance)")
+
+    @staticmethod
+    def _stats_delta(cur: Dict[str, object],
+                     prev: Dict[str, object]) -> Dict[str, object]:
+        """Difference two frontier-stat snapshots: counters subtract,
+        level values (mode, cap, max_lane_rows) pass through, occupancy is
+        recomputed over the interval's own rows."""
+        level_keys = ("mode", "cap", "max_lane_rows")
+        delta = {
+            k: (cur[k] - prev.get(k, 0)
+                if isinstance(cur[k], int) and k not in level_keys
+                else cur[k])
+            for k in cur
+        }
+        dr = delta.get("dense_row_equiv", 0)
+        delta["occupancy"] = (delta.get("rows_relaxed", 0) / dr) if dr else 0.0
+        return delta
+
+    def _frontier_delta(self) -> Dict[str, object]:
+        """Frontier-stat delta since the last mark (per-interval telemetry;
+        empty when the frontier is off or no dense group exists)."""
+        if self._group is None or self._frontier == "off":
+            return {}
+        cur = self._group.executor.frontier_stats
+        delta = self._stats_delta(cur, self._frontier_mark or {})
+        self._frontier_mark = cur
+        return delta
 
     @property
     def queries(self) -> Dict[str, object]:
@@ -414,6 +468,15 @@ class PersistentQueryService:
         new_results: Dict[str, Set[Tuple]] = {name: set() for name in self.stats}
         invalidated: Dict[str, Set[Tuple]] = {name: set() for name in self.stats}
         fallbacks: Dict[str, str] = {}
+        # reading frontier_stats flushes the executor's queued counters —
+        # but the PREVIOUS call's end-of-ingest read already drained them,
+        # so this start-of-call snapshot is amortized-free (it only pays
+        # when the engine was driven directly between service calls); the
+        # per-call cost is bounded by flushing this call's own dispatches,
+        # which reporting per-call stats requires anyway
+        call_mark: Dict[str, object] = (
+            dict(self._group.executor.frontier_stats)
+            if self._group is not None and self._frontier != "off" else {})
         pending: List[PendingResults] = []  # bounded FIFO (async_depth)
         dense_buf: List = []               # adaptive micro-batch buffer
 
@@ -449,9 +512,21 @@ class PersistentQueryService:
             dense_buf.clear()
             self._maybe_fallback(fallbacks, lambda: resolve_pending(0))
 
-        def adapt_batch() -> None:
+        def mark_interval() -> Dict[str, object]:
+            """Per-interval frontier telemetry: append the delta since the
+            last slide boundary to :attr:`frontier_log` and hand it to the
+            batch steering below."""
+            delta = self._frontier_delta()
+            if delta:
+                seen = max((self.stats[s.name].tuples
+                            for _qi, s in self._group.live_items()),
+                           default=0)
+                self.frontier_log.append((seen, delta))
+            return delta
+
+        def adapt_batch(finterval: Dict[str, object]) -> None:
             """Steer the dense micro-batch size from the interval's no-op
-            relaxation tail (see docstring)."""
+            relaxation tail AND the frontier telemetry (see docstring)."""
             if not self._adaptive_batch or self._group is None:
                 return
             ex = self._group.executor
@@ -462,7 +537,20 @@ class PersistentQueryService:
                 if duqr > 0:
                     noop_frac = 1.0 - dqr / duqr
                     b = self._group.batch_size
-                    if noop_frac >= 0.3 and b < self._max_batch:
+                    # the no-op tail argues for a bigger B (dispatch
+                    # overhead dominates useful work) — but when the
+                    # frontier is live and healthy (tiny row occupancy, no
+                    # overflow pressure) each dispatch is ALREADY cheap in
+                    # proportion to its dirty rows, so growing B would
+                    # trade exactness (batch-boundary skew) for little:
+                    # hold B instead
+                    frontier_healthy = bool(
+                        finterval
+                        and finterval.get("dispatches", 0)
+                        and finterval.get("occupancy", 1.0) < 0.05
+                        and not finterval.get("fallbacks", 0))
+                    if noop_frac >= 0.3 and b < self._max_batch \
+                            and not frontier_healthy:
                         b *= 2
                     elif noop_frac < 0.1 and b > 1:
                         b //= 2
@@ -485,7 +573,7 @@ class PersistentQueryService:
                     eng.expire(sgt.ts)
                 while self._next_expiry <= sgt.ts:
                     self._next_expiry += self.slide
-                adapt_batch()
+                adapt_batch(mark_interval())
             # snapshot BEFORE the dense step: a fallback fired by this very
             # event must not re-feed the event to its new reference engine
             refs_this_event = list(self._ref_engines.items())
@@ -532,7 +620,11 @@ class PersistentQueryService:
             if st.latencies_us:
                 lat = sorted(st.latencies_us)
                 st.p99_us = lat[min(int(0.99 * len(lat)), len(lat) - 1)]
-        return IngestReport(new_results, invalidated, fallbacks)
+        fstats: Dict[str, object] = {}
+        if call_mark and self._group is not None:
+            fstats = self._stats_delta(
+                self._group.executor.frontier_stats, call_mark)
+        return IngestReport(new_results, invalidated, fallbacks, fstats)
 
     def results(self, name: str) -> Set[Tuple]:
         if name in self._dense_specs:

@@ -1,0 +1,385 @@
+"""Frontier-restricted relaxation conformance (PR 5 tentpole).
+
+The frontier dispatch must be BIT-identical to the dense dispatch — per
+event, on both executors, under all three contraction backends, through
+deletions, query churn, compaction + capacity growth mid-stream, and both
+path semantics. The dense round is the oracle: restricting a round to the
+dirty rows is exact because each source row's closure depends only on
+itself and the shared adjacency (see core/semiring.py), and overflow falls
+back to the dense loop in-dispatch.
+
+The mesh tests run on whatever devices this process has (the CI frontier
+leg re-runs this file under XLA_FLAGS=--xla_force_host_platform_device_count=8
+so real lane shards compose the frontier gather with the skip cond).
+"""
+import random
+
+import numpy as np
+import pytest
+
+from repro.core import compile_query
+from repro.core.backend import BucketBackend, PallasBackend
+from repro.core.engine import BatchedDenseRPQEngine, DenseRPQEngine, RegisteredQuery
+from repro.core.executor import LocalExecutor
+from repro.core.semiring import frontier_seed, pack_frontier
+from repro.distributed.executor import MeshExecutor
+from repro.streaming.generators import gmark_like, so_like, with_deletions
+from repro.streaming.service import PersistentQueryService
+from repro.streaming.stream import Stream
+
+import jax.numpy as jnp
+
+QUERIES = ["a*", "a . b*", "(a | b)*", "a . b* . c", "(a . b)+", "a . b . c"]
+LABELS = ["a", "b", "c"]
+
+
+def _random_events(rng, n_vertices, n_edges, t_max, deletions=True):
+    ts = sorted(rng.sample(range(1, t_max), k=min(n_edges, t_max - 1)))
+    live = {}
+    events = []
+    for t in ts:
+        u, v = rng.randrange(n_vertices), rng.randrange(n_vertices)
+        lab = rng.choice(LABELS)
+        if deletions and live and rng.random() < 0.15:
+            du, dv, dl = rng.choice(sorted(live))
+            del live[(du, dv, dl)]
+            events.append(("-", du, dv, dl, float(t)))
+        else:
+            live[(u, v, lab)] = t
+            events.append(("+", u, v, lab, float(t)))
+    return events
+
+
+def _specs(rng, n_queries, window):
+    specs = []
+    for qi in range(n_queries):
+        expr = rng.choice(QUERIES)
+        dfa = compile_query(expr)
+        semantics = "simple" if (dfa.has_containment_property
+                                 and rng.random() < 0.4) else "arbitrary"
+        specs.append(RegisteredQuery(f"q{qi}", dfa, window, semantics))
+    return specs
+
+
+def _drive(make_engine, events, slide, n_queries):
+    g = make_engine()
+    next_exp = slide
+    stream_out = []
+    for (op, u, v, lab, t) in events:
+        if t >= next_exp:
+            g.expire(t)
+            while next_exp <= t:
+                next_exp += slide
+        if op == "+":
+            fresh = g.insert(u, v, lab, t)
+            stream_out.append(("+",) + tuple(
+                frozenset(fresh[qi]) for qi in range(n_queries)))
+        else:
+            inv = g.delete(u, v, lab, t)
+            stream_out.append(("-",) + tuple(
+                frozenset(inv[qi]) for qi in range(n_queries)))
+    return g, stream_out
+
+
+def _assert_streams_equal(tag, dense, frontier):
+    assert len(dense) == len(frontier)
+    for i, (d, f) in enumerate(zip(dense, frontier)):
+        assert d == f, (tag, i, d, f)
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_frontier_matches_dense_local(seed):
+    """Inserts + deletions + expiry, mixed semantics: every event's fresh
+    results and invalidations identical with frontier on vs off."""
+    rng = random.Random(seed)
+    window = rng.choice([10.0, 25.0])
+    nq = 3
+    specs = _specs(rng, nq, window)
+    events = _random_events(rng, 14, 90, 70)
+
+    def dense():
+        return BatchedDenseRPQEngine(specs, n_slots=24, batch_size=1)
+
+    def frontier():
+        return BatchedDenseRPQEngine(specs, n_slots=24, batch_size=1,
+                                     frontier="auto", frontier_cap=4)
+
+    g_d, ev_d = _drive(dense, events, 5.0, nq)
+    g_f, ev_f = _drive(frontier, events, 5.0, nq)
+    _assert_streams_equal(f"seed={seed}", ev_d, ev_f)
+    # the device state itself must agree (same fixpoint, not just the
+    # thresholded emit view)
+    np.testing.assert_array_equal(
+        np.asarray(g_d.batched_arrays.dist), np.asarray(g_f.batched_arrays.dist))
+    st = g_f.executor.frontier_stats
+    assert st["dispatches"] > 0
+
+
+@pytest.mark.parametrize("backend_name", ["jnp", "pallas", "mxu_bucket"])
+def test_frontier_matches_dense_per_backend(backend_name):
+    """Frontier == dense under every contraction backend (the frontier
+    slab rides contract_rows in the backend's own representation; for the
+    bucket mode both sides coarsen identically)."""
+    rng = random.Random(9)
+    nq = 2
+    specs = _specs(rng, nq, 12.0)
+    events = _random_events(rng, 12, 60, 50, deletions=True)
+
+    def mk_backend():
+        if backend_name == "pallas":
+            return PallasBackend(interpret=True)
+        if backend_name == "mxu_bucket":
+            return BucketBackend(n_levels=6, use_pallas=False)
+        return "jnp"
+
+    def dense():
+        return BatchedDenseRPQEngine(specs, n_slots=20, batch_size=1,
+                                     backend=mk_backend())
+
+    def frontier():
+        return BatchedDenseRPQEngine(specs, n_slots=20, batch_size=1,
+                                     backend=mk_backend(),
+                                     frontier="on", frontier_cap=8)
+
+    _, ev_d = _drive(dense, events, 4.0, nq)
+    _, ev_f = _drive(frontier, events, 4.0, nq)
+    _assert_streams_equal(backend_name, ev_d, ev_f)
+
+
+@pytest.mark.parametrize("backend_name", ["jnp", "mxu_bucket"])
+def test_frontier_mesh_matches_dense_local(backend_name):
+    """MeshExecutor frontier == LocalExecutor dense, per event: the
+    per-shard frontier gather + skip + overflow fallback compose into the
+    same result stream the dense single-device path emits."""
+    rng = random.Random(4)
+    nq = 3
+    specs = _specs(rng, nq, 15.0)
+    events = _random_events(rng, 14, 80, 60)
+
+    def mk_backend():
+        if backend_name == "mxu_bucket":
+            return BucketBackend(n_levels=6, use_pallas=False)
+        return "jnp"
+
+    def dense_local():
+        return BatchedDenseRPQEngine(specs, n_slots=24, batch_size=1,
+                                     backend=mk_backend())
+
+    def frontier_mesh():
+        return BatchedDenseRPQEngine(
+            specs, n_slots=24, batch_size=1,
+            executor=MeshExecutor(backend=mk_backend(), frontier="auto",
+                                  frontier_cap=4))
+
+    _, ev_d = _drive(dense_local, events, 5.0, nq)
+    g_m, ev_m = _drive(frontier_mesh, events, 5.0, nq)
+    # mesh lane capacity may be padded; compare the live lanes
+    _assert_streams_equal(backend_name, ev_d, ev_m)
+    assert g_m.executor.frontier_stats["dispatches"] > 0
+
+
+def test_frontier_mesh_vertex_sharding_matches_dense():
+    """Vertex axis over 'model' (when the process has >= 2 devices): the
+    per-shard dirty reduction runs over the LOCAL u block and pmax-combines
+    — the frontier must stay uniform across model peers."""
+    import jax
+
+    if len(jax.devices()) < 2:
+        pytest.skip("needs >= 2 devices for a model axis")
+    rng = random.Random(11)
+    nq = 2
+    specs = _specs(rng, nq, 12.0)
+    events = _random_events(rng, 12, 60, 50)
+
+    def dense_local():
+        return BatchedDenseRPQEngine(specs, n_slots=24, batch_size=1)
+
+    def frontier_mesh():
+        return BatchedDenseRPQEngine(
+            specs, n_slots=24, batch_size=1,
+            executor=MeshExecutor(model_axis=2, frontier="on",
+                                  frontier_cap=8))
+
+    _, ev_d = _drive(dense_local, events, 4.0, nq)
+    _, ev_m = _drive(frontier_mesh, events, 4.0, nq)
+    _assert_streams_equal("vertex-sharded", ev_d, ev_m)
+
+
+def test_frontier_overflow_falls_back_dense():
+    """Regression: a tiny fixed capacity (frontier="on" never grows) forces
+    the dense fallback, results stay identical, and the fallback is
+    observable in the stats."""
+    rng = random.Random(2)
+    nq = 2
+    specs = _specs(rng, nq, 30.0)  # big window -> many dirty rows
+    # preferential attachment: reach sets grow fast, overflowing F=2
+    stream = list(so_like(16, 80, seed=3))
+    events = [("+", s.src, s.dst, s.label, s.ts) for s in stream]
+    specs = [RegisteredQuery("q0", compile_query("(a2q | c2a)*"), 30.0),
+             RegisteredQuery("q1", compile_query("a2q . c2a*"), 30.0)]
+
+    def dense():
+        return BatchedDenseRPQEngine(specs, n_slots=24, batch_size=1)
+
+    def frontier():
+        return BatchedDenseRPQEngine(specs, n_slots=24, batch_size=1,
+                                     frontier="on", frontier_cap=2)
+
+    _, ev_d = _drive(dense, events, 6.0, 2)
+    g_f, ev_f = _drive(frontier, events, 6.0, 2)
+    _assert_streams_equal("overflow", ev_d, ev_f)
+    st = g_f.executor.frontier_stats
+    assert st["fallbacks"] > 0, st
+    assert st["cap"] == 2  # "on" never grows
+
+
+def test_frontier_auto_grows_capacity():
+    """frontier="auto" reacts to overflow fallbacks by doubling F (and the
+    compile-cache-friendly growth is observable in the stats)."""
+    stream = list(so_like(16, 120, seed=5))
+    specs = [RegisteredQuery("q0", compile_query("(a2q | c2a | c2q)*"), 40.0)]
+    g = BatchedDenseRPQEngine(specs, n_slots=24, batch_size=1,
+                              frontier="auto", frontier_cap=2)
+    for sgt in stream:
+        g.insert(sgt.src, sgt.dst, sgt.label, sgt.ts)
+    st = g.executor.frontier_stats
+    assert st["cap"] > 2, st
+    assert st["cap"] & (st["cap"] - 1) == 0  # still a power of two
+
+
+def test_frontier_churn_and_growth_matches_dense():
+    """Query churn (register/deregister mid-stream) + vertex-capacity
+    growth + compaction with the frontier on: the result stream matches a
+    dense engine driven identically."""
+    rng = random.Random(7)
+    base = [RegisteredQuery("q0", compile_query("a . b*"), 20.0),
+            RegisteredQuery("q1", compile_query("(a | b)*"), 15.0)]
+    late = RegisteredQuery("late", compile_query("b . c*"), 18.0)
+    events = _random_events(rng, 40, 110, 90)  # 40 vertices > n_slots=16
+
+    def drive(frontier):
+        kw = (dict(frontier="auto", frontier_cap=4) if frontier else {})
+        g = BatchedDenseRPQEngine(base, n_slots=16, batch_size=1, **kw)
+        next_exp, out = 6.0, []
+        for i, (op, u, v, lab, t) in enumerate(events):
+            if t >= next_exp:
+                g.expire(t)
+                while next_exp <= t:
+                    next_exp += 6.0
+            if i == 40:
+                out.append(("reg", frozenset(g.register_query(late))))
+            if i == 80:
+                g.deregister_query("q0")
+                out.append(("dereg",))
+            if op == "+":
+                fresh = g.insert(u, v, lab, t)
+            else:
+                fresh = g.delete(u, v, lab, t)
+            out.append(tuple(frozenset(s) for s in fresh))
+        return g, out
+
+    g_d, ev_d = drive(False)
+    g_f, ev_f = drive(True)
+    assert g_f.n_slots > 16  # growth actually happened
+    _assert_streams_equal("churn", ev_d, ev_f)
+
+
+@pytest.mark.parametrize("executor", ["local", "mesh"])
+def test_service_frontier_matches_off(executor):
+    """Service-level knob: frontier="auto" produces the same IngestReport
+    stream as "off" (incl. deletions) and carries per-call frontier stats +
+    the per-interval log."""
+    stream = with_deletions(
+        gmark_like(24, 110, LABELS[:3], seed=6, cyclicity=0.2),
+        ratio=0.05, seed=2)
+
+    def run(frontier):
+        svc = PersistentQueryService(window=12.0, slide=3.0,
+                                     executor=executor, frontier=frontier,
+                                     frontier_cap=8)
+        svc.register("arb", "a . b*", engine="dense", n_slots=32)
+        svc.register("star", "(a | b)*", engine="dense", n_slots=32)
+        rep = svc.ingest(stream)
+        return svc, rep
+
+    s_off, r_off = run("off")
+    s_on, r_on = run("auto")
+    assert dict(r_off) == dict(r_on)
+    assert r_off.invalidated == r_on.invalidated
+    assert s_off.results("arb") == s_on.results("arb")
+    assert s_off.results("star") == s_on.results("star")
+    assert r_off.frontier_stats == {}
+    assert r_on.frontier_stats["dispatches"] > 0
+    assert s_on.frontier_log  # per-interval telemetry recorded
+
+
+def test_frontier_checkpoint_restore_identity(tmp_path):
+    """Crash -> restore with the frontier on: the resumed result stream
+    matches an uninterrupted frontier run AND an uninterrupted dense run
+    (the frontier keeps no persistent state, so restore needs nothing new)."""
+    stream = list(gmark_like(20, 80, LABELS[:3], seed=8, cyclicity=0.2))
+    head, tail = stream[:40], stream[40:]
+
+    def mk(frontier):
+        svc = PersistentQueryService(window=15.0, slide=4.0,
+                                     frontier=frontier, frontier_cap=8)
+        svc.register("q", "a . b*", engine="dense", n_slots=32)
+        return svc
+
+    svc = mk("auto")
+    svc.ingest(Stream(head))
+    svc.snapshot(str(tmp_path), step=1)
+    resumed = mk("auto")  # same registration, then adopt the snapshot
+    resumed.restore(str(tmp_path))
+    resumed.ingest(Stream(tail))
+
+    oracle = mk("off")
+    oracle.ingest(Stream(stream))
+    assert resumed.results("q") == oracle.results("q")
+
+
+def test_frontier_seed_and_pack_shapes():
+    """Unit coverage for the jitted seed/pack helpers: base rows + reaching
+    rows are dirty, inert lanes are not, overflow counts survive packing."""
+    dist = jnp.full((2, 6, 6, 2), float("-inf"))
+    # lane 0: row 3 reaches vertex 1 (a batch source below)
+    dist = dist.at[0, 3, 1, 0].set(5.0)
+    # lane 1 is inert (masked out)
+    dist = dist.at[1, 2, 1, 0].set(5.0)
+    src = jnp.asarray([1, 4], jnp.int32)
+    smask = jnp.asarray([True, False])          # slot 4 is batch padding
+    live = jnp.asarray([True, False])
+    dirty = frontier_seed(dist, src, smask, live)
+    assert dirty.shape == (2, 6)
+    np.testing.assert_array_equal(
+        np.asarray(dirty[0]), [False, True, False, True, False, False])
+    assert not np.asarray(dirty[1]).any()       # inert lane never dirties
+    rows, rowmask, cnt = pack_frontier(dirty, 1)  # F=1 < 2 dirty rows
+    assert cnt.tolist() == [2, 0]
+    assert rowmask.tolist() == [[True], [False]]
+    assert rows[0, 0] == 1                      # first dirty row packed
+    rows, rowmask, cnt = pack_frontier(dirty, 4)
+    assert rows[0, :2].tolist() == [1, 3] and rowmask[0, :2].tolist() == [True, True]
+
+
+def test_frontier_single_query_view():
+    """DenseRPQEngine (the Q=1 view) passes the frontier kwargs through."""
+    dfa = compile_query("a . b*")
+    d = DenseRPQEngine(dfa, window=10.0, n_slots=16, batch_size=1)
+    f = DenseRPQEngine(dfa, window=10.0, n_slots=16, batch_size=1,
+                       frontier="on", frontier_cap=4)
+    stream = list(gmark_like(10, 50, ["a", "b"], seed=3))
+    for sgt in stream:
+        assert d.insert(sgt.src, sgt.dst, sgt.label, sgt.ts) == \
+            f.insert(sgt.src, sgt.dst, sgt.label, sgt.ts)
+    assert isinstance(f.executor, LocalExecutor)
+    assert f.executor.frontier == "on"
+
+
+def test_frontier_mode_validation():
+    with pytest.raises(ValueError, match="frontier"):
+        LocalExecutor("jnp", frontier="fast")
+    with pytest.raises(ValueError):
+        LocalExecutor("jnp", frontier_cap=0)
+    with pytest.raises(ValueError, match="frontier"):
+        PersistentQueryService(window=5.0, slide=1.0, frontier="frontier")

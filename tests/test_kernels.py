@@ -134,3 +134,67 @@ def test_bucket_quantization_bound():
                       interpret=True, bm=16, bn=16, bk=16)
     )
     np.testing.assert_array_equal(lv_exact, lv_kernel)
+
+
+# ---------------------------------------------------------------------------
+# Shape-aware block sizes (PR 5 satellite)
+# ---------------------------------------------------------------------------
+
+from repro.kernels.bucket.bucket import bucket_maxmin_fused
+from repro.kernels.maxmin.maxmin import maxmin_matmul_fused, pick_block_sizes
+
+
+def test_pick_block_sizes_table():
+    """Skinny frontier slabs get a small bm / wide bn; big square problems
+    keep the dense defaults; everything clamps to the aligned problem."""
+    assert pick_block_sizes(8, 512, 512) == (8, 256, 128)
+    assert pick_block_sizes(16, 512, 512) == (16, 256, 128)
+    assert pick_block_sizes(32, 512, 512) == (32, 256, 128)
+    assert pick_block_sizes(512, 512, 512) == (128, 128, 64)
+    # clamps: a tiny engine never pays full-tile padding on m/k, and bn
+    # keeps the 128-lane alignment floor
+    assert pick_block_sizes(5, 24, 24) == (8, 128, 24)
+    assert pick_block_sizes(100, 6, 40) == (104, 128, 8)
+    # every block divides its padded problem (the kernels pad to block
+    # multiples, so any positive block is legal — this is a sanity floor)
+    for m, k, n in [(1, 1, 1), (17, 3, 200), (33, 129, 7)]:
+        bm, bn, bk = pick_block_sizes(m, k, n)
+        assert bm >= 1 and bn >= 1 and bk >= 1
+
+
+ODD_SHAPES = [
+    # (J, m, k, n): skinny frontier slabs (m = F << k = n = N) + ragged odds
+    (3, 4, 40, 40),
+    (5, 16, 33, 33),
+    (2, 1, 7, 19),
+    (7, 23, 5, 64),
+    (1, 130, 70, 30),
+]
+
+
+@pytest.mark.parametrize("J,m,k,n", ODD_SHAPES)
+def test_fused_maxmin_auto_blocks_match_oracle(J, m, k, n):
+    """Auto (table-driven) block sizes on odd/small/skinny shapes stay
+    bit-identical to the jnp oracle — block choice is a memory schedule,
+    never a result change."""
+    rng = np.random.default_rng(J * 100 + m + k + n)
+    a = _rand_ts(rng, (J, m, k), np.float32)
+    b = _rand_ts(rng, (J, k, n), np.float32)
+    ref = jnp.stack([maxmin_matmul_naive(jnp.asarray(a[j]), jnp.asarray(b[j]))
+                     for j in range(J)])
+    out = maxmin_matmul_fused(jnp.asarray(a), jnp.asarray(b), interpret=True)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(out))
+
+
+@pytest.mark.parametrize("J,m,k,n", ODD_SHAPES[:3])
+def test_fused_bucket_auto_blocks_match_oracle(J, m, k, n):
+    T = 6
+    rng = np.random.default_rng(J + m + k + n)
+    a = rng.integers(0, T + 1, (J, m, k)).astype(np.int32)
+    b = rng.integers(0, T + 1, (J, k, n)).astype(np.int32)
+    ref = np.stack([
+        np.asarray(bucket_maxmin_exact(jnp.asarray(a[j]), jnp.asarray(b[j])))
+        for j in range(J)])
+    out = bucket_maxmin_fused(jnp.asarray(a), jnp.asarray(b), n_levels=T,
+                              interpret=True)
+    np.testing.assert_array_equal(ref, np.asarray(out))

@@ -124,6 +124,23 @@ def test_backend_shootout_benchmark():
 
 
 @pytest.mark.slow
+def test_frontier_benchmark():
+    """benchmarks/fig16_frontier in the CI slow tier: frontier-restricted
+    ingest vs the dense relaxation on the sparse generators — per-event
+    result identity on both executors AND the >=2x aggregate edges/s
+    acceptance bar at Q=8 are asserted inside (XLA_FLAGS gives the mesh
+    half real lane shards)."""
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.fig16_frontier"],
+        capture_output=True, text=True, timeout=2400,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "XLA_FLAGS": "--xla_force_host_platform_device_count=8"},
+    )
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "[ok] frontier >= 2x dense" in proc.stdout
+
+
+@pytest.mark.slow
 def test_dryrun_machinery_smoke():
     """Full dry-run protocol on one cell in a subprocess (512 host devices):
     lower + compile + memory/cost/collective scrape must all succeed."""
