@@ -1,0 +1,199 @@
+"""Beyond-paper figure: incremental (cone-restricted) deletions (PR 6
+tentpole) vs the dense from-scratch re-derivation.
+
+A negative tuple used to be the engine's most expensive event: the dense
+delete clears the whole (Q, N, N, K) closure state and re-derives it from
+the retained adjacency — O(R·J·N³) — even when the deleted edge supported
+almost nothing. The cone-restricted delete computes the deleted edge's
+*cone* (rows whose pre-delete state records a finite prefix reaching the
+edge's source — the same reduction the insert frontier runs), clears ONLY
+those rows, and re-derives them with the frontier round loop; overflow
+falls back to the dense loop in-dispatch.
+
+Asserted, not sampled, per generator / executor / backend:
+  * per-event identity vs the dense from-scratch oracle (frontier="off"
+    under the SAME backend): every insert's fresh-result set and every
+    delete's invalidation set, each lane, each event;
+  * on the headline config (gmark + 25% deletions, Q=8, local executor,
+    jnp backend) per-DELETE-event throughput is >= 2x the dense path (the
+    PR's acceptance target — checked in ``__main__``).
+
+Run with host-local virtual devices for a real lane-sharded mesh point:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python -m benchmarks.fig17_deletions
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+
+from repro.core.automaton import compile_query
+from repro.core.backend import BucketBackend, PallasBackend
+from repro.core.engine import BatchedDenseRPQEngine, RegisteredQuery
+from repro.streaming.generators import gmark_like, with_deletions, yago_like
+
+from .common import emit
+
+LABELS = ["p0", "p1", "p2", "p3"]
+EXPRS = ["p0 . p1*", "p0*", "(p0 | p1)*", "p1 . p2* . p3", "p2 . p3*",
+         "p0 . p1 . p2*", "p1*", "(p2 | p3)*"]
+
+
+def _specs(n_queries: int, window: float) -> List[RegisteredQuery]:
+    exprs = (EXPRS * ((n_queries + len(EXPRS) - 1) // len(EXPRS)))[:n_queries]
+    return [RegisteredQuery(f"q{i}", compile_query(e), window)
+            for i, e in enumerate(exprs)]
+
+
+def _stream(generator: str, n_vertices: int, n_edges: int, ratio: float):
+    if generator == "yago":
+        base = yago_like(n_vertices, n_edges, n_labels=len(LABELS), seed=7)
+    else:
+        base = gmark_like(n_vertices, n_edges, LABELS, seed=5,
+                          cyclicity=0.15)
+    return list(with_deletions(base, ratio=ratio, seed=2))
+
+
+def _mk_backend(bname: str):
+    if bname == "pallas":
+        # interpret mode keeps the identity sweep runnable on CPU hosts
+        return PallasBackend(interpret=True)
+    if bname == "mxu_bucket":
+        return BucketBackend(n_levels=6, use_pallas=False)
+    return "jnp"
+
+
+def _mk_executor(ename: str, bname: str, frontier: str, frontier_cap: int):
+    if ename == "local":
+        from repro.core.executor import LocalExecutor
+
+        return LocalExecutor(_mk_backend(bname), frontier=frontier,
+                             frontier_cap=frontier_cap)
+    from repro.distributed.executor import MeshExecutor
+
+    return MeshExecutor(backend=_mk_backend(bname), frontier=frontier,
+                        frontier_cap=frontier_cap)
+
+
+def _drive(specs, stream, slide, n_slots, ename, bname, frontier,
+           frontier_cap=16):
+    """Returns (wall_insert_s, wall_delete_s, n_deletes, events, engine)
+    with events = [(op, per-lane frozenset of fresh/invalidated pairs)].
+    Inserts and deletes are timed separately — the figure's subject is the
+    per-DELETE-event cost; both paths force the host sync (results decode
+    inside insert/delete)."""
+    def make():
+        return BatchedDenseRPQEngine(
+            specs, n_slots=n_slots, batch_size=1,
+            executor=_mk_executor(ename, bname, frontier, frontier_cap))
+
+    # warm the jit caches out of the timed loop: ingest, expiry AND the
+    # delete dispatch (delete one of the warmup edges again)
+    g = make()
+    for sgt in stream[:3]:
+        g.insert(sgt.src, sgt.dst, sgt.label, sgt.ts)
+        g.expire(sgt.ts)
+    w = stream[0]
+    g.delete(w.src, w.dst, w.label, stream[2].ts)
+    g = make()
+    next_exp = slide
+    events: List[Tuple] = []
+    wall_ins = wall_del = 0.0
+    n_del = 0
+    for sgt in stream:
+        if sgt.ts >= next_exp:
+            g.expire(sgt.ts)
+            while next_exp <= sgt.ts:
+                next_exp += slide
+        t0 = time.perf_counter()
+        if sgt.op == "+":
+            res = g.insert(sgt.src, sgt.dst, sgt.label, sgt.ts)
+            wall_ins += time.perf_counter() - t0
+        else:
+            res = g.delete(sgt.src, sgt.dst, sgt.label, sgt.ts)
+            wall_del += time.perf_counter() - t0
+            n_del += 1
+        events.append((sgt.op,) + tuple(frozenset(s) for s in res))
+    return wall_ins, wall_del, n_del, events, g
+
+
+def run(n_queries: int = 8, n_edges: int = 200, n_vertices: int = 96,
+        n_slots: int = 112, window: float = 12.0, slide: float = 4.0,
+        generator: str = "gmark", ratio: float = 0.25,
+        executors: Sequence[str] = ("local",),
+        backends: Sequence[str] = ("jnp",)) -> Dict:
+    specs = _specs(n_queries, window)
+    stream = _stream(generator, n_vertices, n_edges, ratio)
+    out: Dict = {"ok": True, "generator": generator, "n_queries": n_queries,
+                 "n_events": len(stream), "ratio": ratio,
+                 "devices": len(jax.devices()), "configs": {}}
+    for ename in executors:
+        for bname in backends:
+            _wi_d, wd_d, nd, ev_d, g_d = _drive(
+                specs, stream, slide, n_slots, ename, bname, "off")
+            _wi_f, wd_f, _nd, ev_f, g_f = _drive(
+                specs, stream, slide, n_slots, ename, bname, "auto")
+            # per-event identity vs the dense from-scratch oracle: fresh
+            # results on "+", invalidation sets on "-", every lane
+            assert len(ev_d) == len(ev_f) and nd == _nd and nd > 0
+            for i, (fd, ff) in enumerate(zip(ev_d, ev_f)):
+                assert fd[0] == ff[0]
+                for qi in range(n_queries):
+                    assert fd[1 + qi] == ff[1 + qi], (
+                        f"{generator}/{ename}/{bname} event {i} ({fd[0]}) "
+                        f"lane {qi}: frontier != dense "
+                        f"({fd[1 + qi] ^ ff[1 + qi]})")
+            st = g_f.executor.frontier_stats
+            del_speedup = wd_d / wd_f
+            key = f"{ename}/{bname}"
+            out["configs"][key] = {
+                "n_deletes": nd,
+                "del_eps_dense": nd / wd_d,
+                "del_eps_frontier": nd / wd_f,
+                "del_speedup": del_speedup,
+                "delete_dispatches": st["delete_dispatches"],
+                "delete_fallbacks": st["delete_fallbacks"],
+                "frontier_cap": st["cap"],
+            }
+            emit(f"fig17/{generator}/Q={n_queries}/{key}/dense",
+                 wd_d / nd * 1e6, f"del_eps={nd / wd_d:.0f}")
+            emit(f"fig17/{generator}/Q={n_queries}/{key}/frontier",
+                 wd_f / nd * 1e6,
+                 f"del_eps={nd / wd_f:.0f} speedup={del_speedup:.2f}x "
+                 f"fallbacks={st['delete_fallbacks']}"
+                 f"/{st['delete_dispatches']} cap={st['cap']}")
+    return out
+
+
+def _report(tag: str, r: Dict) -> None:
+    for key, cfg in r["configs"].items():
+        print(f"[ok] fig17 {tag} {key}: invalidations == dense oracle per "
+              f"event; {cfg['del_speedup']:.2f}x delete events/s over "
+              f"{cfg['n_deletes']} deletes, fallbacks "
+              f"{cfg['delete_fallbacks']}/{cfg['delete_dispatches']}")
+
+
+if __name__ == "__main__":
+    # headline: deletion-heavy sparse gMark at Q=8, local executor, jnp —
+    # the PR's acceptance config
+    head = run(n_queries=8, generator="gmark", executors=("local",))
+    _report("gmark Q=8", head)
+    # identity sweep: both executors x all three contraction backends on a
+    # smaller stream (wall budget; the assertions inside run() are the
+    # point, not the timings)
+    sweep = run(n_queries=4, n_edges=70, n_vertices=48, n_slots=64,
+                generator="gmark",
+                executors=("local", "mesh"),
+                backends=("jnp", "pallas", "mxu_bucket"))
+    _report("gmark Q=4 sweep", sweep)
+    yago = run(n_queries=8, n_edges=120, generator="yago",
+               executors=("local",))
+    _report("yago Q=8", yago)
+    headline = head["configs"]["local/jnp"]["del_speedup"]
+    assert headline >= 2.0, (
+        f"delete speedup {headline:.2f}x < 2x target")
+    print(f"[ok] deletions >= 2x dense from-scratch at Q=8 "
+          f"({headline:.2f}x)")

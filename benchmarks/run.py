@@ -41,7 +41,7 @@ def main() -> None:
                    fig7_query_size, fig10_deletions, fig11_vs_batch,
                    fig12_multi_query, fig13_query_churn,
                    fig14_sharded_engine, fig15_backend_shootout,
-                   fig16_frontier, roofline, table4_rspq)
+                   fig16_frontier, fig17_deletions, roofline, table4_rspq)
 
     scale = 0.4 if args.fast else 1.0
     modules = [
@@ -65,6 +65,11 @@ def main() -> None:
         # sparse low-degree windows (per-event identity asserted inside)
         ("fig16", lambda: fig16_frontier.run(n_edges=int(260 * scale),
                                              executors=("local",))),
+        # fig17: cone-restricted incremental deletions vs the dense
+        # from-scratch re-derivation (per-event invalidation-set identity
+        # asserted inside)
+        ("fig17", lambda: fig17_deletions.run(n_edges=int(200 * scale),
+                                              executors=("local",))),
         ("roofline", roofline.run),
     ]
     print("name,us_per_call,derived")

@@ -75,12 +75,17 @@ micro-batch dirties (seeded in-dispatch from the batch's source slots —
 the engine already threads them through ``ingest_batch``), so per-event
 cost is O(J·F·N²) instead of O(J·N³); overflow falls back to the dense
 loop inside the dispatch, so results are bit-identical in every mode.
-Explicit deletions, lane-seeding closures (:meth:`register_query`), and
-checkpoint adoption stay on the dense closure — each is a from-scratch
-re-derivation that dirties every row by construction — and compaction
-needs no frontier bookkeeping because no frontier state persists across
-dispatches (the dirty set is recomputed per ingest, so slot recycling and
-vertex-axis growth cannot invalidate stale row indices).
+Explicit deletions ride the same machinery since PR 6: the deleted edge's
+cone (the rows whose derivations can pass through it, computed on the
+pre-delete state) is cleared and re-derived at frontier prices instead of
+resetting every row, and :meth:`delete_batch` chunks negative tuples
+through the micro-batch path exactly like inserts. Lane-seeding closures
+(:meth:`register_query`) and checkpoint adoption stay on the dense
+closure — each is a from-scratch re-derivation that dirties every row by
+construction — and compaction needs no frontier bookkeeping because no
+frontier state persists across dispatches (the dirty set is recomputed
+per dispatch, so slot recycling and vertex-axis growth cannot invalidate
+stale row indices).
 
 Key property of the (max, min) formulation (beyond-paper, §Perf): *window
 expiry needs no index maintenance* — a pair is valid iff its bottleneck
@@ -111,8 +116,10 @@ Semantics vs the paper (B = micro-batch size, Q = #queries):
 """
 from __future__ import annotations
 
+import collections
 import math
-from typing import Dict, List, NamedTuple, Optional, Sequence, Set, Tuple
+from typing import (Deque, Dict, List, NamedTuple, Optional, Sequence, Set,
+                    Tuple)
 
 import jax
 import jax.numpy as jnp
@@ -308,8 +315,10 @@ class BatchedDenseRPQEngine:
         # triggered mid-chunk must not recycle them (they may have no
         # adjacency yet and would otherwise look dead)
         self._chunk_pinned: Set[int] = set()
-        # deferred-decode FIFO (PendingResults handles not yet resolved)
-        self._pending_fifo: List[PendingResults] = []
+        # deferred-decode FIFO (PendingResults handles not yet resolved);
+        # a deque so the drain is O(1) per handle — at async_depth-deep
+        # service queues list.pop(0) was O(n) per pop, O(n²) per drain
+        self._pending_fifo: Deque[PendingResults] = collections.deque()
         # per-lane results
         self.per_query_results: List[Set[Pair]] = [set() for _ in range(self.q_cap)]
         self.per_query_log: List[List[Tuple[float, Pair]]] = [[] for _ in range(self.q_cap)]
@@ -613,7 +622,7 @@ class BatchedDenseRPQEngine:
         """Resolve outstanding deferred decodes in dispatch order (through
         ``upto`` when given, else all)."""
         while self._pending_fifo:
-            head = self._pending_fifo.pop(0)
+            head = self._pending_fifo.popleft()
             head._decode_chunks()
             if head is upto:
                 break
@@ -621,24 +630,57 @@ class BatchedDenseRPQEngine:
     def delete(self, u: object, v: object, label: str, ts: float) -> List[Set[Pair]]:
         """Explicit deletion (negative tuple). Returns invalidated pairs
         per lane."""
+        return self.delete_batch([(u, v, label, ts)])
+
+    def delete_batch(
+        self, edges: Sequence[Tuple[object, object, str, float]]
+    ) -> List[Set[Pair]]:
+        """Delete a micro-batch of negative sgts (timestamp-ordered)
+        through the same chunked dispatch path as :meth:`insert_batch`: up
+        to ``batch_size`` negative tuples share ONE jitted delete dispatch
+        (with ``frontier != "off"`` their cones merge into one dirty set).
+        Returns the invalidated pairs per lane, unioned over the batch.
+
+        B = 1 matches per-event semantics exactly; B > 1 evaluates each
+        chunk's invalidation at the chunk's max event time (the same
+        batch-boundary skew contract as :meth:`insert_batch`). Only LIVE
+        lanes are decoded — inert padding lanes (deregistered holes, bucket
+        growth) return empty sets without an O(N²) scan each, and a stale
+        padding lane can never surface pairs."""
         self._drain_pending()
-        self._host_now = max(self._host_now, ts)
-        li = self._label_index.get(label)
-        if li is None or u not in self.slot_of or v not in self.slot_of:
-            self.executor.advance_clock(ts)
-            return [set() for _ in range(self.q_cap)]
+        out: List[Set[Pair]] = [set() for _ in range(self.q_cap)]
+        B = self.batch_size
+        for i in range(0, len(edges), B):
+            self._delete_chunk(edges[i : i + B], out)
+        return out
+
+    def _delete_chunk(self, edges, out: List[Set[Pair]]) -> None:
+        B = self.batch_size
+        src = np.zeros((B,), np.int32)
+        dst = np.zeros((B,), np.int32)
+        lab = np.zeros((B,), np.int32)
+        mask = np.zeros((B,), bool)
+        chunk_now = max(t for (_u, _v, _l, t) in edges)
+        self._host_now = max(self._host_now, chunk_now)
+        j = 0
+        for (u, v, label, _t) in edges:
+            li = self._label_index.get(label)
+            if li is None or u not in self.slot_of or v not in self.slot_of:
+                continue  # unknown label/vertex: nothing retained to drop
+            src[j] = self.slot_of[u]
+            dst[j] = self.slot_of[v]
+            lab[j] = li
+            mask[j] = True
+            j += 1
+        if j == 0:
+            # still advance the clock (every event timestamp moves it)
+            self.executor.advance_clock(chunk_now)
+            return
         invalidated = self.executor.delete_batch(
-            np.asarray([self.slot_of[u]], np.int32),
-            np.asarray([self.slot_of[v]], np.int32),
-            np.asarray([li], np.int32),
-            np.asarray([True]),
-            ts, self.tables,
-        )
+            src, dst, lab, mask, chunk_now, self.tables)
         inv = np.asarray(invalidated)
-        return [
-            self._decode_pairs(inv[qi], bool(self._simple[qi]))
-            for qi in range(self.q_cap)
-        ]
+        for qi, _spec in self.live_items():
+            out[qi] |= self._decode_pairs(inv[qi], bool(self._simple[qi]))
 
     def expire(self, tau: Optional[float] = None) -> None:
         """Slide-boundary maintenance: adjacency masking + slot recycling.

@@ -49,6 +49,7 @@ from .semiring import (
     batched_closure,
     batched_valid_pairs,
     frontier_closure,
+    frontier_delete,
 )
 
 FRONTIER_MODES = ("off", "on", "auto")
@@ -213,6 +214,45 @@ def _delete(
             invalidated, rounds, qrounds)
 
 
+@functools.partial(jax.jit, static_argnames=("backend", "f_cap"),
+                   donate_argnums=(0,))
+def _delete_frontier(
+    arrays: BatchedEngineArrays,
+    src: jnp.ndarray,          # (B,) int32
+    dst: jnp.ndarray,
+    lab: jnp.ndarray,
+    mask: jnp.ndarray,
+    ts_now: jnp.ndarray,       # () f32 event time of the negative tuple(s)
+    btt: BatchedTransitionTable,
+    finals_mask: jnp.ndarray,
+    windows: jnp.ndarray,
+    live_mask: jnp.ndarray,
+    w_max: jnp.ndarray,
+    backend: BackendLike = "jnp",
+    f_cap: int = 32,
+):
+    """Cone-seeded incremental deletion: identical contract to
+    :func:`_delete` except only the rows whose derivations can pass
+    through the dropped edges (the cone, computed in-dispatch on the
+    pre-delete state) are cleared and re-derived; cone overflow falls back
+    to the dense from-scratch loop in-dispatch. Bit-identical to
+    :func:`_delete` by the superset argument (semiring.frontier_delete)."""
+    now = jnp.maximum(arrays.now, ts_now)
+    low = now - windows
+    valid_before = batched_valid_pairs(arrays.dist, finals_mask, low)
+    drop = jnp.where(mask, jnp.asarray(NEG_INF, jnp.float32),
+                     arrays.adj[lab, src, dst])
+    adj = arrays.adj.at[lab, src, dst].set(drop, mode="drop")
+    dist, rounds, qrounds, fstats = frontier_delete(
+        arrays.dist, adj, btt, backend, src, mask, f_cap,
+        query_mask=live_mask, now=now, w_max=w_max,
+    )
+    valid_after = batched_valid_pairs(dist, finals_mask, low)
+    invalidated = jnp.logical_and(valid_before, jnp.logical_not(valid_after))
+    return (BatchedEngineArrays(adj, dist, arrays.emitted, now),
+            invalidated, rounds, qrounds, fstats)
+
+
 @jax.jit
 def _expire(arrays: BatchedEngineArrays, tau: jnp.ndarray, max_window: jnp.ndarray):
     """Lazy expiration at slide boundaries: mask dead adjacency entries and
@@ -281,10 +321,11 @@ class Executor:
         self.frontier_cap = _next_pow2(frontier_cap) if frontier_cap > 1 else 1
         self.steps = 0  # jitted ingest/delete dispatches
         self._arrays: Optional[BatchedEngineArrays] = None
-        # (rounds_dev, qrounds_dev, n_live, fstats_dev|None, n_slots) queue:
-        # converted lazily so the per-dispatch hot path never blocks on a
-        # device->host sync
-        self._pending_counts: List[Tuple[object, object, int, object, int]] = []
+        # (rounds_dev, qrounds_dev, n_live, fstats_dev|None, n_slots,
+        # is_delete) queue: converted lazily so the per-dispatch hot path
+        # never blocks on a device->host sync
+        self._pending_counts: List[
+            Tuple[object, object, int, object, int, bool]] = []
         self._rounds_total = 0
         self._query_rounds_total = 0
         self._unmasked_query_rounds_total = 0
@@ -296,6 +337,10 @@ class Executor:
         self._frontier_seed_rows = 0
         self._frontier_max_lane_rows = 0
         self._frontier_growth_mark = 0
+        # deletion-specific split of the same telemetry (deletes also count
+        # in the shared aggregates above: one capacity, one growth policy)
+        self._frontier_delete_dispatches = 0
+        self._frontier_delete_fallbacks = 0
 
     # -- state ---------------------------------------------------------------
 
@@ -406,7 +451,16 @@ class Executor:
     def delete_batch(self, src, dst, lab, mask, ts_now: float,
                      tables: QueryTables):
         """Explicit deletion dispatch; returns the invalidated-pairs matrix
-        (device)."""
+        (device).
+
+        With ``frontier != "off"`` the dispatch is the cone-seeded
+        incremental one: only rows whose derivations can pass through the
+        dropped edges are cleared and re-derived (overflow falls back to
+        the dense from-scratch loop in-dispatch; results are bit-identical
+        either way)."""
+        if self.frontier != "off":
+            return self._delete_frontier_dispatch(
+                src, dst, lab, mask, ts_now, tables)
         self._arrays, invalidated, rounds, qrounds = _delete(
             self._arrays,
             jnp.asarray(src), jnp.asarray(dst), jnp.asarray(lab),
@@ -416,6 +470,20 @@ class Executor:
             backend=self.backend,
         )
         self._account(rounds, qrounds, tables.n_live)
+        self.steps += 1
+        return invalidated
+
+    def _delete_frontier_dispatch(self, src, dst, lab, mask, ts_now: float,
+                                  tables: QueryTables):
+        self._arrays, invalidated, rounds, qrounds, fstats = _delete_frontier(
+            self._arrays,
+            jnp.asarray(src), jnp.asarray(dst), jnp.asarray(lab),
+            jnp.asarray(mask), jnp.asarray(ts_now, jnp.float32),
+            tables.btt, tables.finals_mask, tables.windows, tables.live_mask,
+            jnp.asarray(tables.max_window, jnp.float32),
+            backend=self.backend, f_cap=self.frontier_cap,
+        )
+        self._account(rounds, qrounds, tables.n_live, fstats, is_delete=True)
         self.steps += 1
         return invalidated
 
@@ -472,9 +540,11 @@ class Executor:
 
     # -- round accounting ----------------------------------------------------
 
-    def _account(self, rounds, qrounds, n_live: int, fstats=None) -> None:
+    def _account(self, rounds, qrounds, n_live: int, fstats=None,
+                 is_delete: bool = False) -> None:
         n = int(self._arrays.dist.shape[1]) if self._arrays is not None else 0
-        self._pending_counts.append((rounds, qrounds, n_live, fstats, n))
+        self._pending_counts.append(
+            (rounds, qrounds, n_live, fstats, n, is_delete))
         # auto-frontier flushes more eagerly: the ×2 capacity growth reads
         # the flushed overflow telemetry, and reacting a couple hundred
         # dispatches late would strand the stream on the dense fallback
@@ -483,9 +553,10 @@ class Executor:
             self._flush_counts()
 
     def _flush_counts(self) -> None:
-        for rounds, qrounds, n_live, fstats, n in self._pending_counts:
+        for rounds, qrounds, n_live, fstats, n, is_delete in \
+                self._pending_counts:
             self._consume_count(rounds, qrounds, n_live)
-            self._consume_frontier(fstats, rounds, n_live, n)
+            self._consume_frontier(fstats, rounds, n_live, n, is_delete)
         self._pending_counts.clear()
         self._maybe_grow_frontier()
 
@@ -495,14 +566,18 @@ class Executor:
         self._query_rounds_total += int(np.asarray(qrounds).sum())
         self._unmasked_query_rounds_total += n_live * r
 
-    def _consume_frontier(self, fstats, rounds, n_live: int, n: int) -> None:
+    def _consume_frontier(self, fstats, rounds, n_live: int, n: int,
+                          is_delete: bool = False) -> None:
         """Aggregate one dispatch's FrontierStats. Works on scalar stats
         (local) and per-shard arrays (mesh) alike: sums/maxes reduce both."""
         if fstats is None:
             return
         self._frontier_dispatches += 1
-        self._frontier_fallbacks += int(
-            np.asarray(fstats.fell_back).astype(np.int64).sum())
+        fell = int(np.asarray(fstats.fell_back).astype(np.int64).sum())
+        self._frontier_fallbacks += fell
+        if is_delete:
+            self._frontier_delete_dispatches += 1
+            self._frontier_delete_fallbacks += fell
         self._frontier_rows_relaxed += int(
             np.asarray(fstats.rows_relaxed).astype(np.int64).sum())
         self._frontier_seed_rows += int(
@@ -536,9 +611,15 @@ class Executor:
 
     @property
     def frontier_stats(self) -> Dict[str, object]:
-        """Aggregate frontier telemetry: dispatches taken, overflow
+        """Aggregate frontier telemetry: dispatches taken (ingest and
+        delete; the delete split is also reported on its own), overflow
         fallbacks, rows relaxed (summed over rounds) vs the dense-loop row
-        equivalent, seed occupancy, and the current capacity."""
+        equivalent, seed occupancy, and the current capacity.
+
+        ``occupancy`` is ``None`` — NOT 0.0 — when no dense-row-equivalent
+        work was observed: an all-idle dispatch window carries no signal
+        about how full frontiers run, and downstream health checks
+        (service.adapt_batch) must not read it as "frontier doing great"."""
         self._flush_counts()
         dense_rows = self._frontier_dense_row_equiv
         return {
@@ -546,12 +627,14 @@ class Executor:
             "cap": self.frontier_cap,
             "dispatches": self._frontier_dispatches,
             "fallbacks": self._frontier_fallbacks,
+            "delete_dispatches": self._frontier_delete_dispatches,
+            "delete_fallbacks": self._frontier_delete_fallbacks,
             "rows_relaxed": self._frontier_rows_relaxed,
             "dense_row_equiv": dense_rows,
             "seed_rows": self._frontier_seed_rows,
             "max_lane_rows": self._frontier_max_lane_rows,
             "occupancy": (self._frontier_rows_relaxed / dense_rows
-                          if dense_rows else 0.0),
+                          if dense_rows else None),
         }
 
     @property

@@ -28,7 +28,12 @@ Since PR 5 the ingest closure also comes in a FRONTIER-RESTRICTED form
 source rows a micro-batch dirties are gathered and relaxed, making
 per-event work O(J·F·N²) instead of O(J·N³) on low-degree windows, with an
 in-dispatch dense fallback on frontier overflow (bit-identical results
-always — see the frontier section below).
+always — see the frontier section below). PR 6 extends the same machinery
+to explicit DELETIONS (:func:`frontier_delete` /
+:func:`shard_frontier_delete`): the deleted edge's cone — the rows whose
+derivations can pass through it — is the same reachability reduction run
+against the pre-delete state, so deletes are cone-cleared and re-derived
+at frontier prices instead of resetting every row.
 """
 from __future__ import annotations
 
@@ -576,6 +581,133 @@ def frontier_closure(
 
 
 # ---------------------------------------------------------------------------
+# Frontier-restricted DELETION (PR 6 tentpole)
+#
+# A deleted edge (u, v, l) can only invalidate derivations whose path passes
+# through it — and every such path factors as x →* u → v →* ·, where the
+# x →* u prefix is recorded at the PRE-delete fixpoint as a finite
+# dist[q, x, u, s] entry (the length-0 prefix x = u is the base-term case).
+# So the set of rows whose value can change is EXACTLY the reachability test
+# `frontier_seed` already runs for inserts, evaluated against the pre-delete
+# state: the deleted edge's *cone*. Rows outside the cone keep their
+# pre-delete values, which remain exact fixpoints of the retained adjacency
+# (their contraction term at u' = u reads dist[x, u, s] = -inf and the base
+# term requires x = u — both excluded by cone membership), while cone rows
+# are cleared to the semiring zero and re-derived from scratch over the
+# retained adjacency: round 1 re-applies their base terms (`a_base` in
+# `frontier_relax_round`), later rounds propagate, and monotone convergence
+# lands each row on the least fixpoint — the same value a dense
+# from-scratch re-closure computes, so the overflow fallback (which IS the
+# dense from-scratch loop) is bit-identical by construction.
+#
+# One caveat on RAW-array identity: rows outside the cone keep their stored
+# values VERBATIM, including window-dead entries whose supporting edges have
+# already been expired out of the adjacency (expiry is lazy and never
+# touches dist). A dense from-scratch delete garbage-collects those as a
+# side effect. The two states agree on every entry above the window
+# threshold — an entry > now - w has its best witnessing path fully
+# retained (expiry only evicts edges <= the monotone threshold), so the
+# stored value equals the retained adjacency's least fixpoint there, and a
+# dead entry can never resurface (bottlenecks only age, the threshold only
+# rises). Emitted results, invalidation sets, and every thresholded read
+# are therefore identical; only the unobservable dead entries may differ.
+# ---------------------------------------------------------------------------
+
+
+def delete_cone(
+    dist: jnp.ndarray,          # (Q, N, N, K) PRE-delete f32 timestamps
+    src: jnp.ndarray,           # (B,) int32 deleted-edge source slots
+    smask: jnp.ndarray,         # (B,) bool batch padding mask
+    query_mask: Optional[jnp.ndarray] = None,   # (Q,) bool live lanes
+) -> jnp.ndarray:
+    """(Q, N) bool invalidation cone of a batch of deleted edges: rows x
+    whose pre-delete ``dist[q, x, :, :]`` has a finite entry reaching a
+    deleted edge's source u in any DFA state, plus the rows x = u
+    themselves (base-term derivations). This is the same reduction as
+    :func:`frontier_seed` — for inserts it bounds where new derivations can
+    APPEAR, for deletes (run against the pre-delete state) it bounds where
+    existing derivations can have PASSED THROUGH the dropped edge — so the
+    two paths share one implementation and one cost: O(Q·N²·K)
+    elementwise."""
+    return frontier_seed(dist, src, smask, query_mask)
+
+
+def frontier_delete(
+    dist: jnp.ndarray,          # (Q, N, N, K) PRE-delete state
+    adj: jnp.ndarray,           # (L, N, N) RETAINED adjacency (edge dropped)
+    btt: BatchedTransitionTable,
+    backend: BackendLike,
+    src: jnp.ndarray,           # (B,) int32 deleted-edge source slots
+    smask: jnp.ndarray,         # (B,) bool batch padding mask
+    f_cap: int,
+    query_mask: Optional[jnp.ndarray] = None,
+    max_rounds: int = 0,
+    now: Optional[jnp.ndarray] = None,
+    w_max: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, FrontierStats]:
+    """Cone-seeded incremental re-derivation after a batch of deletions.
+
+    Computes the deleted edges' cone on the pre-delete ``dist``, clears
+    exactly those rows to the semiring zero, and re-derives them with the
+    same frontier round loop ingest uses — rows outside the cone are
+    untouched (they are already at the retained adjacency's fixpoint on
+    every window-valid entry; see the section comment for the argument and
+    for the one place raw arrays may differ — window-dead entries in clean
+    rows). On cone overflow the dispatch falls back IN-DISPATCH to the
+    dense from-scratch re-closure (all rows cleared), which is the exact
+    computation the non-frontier delete path runs — observable results are
+    identical either way.
+
+    Returns ``(dist, rounds, query_rounds, stats)`` with the same contract
+    as :func:`frontier_closure`."""
+    backend = resolve_backend(backend)
+    q, n, _, k = dist.shape
+    bound = max_rounds if max_rounds > 0 else n * k + 1
+    mask0 = (jnp.ones((q,), bool) if query_mask is None
+             else jnp.asarray(query_mask, bool))
+    dirty = delete_cone(dist, src, smask, mask0)
+    rows, rowmask0, cnt = pack_frontier(dirty, f_cap)
+    seed_rows = jnp.sum(cnt)
+    max_lane_rows = jnp.max(cnt)
+    overflow = jnp.any(cnt > f_cap)
+    cleared = jnp.where(dirty[:, :, None, None], NEG_INF, dist)
+    dist_op, adj_op = backend.prepare_state(cleared, adj, now, w_max)
+
+    def dense_branch(_):
+        # from-scratch over ALL rows — exactly what the non-frontier delete
+        # dispatch runs, so a fallback stays bit-identical to frontier="off"
+        d0 = backend.encode(jnp.full_like(dist, NEG_INF), now, w_max)
+        d_f, rounds, qrounds = _masked_closure_loop(
+            d0, adj_op, btt, backend, mask0, bound)
+        live_rows = jnp.sum(mask0.astype(jnp.int32)) * n
+        return d_f, rounds, qrounds, rounds * live_rows
+
+    def frontier_branch(_):
+        def cond(carry):
+            _d, rm, it, _qr, _rr = carry
+            return jnp.logical_and(jnp.any(rm), it < bound)
+
+        def body(carry):
+            d, rm, it, qr, rr = carry
+            nd, changed = frontier_relax_round(d, adj_op, btt, backend,
+                                               rows, rm)
+            qactive = jnp.any(rm, axis=1).astype(jnp.int32)
+            return (nd, changed, it + 1, qr + qactive,
+                    rr + jnp.sum(rm.astype(jnp.int32)))
+
+        d_f, _, rounds, qrounds, rr = jax.lax.while_loop(
+            cond, body,
+            (dist_op, rowmask0, jnp.asarray(0, jnp.int32),
+             jnp.zeros((q,), jnp.int32), jnp.asarray(0, jnp.int32)))
+        return d_f, rounds, qrounds, rr
+
+    dist_f, rounds, qrounds, rows_relaxed = jax.lax.cond(
+        overflow, dense_branch, frontier_branch, None)
+    stats = FrontierStats(seed_rows, max_lane_rows, rows_relaxed, overflow)
+    return backend.decode_state(dist_f, now, w_max), rounds, qrounds, stats
+
+
+# ---------------------------------------------------------------------------
 # Sharded (shard_map-local) round variants
 #
 # The mesh executor (distributed/executor.py) shards the Q lane axis over
@@ -851,6 +983,44 @@ def _shard_frontier_round(
     return d_op.at[lane, frows].max(new_slab), changed
 
 
+def _shard_dirty_rows(
+    dist_blk: jnp.ndarray,     # (Q_l, N, N_m, K) raw f32 lane block
+    src: jnp.ndarray,          # (B,) int32 batch source slots (replicated)
+    smask: jnp.ndarray,        # (B,) bool batch padding mask
+    query_mask: jnp.ndarray,   # (Q_l,) bool live lanes (replicated)
+    model_axis: Optional[str],
+    model_size: int,
+) -> jnp.ndarray:
+    """(Q_l, N) dirty-row mask of a batch on one lane shard: the shard-map
+    form of :func:`frontier_seed` / :func:`delete_cone`. The reachability
+    reduction runs over the shard's LOCAL u block (the batch sources that
+    land in it), partial reach max-combines across the model peers of the
+    lane shard (one pmax — the result is then uniform across peers, which
+    keeps the skip/run and fallback decisions collective-safe), and the
+    global base-term rows x = src fold in from the replicated batch.
+    Computed on the RAW timestamp block (conservative superset for
+    clock-anchored representations, exact for the float backends)."""
+    _q_l, n, n_m, _k = dist_blk.shape
+    if model_axis is not None and model_size > 1:
+        u_start = jax.lax.axis_index(model_axis) * n_m
+    else:
+        u_start = 0
+    lidx = src - u_start
+    lidx = jnp.where(
+        jnp.logical_and(smask,
+                        jnp.logical_and(lidx >= 0, lidx < n_m)), lidx, n_m)
+    src_local = jnp.zeros((n_m,), bool).at[lidx].set(True, mode="drop")
+    reach = jnp.any(
+        jnp.logical_and(dist_blk > NEG_INF,
+                        src_local[None, None, :, None]), axis=(2, 3))
+    if model_axis is not None and model_size > 1:
+        reach = jax.lax.pmax(reach.astype(jnp.int32), model_axis) > 0
+    gidx = jnp.where(smask, src, n)
+    src_global = jnp.zeros((n,), bool).at[gidx].set(True, mode="drop")
+    return jnp.logical_and(jnp.logical_or(reach, src_global[None, :]),
+                           query_mask[:, None])
+
+
 def shard_frontier_closure(
     dist_blk: jnp.ndarray,
     adj_u: jnp.ndarray,
@@ -882,26 +1052,8 @@ def shard_frontier_closure(
     backend = resolve_backend(backend)
     q_l, n, n_m, k = dist_blk.shape
     bound = max_rounds if max_rounds > 0 else n * k + 1
-    # dirty rows on the RAW timestamp block (conservative for clock-
-    # anchored representations, exact for the float backends)
-    if model_axis is not None and model_size > 1:
-        u_start = jax.lax.axis_index(model_axis) * n_m
-    else:
-        u_start = 0
-    lidx = src - u_start
-    lidx = jnp.where(
-        jnp.logical_and(smask,
-                        jnp.logical_and(lidx >= 0, lidx < n_m)), lidx, n_m)
-    src_local = jnp.zeros((n_m,), bool).at[lidx].set(True, mode="drop")
-    reach = jnp.any(
-        jnp.logical_and(dist_blk > NEG_INF,
-                        src_local[None, None, :, None]), axis=(2, 3))
-    if model_axis is not None and model_size > 1:
-        reach = jax.lax.pmax(reach.astype(jnp.int32), model_axis) > 0
-    gidx = jnp.where(smask, src, n)
-    src_global = jnp.zeros((n,), bool).at[gidx].set(True, mode="drop")
-    dirty = jnp.logical_and(jnp.logical_or(reach, src_global[None, :]),
-                            query_mask[:, None])
+    dirty = _shard_dirty_rows(dist_blk, src, smask, query_mask,
+                              model_axis, model_size)
     frows, rowmask0, cnt = pack_frontier(dirty, f_cap)
     seed_rows = jnp.sum(cnt)
     max_lane_rows = jnp.max(cnt)
@@ -948,5 +1100,91 @@ def shard_frontier_closure(
 
     # any dirty row anywhere on this shard? (uniform across model peers:
     # `dirty` folds the pmax'd reach and the replicated masks)
+    d, it, qr, rr = jax.lax.cond(jnp.any(cnt > 0), run, skip, None)
+    return d, it, qr, rr, overflow, seed_rows, max_lane_rows
+
+
+def shard_frontier_delete(
+    dist_blk: jnp.ndarray,       # (Q_l, N, N_m, K) PRE-delete lane block
+    adj_u: jnp.ndarray,          # (L, N_m, N) RETAINED adjacency, u local
+    adj_v: jnp.ndarray,          # (L, N, N_m) RETAINED adjacency, v local
+    rows: Tuple[jnp.ndarray, ...],
+    query_mask: jnp.ndarray,
+    src: jnp.ndarray,            # (B,) int32 deleted-edge sources (replicated)
+    smask: jnp.ndarray,          # (B,) bool batch padding mask
+    f_cap: int,
+    backend: BackendLike = "jnp",
+    model_axis: Optional[str] = None,
+    model_size: int = 1,
+    max_rounds: int = 0,
+    now: Optional[jnp.ndarray] = None,
+    w_max: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, ...]:
+    """Shard-local cone-seeded deletion: the delete form of
+    :func:`shard_frontier_closure`. The deleted edges' cone is computed on
+    the shard's pre-delete block over its LOCAL u rows (pmax-combined
+    across model peers — same reduction as ingest, see
+    :func:`_shard_dirty_rows`), the cone rows of the local v-column block
+    are cleared to the semiring zero, and the shard re-derives them with
+    its frontier round loop. A shard none of whose lanes have a cone row
+    SKIPS entirely (its rows carry no derivation through the dropped edge,
+    so the retained adjacency's fixpoint is already in hand); an
+    overflowing shard falls back to ITS OWN dense from-scratch loop (all
+    local rows cleared) — the exact non-frontier delete computation, so
+    results stay bit-identical per shard.
+
+    Returns the same 7-tuple as :func:`shard_frontier_closure`."""
+    backend = resolve_backend(backend)
+    q_l, n, n_m, k = dist_blk.shape
+    bound = max_rounds if max_rounds > 0 else n * k + 1
+    dirty = _shard_dirty_rows(dist_blk, src, smask, query_mask,
+                              model_axis, model_size)
+    frows, rowmask0, cnt = pack_frontier(dirty, f_cap)
+    seed_rows = jnp.sum(cnt)
+    max_lane_rows = jnp.max(cnt)
+    overflow = jnp.any(cnt > f_cap)
+    cleared = jnp.where(dirty[:, :, None, None], NEG_INF, dist_blk)
+
+    def run(_):
+        d_op = backend.encode(cleared, now, w_max)
+        au_op = backend.encode(adj_u, now, w_max)
+        av_op = backend.encode(adj_v, now, w_max)
+
+        def dense(_):
+            d0 = backend.encode(jnp.full_like(dist_blk, NEG_INF),
+                                now, w_max)
+            d_f, it, qr = _shard_dense_loop(
+                d0, au_op, av_op, rows, query_mask, backend,
+                model_axis, model_size, bound)
+            live_rows = jnp.sum(query_mask.astype(jnp.int32)) * n
+            return d_f, it, qr, it * live_rows
+
+        def frontier(_):
+            def cond(carry):
+                _d, rm, it, _qr, _rr = carry
+                return jnp.logical_and(jnp.any(rm), it < bound)
+
+            def body(carry):
+                d, rm, it, qr, rr = carry
+                nd, changed = _shard_frontier_round(
+                    d, au_op, av_op, rows, frows, rm, backend,
+                    model_axis, model_size)
+                qactive = jnp.any(rm, axis=1).astype(jnp.int32)
+                return (nd, changed, it + 1, qr + qactive,
+                        rr + jnp.sum(rm.astype(jnp.int32)))
+
+            d_f, _, it, qr, rr = jax.lax.while_loop(
+                cond, body,
+                (d_op, rowmask0, jnp.asarray(0, jnp.int32),
+                 jnp.zeros((q_l,), jnp.int32), jnp.asarray(0, jnp.int32)))
+            return d_f, it, qr, rr
+
+        d_f, it, qr, rr = jax.lax.cond(overflow, dense, frontier, None)
+        return backend.decode_state(d_f, now, w_max), it, qr, rr
+
+    def skip(_):
+        return (dist_blk, jnp.asarray(0, jnp.int32),
+                jnp.zeros((q_l,), jnp.int32), jnp.asarray(0, jnp.int32))
+
     d, it, qr, rr = jax.lax.cond(jnp.any(cnt > 0), run, skip, None)
     return d, it, qr, rr, overflow, seed_rows, max_lane_rows

@@ -71,6 +71,7 @@ from ..core.semiring import (
     batched_valid_pairs,
     shard_closure,
     shard_frontier_closure,
+    shard_frontier_delete,
     shard_relax_round,
     shard_transitions,
 )
@@ -137,6 +138,40 @@ def make_sharded_frontier_closure(mesh: Mesh, backend, f_cap: int,
         rows = tuple(r[0] for r in rest[:6])
         mask0, src, smask, now, w_max = rest[6:11]
         d_f, rounds, qrounds, rr, fb, seed, mx = shard_frontier_closure(
+            dist_blk, adj_u, adj_v, rows, mask0, src, smask, f_cap,
+            backend=backend,
+            model_axis=model_axis if n_model > 1 else None,
+            model_size=n_model, now=now, w_max=w_max,
+        )
+        return (d_f, rounds.reshape(1), qrounds, rr.reshape(1),
+                fb.reshape(1), seed.reshape(1), mx.reshape(1))
+
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(dist_spec, P(None, model_axis, None), P(None, None, model_axis),
+                  *_row_specs(qa), P(qa), P(None), P(None), P(), P()),
+        out_specs=(dist_spec, P(qa), P(qa), P(qa), P(qa), P(qa), P(qa)),
+        check_rep=False,
+    )
+
+
+def make_sharded_frontier_delete(mesh: Mesh, backend, f_cap: int,
+                                 q_axes=("data",), model_axis: str = "model"):
+    """shard_map-wrapped cone-seeded deletion: same signature and output
+    layout as :func:`make_sharded_frontier_closure`, but each shard
+    computes the deleted edges' cone on its PRE-delete block (``adj_u`` /
+    ``adj_v`` carry the RETAINED adjacency), clears its cone rows, and
+    re-derives them; a shard with no cone rows skips (its lanes carry no
+    derivation through the dropped edges), and an overflowing shard falls
+    back to ITS OWN dense from-scratch loop."""
+    qa = q_axes[0] if len(q_axes) == 1 else tuple(q_axes)
+    n_model = mesh.shape[model_axis]
+    dist_spec = P(qa, None, model_axis, None)
+
+    def body(dist_blk, adj_u, adj_v, *rest):
+        rows = tuple(r[0] for r in rest[:6])
+        mask0, src, smask, now, w_max = rest[6:11]
+        d_f, rounds, qrounds, rr, fb, seed, mx = shard_frontier_delete(
             dist_blk, adj_u, adj_v, rows, mask0, src, smask, f_cap,
             backend=backend,
             model_axis=model_axis if n_model > 1 else None,
@@ -393,6 +428,44 @@ def _mesh_frontier_ingest(mesh: Mesh, q_axes: Tuple[str, ...], backend,
                        lane_sh, lane_sh, lane_sh, lane_sh))
 
 
+@functools.lru_cache(maxsize=None)
+def _mesh_frontier_delete(mesh: Mesh, q_axes: Tuple[str, ...], backend,
+                          f_cap: int):
+    """Jitted cone-seeded deletion for the mesh executor, cached per (mesh,
+    lane axes, backend, frontier capacity) — the delete twin of
+    :func:`_mesh_frontier_ingest`, sharing its capacity-bucketing
+    discipline."""
+    fns = _mesh_step_fns(mesh, q_axes, backend)
+    sh = fns["shardings"]
+    qa = q_axes[0] if len(q_axes) == 1 else tuple(q_axes)
+    closure = make_sharded_frontier_delete(mesh, backend, f_cap,
+                                           q_axes=q_axes)
+    state_sh = BatchedEngineArrays(sh["adj"], sh["dist"], sh["emitted"],
+                                  sh["now"])
+    lane_sh = NamedSharding(mesh, P(qa))
+
+    def delete_impl(arrays, src, dst, lab, mask, ts_now,
+                    rows, finals_mask, windows, live_mask, w_max):
+        now = jnp.maximum(arrays.now, ts_now)
+        low = now - windows
+        valid_before = batched_valid_pairs(arrays.dist, finals_mask, low)
+        drop = jnp.where(mask, jnp.asarray(NEG_INF, jnp.float32),
+                         arrays.adj[lab, src, dst])
+        adj = arrays.adj.at[lab, src, dst].set(drop, mode="drop")
+        dist, shard_rounds, qrounds, rr, fb, seed, mx = closure(
+            arrays.dist, adj, adj, *rows, live_mask, src, mask, now, w_max)
+        valid_after = batched_valid_pairs(dist, finals_mask, low)
+        invalidated = jnp.logical_and(valid_before,
+                                      jnp.logical_not(valid_after))
+        return (BatchedEngineArrays(adj, dist, arrays.emitted, now),
+                invalidated, shard_rounds, qrounds, rr, fb, seed, mx)
+
+    return jax.jit(
+        delete_impl, donate_argnums=(0,),
+        out_shardings=(state_sh, sh["emitted"], lane_sh, lane_sh,
+                       lane_sh, lane_sh, lane_sh, lane_sh))
+
+
 class MeshExecutor(Executor):
     """Sharded executor: Q lanes over the mesh's data axis (optionally the
     vertex axis over model), convergence-aware per-shard dispatch.
@@ -481,6 +554,21 @@ class MeshExecutor(Executor):
                      tables: QueryTables):
         q_cap = self._arrays.dist.shape[0]
         rows = self._rows_for(tables.btt, q_cap)
+        if self.frontier != "off":
+            delete = _mesh_frontier_delete(
+                self.mesh, self.q_axes, self.backend, self.frontier_cap)
+            (self._arrays, invalidated, shard_rounds, qrounds,
+             rr, fb, seed, mx) = delete(
+                self._arrays,
+                jnp.asarray(src), jnp.asarray(dst), jnp.asarray(lab),
+                jnp.asarray(mask), jnp.asarray(ts_now, jnp.float32),
+                rows, tables.finals_mask, tables.windows, tables.live_mask,
+                jnp.asarray(tables.max_window, jnp.float32),
+            )
+            self._account(shard_rounds, qrounds, tables.n_live,
+                          FrontierStats(seed, mx, rr, fb), is_delete=True)
+            self.steps += 1
+            return invalidated
         self._arrays, invalidated, shard_rounds, qrounds = self._jit_delete(
             self._arrays,
             jnp.asarray(src), jnp.asarray(dst), jnp.asarray(lab),

@@ -7,6 +7,7 @@ All are deterministic in the seed, emit strictly increasing timestamps, and
 scale by (n_vertices, n_edges)."""
 from __future__ import annotations
 
+import collections
 import random
 from typing import List, Optional, Sequence
 
@@ -90,7 +91,9 @@ def gmark_like(n_vertices: int, n_edges: int, labels: Sequence[str],
     rng = random.Random(seed)
     tuples = []
     t = 0.0
-    recent: List[object] = []
+    # deque: the sliding 64-vertex recency window drops its oldest entry
+    # in O(1) (rng.choice indexes it, so draws are identical to a list)
+    recent: collections.deque = collections.deque()
     for _ in range(n_edges):
         t += rng.expovariate(rate)
         if recent and rng.random() < cyclicity:
@@ -101,7 +104,7 @@ def gmark_like(n_vertices: int, n_edges: int, labels: Sequence[str],
             v = rng.randrange(n_vertices)
         recent.append(v)
         if len(recent) > 64:
-            recent.pop(0)
+            recent.popleft()
         tuples.append(SGT(t, u, v, rng.choice(list(labels))))
     return Stream(tuples)
 

@@ -90,9 +90,10 @@ engine; a service restoring such a snapshot must register it with
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
-from typing import Dict, List, Optional, Set, Tuple, Union
+from typing import Deque, Dict, List, Optional, Set, Tuple, Union
 
 from ..core.automaton import compile_query
 from ..core.backend import resolve_backend
@@ -125,11 +126,17 @@ class IngestReport(Dict[str, Set[Tuple]]):
     def __init__(self, new: Dict[str, Set[Tuple]],
                  invalidated: Dict[str, Set[Tuple]],
                  fallbacks: Optional[Dict[str, str]] = None,
-                 frontier_stats: Optional[Dict[str, object]] = None):
+                 frontier_stats: Optional[Dict[str, object]] = None,
+                 deletions: int = 0):
         super().__init__(new)
         self.invalidated: Dict[str, Set[Tuple]] = invalidated
         self.fallbacks: Dict[str, str] = dict(fallbacks or {})
         self.frontier_stats: Dict[str, object] = dict(frontier_stats or {})
+        #: negative tuples the dense group processed during this call
+        #: (frontier delete telemetry — cone dispatches / fallbacks — rides
+        #: in :attr:`frontier_stats` under ``delete_dispatches`` /
+        #: ``delete_fallbacks``).
+        self.deletions: int = int(deletions)
 
 
 class RSPQFallback:
@@ -292,8 +299,28 @@ class PersistentQueryService:
             for k in cur
         }
         dr = delta.get("dense_row_equiv", 0)
-        delta["occupancy"] = (delta.get("rows_relaxed", 0) / dr) if dr else 0.0
+        # An interval with zero dense-row-equivalent work carries no
+        # occupancy signal at all (no dispatch touched any rows) — report
+        # None rather than 0.0 so consumers (adaptive batching) can tell
+        # "idle" apart from "genuinely sparse frontiers".
+        delta["occupancy"] = (delta.get("rows_relaxed", 0) / dr) if dr else None
         return delta
+
+    @staticmethod
+    def _frontier_healthy(finterval: Dict[str, object]) -> bool:
+        """True when the interval's frontier telemetry shows cheap, live
+        dispatches: some dispatches ran, their measured row occupancy is
+        tiny, and none overflowed to the dense loop. An interval with no
+        signal — no dispatches at all, or ``occupancy is None`` because
+        zero dense-row-equivalent work happened — is NOT healthy: it says
+        nothing about the frontier, and treating it as healthy would hold
+        the batch size frozen across idle slides."""
+        if not finterval or not finterval.get("dispatches", 0):
+            return False
+        occ = finterval.get("occupancy")
+        if occ is None:
+            return False
+        return occ < 0.05 and not finterval.get("fallbacks", 0)
 
     def _frontier_delta(self) -> Dict[str, object]:
         """Frontier-stat delta since the last mark (per-interval telemetry;
@@ -477,14 +504,18 @@ class PersistentQueryService:
         call_mark: Dict[str, object] = (
             dict(self._group.executor.frontier_stats)
             if self._group is not None and self._frontier != "off" else {})
-        pending: List[PendingResults] = []  # bounded FIFO (async_depth)
+        # bounded FIFO (async_depth) — deque so the drain below is O(1)
+        # per handle instead of list.pop(0)'s O(n) shift
+        pending: Deque[PendingResults] = collections.deque()
         dense_buf: List = []               # adaptive micro-batch buffer
+        del_buf: List = []                 # negative-tuple micro-batch buffer
+        deletions = [0]                    # negative tuples seen by the group
 
         def resolve_pending(limit: int = 0) -> None:
             """Resolve outstanding decode handles down to `limit` (dispatch
             order; each handle snapshotted the interner at dispatch)."""
             while len(pending) > limit:
-                fresh = pending.pop(0).resolve()
+                fresh = pending.popleft().resolve()
                 for qi, spec in self._group.live_items():
                     new_results[spec.name] |= fresh[qi]
 
@@ -510,6 +541,29 @@ class PersistentQueryService:
                     # under async_decode), amortized over the micro-batch
                     st.latencies_us.extend([dt / len(batch)] * len(batch))
             dense_buf.clear()
+            self._maybe_fallback(fallbacks, lambda: resolve_pending(0))
+
+        def flush_deletes() -> None:
+            """Dispatch the buffered negative tuples as one micro-batch
+            through the engine's chunked delete path (frontier cone per
+            chunk when the frontier is on). Only one of dense_buf/del_buf
+            is ever non-empty — the event loop flushes the other before
+            buffering — so stream order is preserved."""
+            if not del_buf:
+                return
+            resolve_pending()
+            batch = [(s.src, s.dst, s.label, s.ts) for s in del_buf]
+            t0 = time.perf_counter_ns() if record_latency else 0
+            inv = self._group.delete_batch(batch)
+            dt = (time.perf_counter_ns() - t0) / 1e3 if record_latency else 0.0
+            for qi, spec in self._group.live_items():
+                st = self.stats[spec.name]
+                st.tuples += len(batch)
+                invalidated[spec.name] |= inv[qi]
+                if record_latency:
+                    st.latencies_us.extend([dt / len(batch)] * len(batch))
+            deletions[0] += len(batch)
+            del_buf.clear()
             self._maybe_fallback(fallbacks, lambda: resolve_pending(0))
 
         def mark_interval() -> Dict[str, object]:
@@ -544,11 +598,7 @@ class PersistentQueryService:
                     # proportion to its dirty rows, so growing B would
                     # trade exactness (batch-boundary skew) for little:
                     # hold B instead
-                    frontier_healthy = bool(
-                        finterval
-                        and finterval.get("dispatches", 0)
-                        and finterval.get("occupancy", 1.0) < 0.05
-                        and not finterval.get("fallbacks", 0))
+                    frontier_healthy = self._frontier_healthy(finterval)
                     if noop_frac >= 0.3 and b < self._max_batch \
                             and not frontier_healthy:
                         b *= 2
@@ -566,6 +616,7 @@ class PersistentQueryService:
             # lazy expiration at slide boundaries (eager evaluation)
             if sgt.ts >= self._next_expiry:
                 flush_dense()
+                flush_deletes()
                 resolve_pending()
                 if self._group is not None:
                     self._group.expire(sgt.ts)
@@ -579,24 +630,17 @@ class PersistentQueryService:
             refs_this_event = list(self._ref_engines.items())
             if self._group is not None:
                 if sgt.op == "+":
+                    flush_deletes()
                     dense_buf.append(sgt)
                     if (not self._adaptive_batch
                             or len(dense_buf) >= self._group.batch_size):
                         flush_dense()
                 else:
                     flush_dense()
-                    resolve_pending()
-                    t0 = time.perf_counter_ns() if record_latency else 0
-                    inv = self._group.delete(sgt.src, sgt.dst, sgt.label, sgt.ts)
-                    dt = ((time.perf_counter_ns() - t0) / 1e3
-                          if record_latency else 0.0)
-                    for qi, spec in self._group.live_items():
-                        st = self.stats[spec.name]
-                        st.tuples += 1
-                        invalidated[spec.name] |= inv[qi]
-                        if record_latency:
-                            st.latencies_us.append(dt)
-                    self._maybe_fallback(fallbacks, lambda: resolve_pending(0))
+                    del_buf.append(sgt)
+                    if (not self._adaptive_batch
+                            or len(del_buf) >= self._group.batch_size):
+                        flush_deletes()
             for name, eng in refs_this_event:
                 t0 = time.perf_counter_ns() if record_latency else 0
                 if sgt.op == "+":
@@ -611,6 +655,7 @@ class PersistentQueryService:
                 if record_latency:
                     st.latencies_us.append((time.perf_counter_ns() - t0) / 1e3)
         flush_dense()
+        flush_deletes()
         resolve_pending()
         for name in self.stats:
             st = self.stats[name]
@@ -624,7 +669,8 @@ class PersistentQueryService:
         if call_mark and self._group is not None:
             fstats = self._stats_delta(
                 self._group.executor.frontier_stats, call_mark)
-        return IngestReport(new_results, invalidated, fallbacks, fstats)
+        return IngestReport(new_results, invalidated, fallbacks, fstats,
+                            deletions=deletions[0])
 
     def results(self, name: str) -> Set[Tuple]:
         if name in self._dense_specs:

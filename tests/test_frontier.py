@@ -87,6 +87,15 @@ def _assert_streams_equal(tag, dense, frontier):
         assert d == f, (tag, i, d, f)
 
 
+def _valid_view(g):
+    """The engine's dist restricted to window-valid entries (everything at
+    or below ``now - w`` replaced by -inf) — the observable device state."""
+    a = g.batched_arrays
+    low = np.asarray(a.now - g.windows)                 # (Q,)
+    d = np.asarray(a.dist)
+    return np.where(d > low[:, None, None, None], d, -np.inf)
+
+
 @pytest.mark.parametrize("seed", range(3))
 def test_frontier_matches_dense_local(seed):
     """Inserts + deletions + expiry, mixed semantics: every event's fresh
@@ -107,12 +116,18 @@ def test_frontier_matches_dense_local(seed):
     g_d, ev_d = _drive(dense, events, 5.0, nq)
     g_f, ev_f = _drive(frontier, events, 5.0, nq)
     _assert_streams_equal(f"seed={seed}", ev_d, ev_f)
-    # the device state itself must agree (same fixpoint, not just the
-    # thresholded emit view)
-    np.testing.assert_array_equal(
-        np.asarray(g_d.batched_arrays.dist), np.asarray(g_f.batched_arrays.dist))
+    # the device state must agree on every WINDOW-VALID entry (the same
+    # fixpoint wherever it is observable). Raw arrays may differ at dead
+    # entries since PR 6: the cone-restricted delete leaves rows outside
+    # the deleted edge's cone untouched, so entries whose support already
+    # expired out of the adjacency linger there until the row is next
+    # re-derived, while the dense from-scratch delete garbage-collects
+    # them. Dead entries can never resurface (bottlenecks only age, the
+    # threshold only rises), so the observable state is identical.
+    np.testing.assert_array_equal(_valid_view(g_d), _valid_view(g_f))
     st = g_f.executor.frontier_stats
     assert st["dispatches"] > 0
+    assert st["delete_dispatches"] > 0          # deletes rode the frontier
 
 
 @pytest.mark.parametrize("backend_name", ["jnp", "pallas", "mxu_bucket"])
@@ -374,6 +389,169 @@ def test_frontier_single_query_view():
             f.insert(sgt.src, sgt.dst, sgt.label, sgt.ts)
     assert isinstance(f.executor, LocalExecutor)
     assert f.executor.frontier == "on"
+
+
+# ---------------------------------------------------------------------------
+# PR 6: incremental (cone-restricted) deletions
+# ---------------------------------------------------------------------------
+
+
+def test_delete_cone_unit():
+    """The invalidation cone is frontier_seed run against the PRE-delete
+    state: rows reaching the deleted edge's source plus the source row
+    itself (base-term derivations), inert lanes never dirty."""
+    from repro.core.semiring import delete_cone
+
+    dist = jnp.full((2, 6, 6, 2), float("-inf"))
+    dist = dist.at[0, 3, 1, 0].set(5.0)         # row 3 reaches src slot 1
+    dist = dist.at[1, 2, 1, 1].set(4.0)         # lane 1 is inert below
+    src = jnp.asarray([1], jnp.int32)
+    smask = jnp.asarray([True])
+    live = jnp.asarray([True, False])
+    cone = delete_cone(dist, src, smask, live)
+    np.testing.assert_array_equal(
+        np.asarray(cone[0]), [False, True, False, True, False, False])
+    assert not np.asarray(cone[1]).any()
+
+
+def test_delete_overflow_falls_back_dense():
+    """A deletion whose cone overflows a tiny fixed capacity must take the
+    in-dispatch dense fallback — results identical, fallback observable in
+    the delete-split telemetry."""
+    stream = list(with_deletions(so_like(16, 90, seed=3), ratio=0.2, seed=1))
+    events = [(s.op, s.src, s.dst, s.label, s.ts) for s in stream]
+    specs = [RegisteredQuery("q0", compile_query("(a2q | c2a)*"), 30.0),
+             RegisteredQuery("q1", compile_query("a2q . c2a*"), 30.0)]
+
+    def dense():
+        return BatchedDenseRPQEngine(specs, n_slots=24, batch_size=1)
+
+    def frontier():
+        return BatchedDenseRPQEngine(specs, n_slots=24, batch_size=1,
+                                     frontier="on", frontier_cap=2)
+
+    _, ev_d = _drive(dense, events, 6.0, 2)
+    g_f, ev_f = _drive(frontier, events, 6.0, 2)
+    _assert_streams_equal("delete-overflow", ev_d, ev_f)
+    st = g_f.executor.frontier_stats
+    assert st["delete_dispatches"] > 0, st
+    assert st["delete_fallbacks"] > 0, st
+
+
+def test_delete_churned_group_padding_lanes_inert():
+    """Regression: the delete decode must skip inert padding lanes. A
+    churned group (register x2, deregister x1 mid-stream) leaves a hole —
+    every delete's lane-indexed output must be empty there, and the live
+    lanes' streams must match a dense-engine drive of the same schedule."""
+    rng = random.Random(13)
+    base = [RegisteredQuery("q0", compile_query("a . b*"), 20.0)]
+    e0 = RegisteredQuery("e0", compile_query("(a | b)*"), 16.0)
+    e1 = RegisteredQuery("e1", compile_query("b . c*"), 18.0)
+    events = _random_events(rng, 12, 80, 70)
+
+    def drive(frontier):
+        kw = dict(frontier="auto", frontier_cap=4) if frontier else {}
+        g = BatchedDenseRPQEngine(base, n_slots=16, batch_size=1, **kw)
+        out = []
+        for i, (op, u, v, lab, t) in enumerate(events):
+            if i == 20:
+                g.register_query(e0)
+                g.register_query(e1)
+            if i == 45:
+                g.deregister_query("e0")    # lane becomes an inert hole
+            res = (g.insert if op == "+" else g.delete)(u, v, lab, t)
+            assert len(res) == g.q_cap
+            live = sorted(qi for qi, _s in g.live_items())
+            for qi, pairs in enumerate(res):
+                if qi not in live:
+                    assert not pairs, (i, qi, pairs)
+            out.append((op,) + tuple(frozenset(res[qi]) for qi in live))
+        return g, out
+
+    g_d, ev_d = drive(False)
+    g_f, ev_f = drive(True)
+    assert any(s is None for s in g_f.lane_specs)   # the hole exists
+    _assert_streams_equal("churn-delete", ev_d, ev_f)
+
+
+def test_drain_pending_order_preserved():
+    """Regression for the deque'd pending FIFO: resolving a LATER handle
+    drains earlier handles first (dispatch order, so monotone dedup holds),
+    stops at `upto`, and every chunk's fresh set matches a synchronous
+    drive."""
+    specs = [RegisteredQuery("q0", compile_query("a . b*"), 30.0)]
+    g = BatchedDenseRPQEngine(specs, n_slots=16, batch_size=1)
+    sync = BatchedDenseRPQEngine(specs, n_slots=16, batch_size=1)
+    stream = list(gmark_like(10, 30, ["a", "b"], seed=4))
+    chunks = [stream[:10], stream[10:20], stream[20:]]
+    handles = [
+        g.insert_batch_pending([(s.src, s.dst, s.label, s.ts) for s in c])
+        for c in chunks
+    ]
+    expect = []
+    for c in chunks:
+        fresh = set()
+        for s in c:
+            fresh |= sync.insert(s.src, s.dst, s.label, s.ts)[0]
+        expect.append(fresh)
+    mid = handles[1].resolve()      # head must decode before the middle
+    assert handles[0]._decoded and not handles[2]._decoded
+    assert handles[0].resolve()[0] == expect[0]
+    assert mid[0] == expect[1]
+    assert handles[2].resolve()[0] == expect[2]
+
+
+def test_frontier_healthy_gate():
+    """adapt_batch's hold-B gate: only a LIVE interval with tiny occupancy
+    and no overflow counts as healthy. Idle intervals (no dispatches, or
+    occupancy None because zero dense-row-equivalent work ran) carry no
+    signal and must NOT freeze batch adaptation."""
+    h = PersistentQueryService._frontier_healthy
+    assert not h({})
+    assert not h({"dispatches": 0, "occupancy": 0.01})
+    assert not h({"dispatches": 4, "occupancy": None})
+    assert not h({"dispatches": 4, "occupancy": 0.5})
+    assert not h({"dispatches": 4, "occupancy": 0.01, "fallbacks": 2})
+    assert h({"dispatches": 4, "occupancy": 0.01, "fallbacks": 0})
+
+
+def test_idle_interval_occupancy_is_none():
+    """Regression: a slide interval with zero dense-row-equivalent work
+    used to report occupancy 0.0, which the health check read as 'frontier
+    healthy' and held B forever. Empty intervals now report None."""
+    cur = {"mode": "auto", "cap": 8, "dispatches": 3, "fallbacks": 0,
+           "rows_relaxed": 0, "dense_row_equiv": 0, "max_lane_rows": 0}
+    delta = PersistentQueryService._stats_delta(cur, {})
+    assert delta["occupancy"] is None
+    assert not PersistentQueryService._frontier_healthy(delta)
+    # a live interval still reports a ratio and can be healthy
+    cur2 = dict(cur, rows_relaxed=5, dense_row_equiv=500)
+    delta2 = PersistentQueryService._stats_delta(cur2, {})
+    assert delta2["occupancy"] == 0.01
+    assert PersistentQueryService._frontier_healthy(delta2)
+
+
+def test_service_delete_batching_and_report():
+    """Negative tuples ride the service's micro-batch path: the report
+    counts them, invalidations match the per-event engine drive, and the
+    frontier split telemetry surfaces delete dispatches."""
+    stream = with_deletions(
+        gmark_like(20, 90, LABELS[:3], seed=12, cyclicity=0.2),
+        ratio=0.15, seed=5)
+    n_del = sum(1 for s in stream if s.op == "-")
+    assert n_del > 0
+    svc = PersistentQueryService(window=12.0, slide=3.0, frontier="auto",
+                                 frontier_cap=8)
+    svc.register("q", "a . b*", engine="dense", n_slots=32)
+    rep = svc.ingest(stream)
+    assert rep.deletions == n_del
+    assert rep.frontier_stats["delete_dispatches"] > 0
+    oracle = PersistentQueryService(window=12.0, slide=3.0, frontier="off")
+    oracle.register("q", "a . b*", engine="dense", n_slots=32)
+    rep_o = oracle.ingest(stream)
+    assert dict(rep) == dict(rep_o)
+    assert rep.invalidated == rep_o.invalidated
+    assert rep_o.deletions == n_del
 
 
 def test_frontier_mode_validation():

@@ -141,6 +141,23 @@ def test_frontier_benchmark():
 
 
 @pytest.mark.slow
+def test_deletions_benchmark():
+    """benchmarks/fig17_deletions in the CI slow tier: cone-restricted
+    incremental deletions vs the dense from-scratch re-derivation —
+    per-event invalidation-set identity on both executors x all three
+    backends AND the >=2x per-delete-event throughput acceptance bar at
+    Q=8 are asserted inside."""
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.fig17_deletions"],
+        capture_output=True, text=True, timeout=2400,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "XLA_FLAGS": "--xla_force_host_platform_device_count=8"},
+    )
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "[ok] deletions >= 2x dense" in proc.stdout
+
+
+@pytest.mark.slow
 def test_dryrun_machinery_smoke():
     """Full dry-run protocol on one cell in a subprocess (512 host devices):
     lower + compile + memory/cost/collective scrape must all succeed."""

@@ -1,0 +1,97 @@
+"""Window-boundary inclusivity: the shared strict-`>` convention.
+
+The window is the half-open interval (now - w, now]: an edge (or a result
+pair's bottleneck) timestamped EXACTLY ``now - w`` is expired. Three layers
+must agree on this — ``_expire`` retains adjacency ``> low``,
+``batched_valid_pairs`` emits bottlenecks ``> low``, and the bucket
+backend's absolute grid maps anything at or below its window-aligned origin
+to the dead level 0 — or a pair could be emitted whose support the expiry
+pass already evicted (or vice versa). These tests pin each layer at the
+exact boundary timestamp.
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import compile_query
+from repro.core.backend import BucketBackend
+from repro.core.engine import BatchedDenseRPQEngine, RegisteredQuery
+from repro.core.semiring import NEG_INF, batched_valid_pairs
+
+
+def _engine(window=10.0, expr="a . a*"):
+    specs = [RegisteredQuery("q", compile_query(expr), window)]
+    return BatchedDenseRPQEngine(specs, n_slots=8, batch_size=1)
+
+
+def test_expire_drops_edge_at_exact_boundary():
+    """low = tau - w; an edge with ts == low is NOT retained (strict >)."""
+    g = _engine(10.0)
+    g.insert("u", "v", "a", 5.0)
+    assert g.current_results(0) == {("u", "v")}
+    g.expire(15.0)                       # low = 5.0: the edge sits ON it
+    assert not np.isfinite(np.asarray(g.batched_arrays.adj)).any()
+    assert g.current_results(0) == set()
+
+
+def test_expire_keeps_edge_just_inside_boundary():
+    g = _engine(10.0)
+    g.insert("u", "v", "a", 5.001)
+    g.expire(15.0)                       # low = 5.0 < 5.001: retained
+    assert np.isfinite(np.asarray(g.batched_arrays.adj)).any()
+    assert g.current_results(0) == {("u", "v")}
+
+
+def test_emit_excludes_bottleneck_at_exact_boundary():
+    """The read-time validity threshold uses the same strict >: advancing
+    the clock to exactly ts + w (no expiry pass!) kills the pair's
+    emit-view while a younger pair survives."""
+    g = _engine(10.0)
+    g.insert("u", "v", "a", 5.0)
+    g.insert("x", "y", "a", 15.0)        # clock -> 15.0, low -> 5.0
+    assert g.current_results(0) == {("x", "y")}
+    # the emitted HISTORY is monotone and keeps (u, v); only the
+    # current-window view drops it
+    assert ("u", "v") in g.per_query_results[0]
+
+
+def test_delete_invalidation_respects_boundary():
+    """A pair whose bottleneck sits exactly on the boundary is already
+    invalid, so deleting its edge at that instant reports NO invalidation
+    (nothing valid became invalid)."""
+    g = _engine(10.0)
+    g.insert("u", "v", "a", 5.0)
+    inv = g.delete("u", "v", "a", 15.0)  # low = 5.0 at the delete's clock
+    assert inv[0] == set()
+    # same schedule, one tick earlier: the pair is still valid -> reported
+    g2 = _engine(10.0)
+    g2.insert("u", "v", "a", 5.0)
+    inv2 = g2.delete("u", "v", "a", 14.999)
+    assert inv2[0] == {("u", "v")}
+
+
+def test_batched_valid_pairs_strict_threshold():
+    """Unit pin of the kernel-side comparison: best == low is invalid."""
+    q, n, k = 1, 3, 2
+    dist = jnp.full((q, n, n, k), NEG_INF)
+    dist = dist.at[0, 0, 1, 1].set(5.0)
+    finals = jnp.zeros((q, k), bool).at[0, 1].set(True)
+    at_low = batched_valid_pairs(dist, finals, jnp.asarray([5.0]))
+    below_low = batched_valid_pairs(dist, finals, jnp.asarray([4.999]))
+    assert not bool(at_low[0, 0, 1])
+    assert bool(below_low[0, 0, 1])
+
+
+def test_bucket_encode_boundary_is_dead():
+    """The bucket grid anchors its origin at (a grid-aligned) now - w_max:
+    a timestamp a full window old encodes to level 0 and decodes to -inf,
+    while anything above the origin stays finite. Pick now/w so the origin
+    lands exactly on now - w (no floor slack)."""
+    be = BucketBackend(n_levels=5, use_pallas=False)
+    now, w = jnp.float32(14.0), jnp.float32(10.0)   # step 2, origin = 4.0
+    x = jnp.asarray([4.0, 3.0, 4.5, 14.0, NEG_INF], jnp.float32)
+    lvl = be.encode(x, now, w)
+    assert lvl[0] == 0 and lvl[1] == 0 and lvl[4] == 0   # at/below origin
+    assert lvl[2] > 0 and lvl[3] > 0
+    dec = np.asarray(be.decode_state(lvl, now, w))
+    assert dec[0] == NEG_INF and dec[1] == NEG_INF and dec[4] == NEG_INF
+    assert np.isfinite(dec[2]) and np.isfinite(dec[3])
