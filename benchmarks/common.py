@@ -4,7 +4,7 @@ from __future__ import annotations
 
 import re
 import time
-from typing import Callable, Dict, Iterable, List
+from typing import Callable, Dict, List
 
 # Table 2: most common real-world RPQs (k=3 labels, matching the SO graph)
 PAPER_QUERIES: Dict[str, str] = {

@@ -4,7 +4,6 @@ and the dense TPU engine on CPU) — the paper's headline table."""
 from __future__ import annotations
 
 import time
-from typing import Dict
 
 from repro.core.automaton import compile_query
 from repro.core.engine import DenseRPQEngine

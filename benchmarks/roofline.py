@@ -13,7 +13,6 @@ N = active params. Emits CSV and writes results/roofline.csv.
 from __future__ import annotations
 
 import json
-import math
 import os
 from typing import Dict, List
 

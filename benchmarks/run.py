@@ -35,7 +35,28 @@ def main() -> None:
     ap.add_argument("--fast", action="store_true", help="smaller sizes")
     ap.add_argument("--no-summaries", action="store_true",
                     help="skip writing BENCH_*.json result summaries")
+    ap.add_argument("--check", action="store_true",
+                    help="run the dispatch-hygiene analyzer on src/ first "
+                         "and refuse to time a dirty tree")
     args = ap.parse_args()
+
+    if args.check:
+        # a tree that breaks its own dispatch discipline (host syncs in
+        # traced code, un-bucketed capacities — docs/invariants.md) times
+        # the wrong program; gate before paying for any compile
+        from repro.analysis.analyzer import format_text, run as run_analysis
+
+        repo_src = os.path.join(
+            os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+            "src")
+        findings, n_files = run_analysis([repo_src])
+        live = [f for f in findings if not f.suppressed]
+        if live:
+            print(format_text(findings, n_files))
+            raise SystemExit(
+                f"--check: {len(live)} unsuppressed finding(s); refusing "
+                "to benchmark a dirty tree")
+        print(f"--check: analyzer clean over {n_files} file(s)")
 
     from . import (fig4_throughput, fig5_index_size, fig6_window,
                    fig7_query_size, fig10_deletions, fig11_vs_batch,

@@ -1,0 +1,22 @@
+"""Dispatch-hygiene static analysis for the streaming-RPQ engine.
+
+An AST-based rule engine that mechanically enforces the invariants six
+PRs of layering produced but nothing checked: jitted dispatch paths stay
+host-sync-free (R1), traced-shape capacities ride the pow2/x4 bucketing
+that keeps the compile cache shared (R2), Pallas kernels take their block
+sizes from ``pick_block_sizes`` and keep index maps pure (R3), every
+``ContractionBackend`` implements the full hook set and every string
+backend name resolves against ``KNOWN_BACKENDS`` (R4), and FIFO/counter
+paths stay amortized-O(1) and lazy (R5).
+
+Pure stdlib — importing or running this package never imports jax, so the
+CI gate runs on a bare interpreter. See docs/invariants.md for the rule
+catalog and ``# repro: noqa[RULE]`` suppression syntax.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.analysis src/ --format=json
+"""
+from .analyzer import Finding, Module, Project, load_project, run  # noqa: F401
+
+__all__ = ["Finding", "Module", "Project", "load_project", "run"]

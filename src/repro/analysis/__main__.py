@@ -1,0 +1,38 @@
+"""CLI: ``python -m repro.analysis [paths...] [--format=text|json]``.
+
+Exits non-zero iff any unsuppressed finding remains — the CI `analysis`
+job and ``benchmarks/run.py --check`` both gate on this.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import Optional, Sequence
+
+from .analyzer import format_json, format_text, run
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Dispatch-hygiene static analysis (rules R1-R5; see "
+                    "docs/invariants.md)")
+    ap.add_argument("paths", nargs="*", default=None,
+                    help="files/directories to analyze (default: src)")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--rules", default="",
+                    help="comma-separated rule subset, e.g. R1,R5")
+    args = ap.parse_args(argv)
+
+    paths = args.paths or ["src"]
+    rules = [r for r in args.rules.split(",") if r.strip()] or None
+    findings, n_files = run(paths, rules)
+    if args.format == "json":
+        print(format_json(findings, n_files))
+    else:
+        print(format_text(findings, n_files))
+    return 1 if any(not f.suppressed for f in findings) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

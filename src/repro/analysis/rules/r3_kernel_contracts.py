@@ -1,0 +1,97 @@
+"""R3 — kernel contracts (scope: ``kernels/``).
+
+Invariant: Pallas block sizes come from ``pick_block_sizes`` (the shared
+shape-aware table in kernels/maxmin/maxmin.py), not hand-written
+literals, so every kernel follows the same VMEM-budget and
+lane-alignment rules and the autotune campaign (ROADMAP) has a single
+table to retune. And grid index maps must be pure functions of the grid
+indices — an index map that closes over module state changes meaning
+under the jit compile cache (the lambda identity is the cache key, its
+captured value is not).
+
+Flagged, in files under ``kernels/``:
+
+* int literals >= 8 inside the block-shape tuple of ``pl.BlockSpec`` or
+  a VMEM scratch shape (``pltpu.VMEM``) — small structural dims (1, a
+  level count) stay legal, real tile sizes must be named values derived
+  from ``pick_block_sizes``
+* ``BlockSpec`` index-map lambdas whose body reads a module-level name
+  (captured module state)
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Set
+
+from ..analyzer import Finding, Module, Project
+
+RULE = "R3"
+TITLE = "kernel contracts (literal block sizes, stateful index maps)"
+
+_SHAPE_CTORS = ("BlockSpec", "VMEM", "SMEM", "ANY")
+_MIN_TILE_LITERAL = 8
+
+
+def _module_level_names(mod: Module) -> Set[str]:
+    names: Set[str] = set()
+    for n in mod.tree.body:
+        if isinstance(n, ast.Assign):
+            for t in n.targets:
+                if isinstance(t, ast.Name):
+                    names.add(t.id)
+        elif isinstance(n, (ast.AnnAssign, ast.AugAssign)):
+            if isinstance(n.target, ast.Name):
+                names.add(n.target.id)
+    return names
+
+
+def _ctor_name(call: ast.Call) -> str:
+    f = call.func
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    if isinstance(f, ast.Name):
+        return f.id
+    return ""
+
+
+def check(project: Project) -> Iterator[Finding]:
+    for mod in project:
+        if "kernels/" not in mod.relpath:
+            continue
+        globals_ = _module_level_names(mod)
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            ctor = _ctor_name(node)
+            if ctor not in _SHAPE_CTORS:
+                continue
+            shape = node.args[0] if node.args else None
+            for kw in node.keywords:
+                if kw.arg == "block_shape":
+                    shape = kw.value
+            if isinstance(shape, ast.Tuple):
+                for elt in shape.elts:
+                    if (isinstance(elt, ast.Constant)
+                            and isinstance(elt.value, int)
+                            and elt.value >= _MIN_TILE_LITERAL):
+                        yield Finding(
+                            RULE, mod.relpath, elt.lineno, elt.col_offset,
+                            f"literal tile size {elt.value} in "
+                            f"`{ctor}` shape — block sizes must come from "
+                            "pick_block_sizes")
+            if ctor != "BlockSpec":
+                continue
+            index_map = node.args[1] if len(node.args) > 1 else None
+            for kw in node.keywords:
+                if kw.arg == "index_map":
+                    index_map = kw.value
+            if not isinstance(index_map, ast.Lambda):
+                continue
+            params = {a.arg for a in index_map.args.args}
+            for n in ast.walk(index_map.body):
+                if (isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load)
+                        and n.id not in params and n.id in globals_):
+                    yield Finding(
+                        RULE, mod.relpath, n.lineno, n.col_offset,
+                        f"index map captures module state `{n.id}` — index "
+                        "maps must be pure functions of the grid indices")

@@ -1,0 +1,164 @@
+"""R4 — backend conformance.
+
+Invariant: the ``ContractionBackend`` hook set is the engine's hardware
+ABI — every subclass must define the full set (a subclass that forgets
+``contract_rows`` silently inherits the base and only breaks on the
+frontier path, possibly only on the mesh), and every *string* backend
+reference must resolve against ``KNOWN_BACKENDS``. The motivating bug is
+PR 4's ``"palas"`` typo: a misspelled backend name silently fell back to
+the jnp oracle and the Pallas kernels never ran — benchmarks measured
+the wrong engine.
+
+Flagged, project-wide:
+
+* a class whose bases include ``ContractionBackend`` for which any of
+  the hook set ``contract`` / ``contract_rows`` / ``contract_batched`` /
+  ``prepare_state`` / ``decode_state`` / ``zero`` / ``exact`` fails to
+  resolve concretely: hooks the base leaves abstract (body raises
+  ``NotImplementedError``) must be defined in the subclass; hooks with a
+  concrete base default (the identity representation, the generic
+  gather) may be inherited
+* a string literal backend reference (``backend="..."`` keyword or
+  default, or the first argument of ``resolve_backend``) not in
+  ``KNOWN_BACKENDS`` — read from ``core/backend.py``'s AST when present
+  so the rule tracks the real registry
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Set, Tuple
+
+from ..analyzer import Finding, Project, dotted
+
+RULE = "R4"
+TITLE = "backend conformance (hook set, KNOWN_BACKENDS resolution)"
+
+REQUIRED_HOOKS = ("contract", "contract_rows", "contract_batched",
+                  "prepare_state", "decode_state", "zero", "exact")
+_FALLBACK_KNOWN = ("jnp", "pallas", "mxu_bucket")
+
+
+def _known_backends(project: Project) -> Tuple[str, ...]:
+    mod = project.by_suffix("core/backend.py")
+    if mod is None:
+        return _FALLBACK_KNOWN
+    for n in mod.tree.body:
+        if isinstance(n, ast.Assign):
+            for t in n.targets:
+                if isinstance(t, ast.Name) and t.id == "KNOWN_BACKENDS":
+                    if isinstance(n.value, (ast.Tuple, ast.List)):
+                        vals = tuple(
+                            e.value for e in n.value.elts
+                            if isinstance(e, ast.Constant)
+                            and isinstance(e.value, str))
+                        if vals:
+                            return vals
+    return _FALLBACK_KNOWN
+
+
+def _class_defines(cls: ast.ClassDef) -> Set[str]:
+    names: Set[str] = set()
+    for n in cls.body:
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            names.add(n.name)
+        elif isinstance(n, ast.Assign):
+            names.update(t.id for t in n.targets if isinstance(t, ast.Name))
+        elif isinstance(n, ast.AnnAssign) and isinstance(n.target, ast.Name):
+            names.add(n.target.id)
+    return names
+
+
+def _raises_not_implemented(fn: ast.AST) -> bool:
+    for n in ast.walk(fn):
+        if isinstance(n, ast.Raise) and n.exc is not None:
+            exc = n.exc.func if isinstance(n.exc, ast.Call) else n.exc
+            if dotted(exc).rsplit(".", 1)[-1] == "NotImplementedError":
+                return True
+    return False
+
+
+def _abstract_hooks(project: Project) -> Set[str]:
+    """Hooks the base class leaves abstract — a subclass MUST define
+    these; the rest have concrete base defaults and may be inherited.
+    With no base class in scope (rule fixtures), the full set is
+    required."""
+    for mod in project:
+        for node in ast.walk(mod.tree):
+            if (isinstance(node, ast.ClassDef)
+                    and node.name == "ContractionBackend"):
+                concrete: Set[str] = set()
+                for n in node.body:
+                    if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                        if (n.name in REQUIRED_HOOKS
+                                and not _raises_not_implemented(n)):
+                            concrete.add(n.name)
+                    elif isinstance(n, ast.Assign):
+                        concrete.update(
+                            t.id for t in n.targets
+                            if isinstance(t, ast.Name)
+                            and t.id in REQUIRED_HOOKS)
+                    elif (isinstance(n, ast.AnnAssign)
+                          and isinstance(n.target, ast.Name)
+                          and n.target.id in REQUIRED_HOOKS
+                          and n.value is not None):
+                        concrete.add(n.target.id)
+                return set(REQUIRED_HOOKS) - concrete
+    return set(REQUIRED_HOOKS)
+
+
+def check(project: Project) -> Iterator[Finding]:
+    known = _known_backends(project)
+    must_define = _abstract_hooks(project)
+    for mod in project:
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.ClassDef):
+                if not any(
+                        dotted(b).rsplit(".", 1)[-1] == "ContractionBackend"
+                        for b in node.bases):
+                    continue
+                missing = [h for h in REQUIRED_HOOKS
+                           if h in must_define
+                           and h not in _class_defines(node)]
+                if missing:
+                    yield Finding(
+                        RULE, mod.relpath, node.lineno, node.col_offset,
+                        f"backend `{node.name}` missing hook(s) "
+                        f"{', '.join(missing)} — every abstract "
+                        "ContractionBackend hook must be defined")
+            elif isinstance(node, ast.Call):
+                callee = dotted(node.func).rsplit(".", 1)[-1]
+                if (callee == "resolve_backend" and node.args
+                        and isinstance(node.args[0], ast.Constant)
+                        and isinstance(node.args[0].value, str)
+                        and node.args[0].value not in known):
+                    yield Finding(
+                        RULE, mod.relpath, node.args[0].lineno,
+                        node.args[0].col_offset,
+                        f"backend name '{node.args[0].value}' not in "
+                        f"KNOWN_BACKENDS {known}")
+                for kw in node.keywords:
+                    if (kw.arg == "backend"
+                            and isinstance(kw.value, ast.Constant)
+                            and isinstance(kw.value.value, str)
+                            and kw.value.value not in known):
+                        yield Finding(
+                            RULE, mod.relpath, kw.value.lineno,
+                            kw.value.col_offset,
+                            f"backend name '{kw.value.value}' not in "
+                            f"KNOWN_BACKENDS {known}")
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                args = node.args
+                pairs = list(zip(reversed(args.args), reversed(args.defaults)))
+                pairs += [(a, d) for a, d in zip(args.kwonlyargs,
+                                                 args.kw_defaults)
+                          if d is not None]
+                for arg, default in pairs:
+                    if (arg.arg == "backend"
+                            and isinstance(default, ast.Constant)
+                            and isinstance(default.value, str)
+                            and default.value not in known):
+                        yield Finding(
+                            RULE, mod.relpath, default.lineno,
+                            default.col_offset,
+                            f"default backend '{default.value}' not in "
+                            f"KNOWN_BACKENDS {known}")

@@ -1,0 +1,119 @@
+"""R5 — accounting hygiene.
+
+Two bug classes, both shipped and fixed in past PRs:
+
+* **Quadratic FIFO drains** (PR 6): ``list.pop(0)`` shifts the whole
+  list — O(n) per pop, O(n²) per drain. Service queues and the
+  async-decode FIFO are deques now; any ``.pop(0)`` / ``.insert(0, _)``
+  reintroduces the class.
+* **Eager counter flushes**: the executors queue device scalars
+  (``_pending_counts``) and convert them only at the sanctioned flush
+  sites (``_flush_counts`` / ``_consume_count`` / ``_consume_frontier``)
+  so the hot ingest path never blocks on a device→host sync. A
+  ``float(...now)`` or ``np.asarray(rounds)`` anywhere else serializes
+  the async dispatch chain behind a telemetry read — the engine keeps a
+  host clock mirror (``host_now``) for exactly this.
+
+Flagged, project-wide:
+
+* ``x.pop(0)`` and ``x.insert(0, ...)``
+* ``float()`` / ``int()`` / ``bool()`` / ``np.asarray`` / ``np.float32``
+  over an expression containing a ``.now`` attribute read, unless the
+  expression routes through ``jax.device_get`` (an explicit, sanctioned
+  sync) or the enclosing function is a sanctioned flush site
+* ``np.asarray`` of a name matching ``*rounds``/``*counts`` outside the
+  sanctioned flush sites
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Iterator, Optional
+
+from ..analyzer import Finding, Module, Project, dotted
+
+RULE = "R5"
+TITLE = "accounting hygiene (FIFO drains, eager device-scalar reads)"
+
+_SANCTIONED_FNS = ("_flush_counts", "_consume_count", "_consume_frontier")
+_COUNTER_NAME_RE = re.compile(r"(rounds|counts)$")
+_CONVERTERS = ("float", "int", "bool", "np.asarray", "np.array",
+               "np.float32", "np.float64", "numpy.asarray")
+
+
+def _contains_now_attr(node: ast.AST) -> bool:
+    return any(isinstance(n, ast.Attribute) and n.attr == "now"
+               for n in ast.walk(node))
+
+
+def _contains_explicit_sync(node: ast.AST) -> bool:
+    for n in ast.walk(node):
+        if isinstance(n, ast.Call):
+            f = dotted(n.func).rsplit(".", 1)[-1]
+            if f in ("device_get", "block_until_ready"):
+                return True
+        if isinstance(n, ast.Attribute) and n.attr == "block_until_ready":
+            return True
+    return False
+
+
+def _enclosing_fn(mod: Module, node: ast.AST) -> Optional[str]:
+    """Innermost function qualname containing the node's line (the func
+    index spans are enough — rules don't need a parent map)."""
+    best, best_span = None, None
+    for qual, fn in mod.funcs.items():
+        end = getattr(fn, "end_lineno", fn.lineno)
+        if fn.lineno <= node.lineno <= end:
+            span = end - fn.lineno
+            if best_span is None or span < best_span:
+                best, best_span = qual, span
+    return best
+
+
+def check(project: Project) -> Iterator[Finding]:
+    for mod in project:
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            func = node.func
+            # -- FIFO drains ----------------------------------------------
+            if isinstance(func, ast.Attribute):
+                if (func.attr == "pop" and node.args
+                        and isinstance(node.args[0], ast.Constant)
+                        and node.args[0].value == 0):
+                    yield Finding(
+                        RULE, mod.relpath, node.lineno, node.col_offset,
+                        "`pop(0)` is O(n) per pop (O(n^2) per drain) — "
+                        "use collections.deque.popleft()")
+                    continue
+                if (func.attr == "insert" and node.args
+                        and isinstance(node.args[0], ast.Constant)
+                        and node.args[0].value == 0):
+                    yield Finding(
+                        RULE, mod.relpath, node.lineno, node.col_offset,
+                        "`insert(0, ...)` shifts the whole list — use "
+                        "collections.deque.appendleft()")
+                    continue
+            # -- eager device-scalar reads --------------------------------
+            conv = dotted(func)
+            if conv not in _CONVERTERS or not node.args:
+                continue
+            arg = node.args[0]
+            enclosing = _enclosing_fn(mod, node)
+            fn_name = (enclosing or "").rsplit(".", 1)[-1]
+            if fn_name in _SANCTIONED_FNS:
+                continue
+            if _contains_now_attr(arg) and not _contains_explicit_sync(arg):
+                yield Finding(
+                    RULE, mod.relpath, node.lineno, node.col_offset,
+                    f"eager `{conv}()` of the device stream clock "
+                    "serializes async dispatch — read the host mirror "
+                    "(`host_now`) or go through jax.device_get at a "
+                    "flush site")
+            elif (conv.endswith("asarray") and isinstance(arg, ast.Name)
+                  and _COUNTER_NAME_RE.search(arg.id)):
+                yield Finding(
+                    RULE, mod.relpath, node.lineno, node.col_offset,
+                    f"eager counter read `{conv}({arg.id})` outside the "
+                    "sanctioned flush sites — queue it via _account and "
+                    "convert in _flush_counts")

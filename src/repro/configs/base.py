@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional, Tuple
+from typing import Tuple
 
 
 @dataclasses.dataclass(frozen=True)

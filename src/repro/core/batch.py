@@ -12,7 +12,7 @@ Two roles:
 from __future__ import annotations
 
 from collections import deque
-from typing import Dict, Iterable, List, Set, Tuple
+from typing import Iterable, List, Set, Tuple
 
 from .automaton import DFA
 from .reference import SnapshotGraph

@@ -332,6 +332,14 @@ class BatchedDenseRPQEngine:
         return self.executor.arrays
 
     @property
+    def host_now(self) -> float:
+        """Host mirror of the device stream clock — identical by
+        construction (both advance by the max event time seen), so
+        maintenance and telemetry paths read this instead of blocking the
+        async dispatch chain on ``arrays.now``."""
+        return self._host_now
+
+    @property
     def total_rounds(self) -> int:
         """Global closure iterations (max over queries per dispatch)."""
         return self.executor.rounds_total
@@ -686,7 +694,7 @@ class BatchedDenseRPQEngine:
         """Slide-boundary maintenance: adjacency masking + slot recycling.
         Safe with deferred decodes outstanding (they snapshot the interner);
         the device dispatch is sequenced after the pending ingests."""
-        t = tau if tau is not None else float(self.executor.arrays.now)
+        t = tau if tau is not None else self._host_now
         self._host_now = max(self._host_now, t)
         live = self.executor.expire(t, self.max_window)
         self._recycle(live)
@@ -780,7 +788,10 @@ class BatchedDenseRPQEngine:
         """(active roots, populated (x,v,s) entries) — Fig. 5 analogue.
         `qi=None` aggregates over the whole group."""
         a = self.executor.arrays
-        low = np.asarray(a.now - self.windows)  # (Q,)
+        # host clock mirror instead of a.now: windows is static (no
+        # pending dispatch feeds it), so only the dist read below has to
+        # wait on the in-flight closure
+        low = self._host_now - np.asarray(self.windows)  # (Q,)
         pop = np.asarray(a.dist) > low[:, None, None, None]
         if qi is not None:
             pop = pop[qi : qi + 1]
@@ -845,7 +856,6 @@ class BatchedDenseRPQEngine:
         self._rebuild_tables()
         self._repad_arrays()
         a = self.executor.arrays
-        n = self.n_slots
         adj = np.full(tuple(a.adj.shape), NEG_INF, np.float32)
         for li_ck, lab in enumerate(labels):
             adj[self._label_index[lab], :ck_n, :ck_n] = adj_ck[li_ck]
@@ -1084,7 +1094,7 @@ def make_churn_oracle(
     oracle = DenseRPQEngine(dfa, window, n_slots=n_slots,
                             batch_size=max(1, len(retained)),
                             path_semantics=path_semantics)
-    oracle.expire(float(live_group.batched_arrays.now))
+    oracle.expire(live_group.host_now)
     seed = oracle.insert_batch(retained) if retained else set()
     oracle.batch_size = 1
     return oracle, seed

@@ -24,7 +24,6 @@ validate the result sets against the brute-force algorithms in
 """
 from __future__ import annotations
 
-import math
 from typing import Dict, Iterable, List, Optional, Set, Tuple
 
 from .automaton import DFA

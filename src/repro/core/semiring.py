@@ -37,7 +37,6 @@ at frontier prices instead of resetting every row.
 """
 from __future__ import annotations
 
-import functools
 from typing import List, NamedTuple, Optional, Sequence, Tuple
 
 import jax

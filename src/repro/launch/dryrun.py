@@ -24,7 +24,6 @@ import traceback
 from typing import Any, Dict, List
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from ..configs import ARCH_NAMES, SHAPES, get_config, shape_applicable

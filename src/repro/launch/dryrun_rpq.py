@@ -27,6 +27,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..core.automaton import compile_query
 from ..core.backend import BucketBackend, resolve_backend
+from ..core.engine import _round_up
 from ..core.semiring import (NEG_INF, BatchedTransitionTable, TransitionTable,
                              relax_round)
 
@@ -218,7 +219,7 @@ def run_rpq_cell(name: str, n_slots: int, query: str, v_chunk: int,
         n_transitions = sum(len(d.transitions()) for d in dfas)
         q_axes = ("pod", "data") if multi_pod else ("data",)
         n_lane_shards = int(np.prod([mesh.shape[a] for a in q_axes]))
-        q_cap = len(dfas) + (-len(dfas)) % n_lane_shards
+        q_cap = _round_up(len(dfas), n_lane_shards)
         if suffix == "frontier":
             round_fn, arg_specs, arg_shardings, dist_sh = \
                 frontier_round_lowering(mesh, btt, q_cap, n_slots,

@@ -12,7 +12,7 @@ from typing import Any, Dict, Tuple
 import jax
 import jax.numpy as jnp
 
-from ..configs.base import ModelConfig, ShapeConfig
+from ..configs.base import ShapeConfig
 from ..models.transformer import Model
 
 DECODE_HEADROOM = 512  # keeps cache seq divisible by the batch axes (32-way)

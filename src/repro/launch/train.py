@@ -10,14 +10,12 @@ from __future__ import annotations
 
 import argparse
 import time
-from functools import partial
-from typing import Any, Callable, Dict, Tuple
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
 from ..configs import get_config
-from ..configs.base import ModelConfig
 from ..models.transformer import Model
 from ..optim.adamw import AdamWConfig, adamw_update, init_adamw
 

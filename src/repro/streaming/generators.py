@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import collections
 import random
-from typing import List, Optional, Sequence
+from typing import List, Sequence
 
 from .stream import SGT, Stream
 

@@ -126,7 +126,7 @@ def test_moe_capacity_conservation():
 def test_padded_heads_are_inert():
     """tp-padded head slots must not change the model function."""
     cfg = get_config("qwen1.5-4b").reduced()  # 4 heads reduced
-    m1 = Model(cfg, tp=1)   # no padding
+    Model(cfg, tp=1)        # the unpadded twin must still construct
     m8 = Model(cfg, tp=8)   # pads 4 -> 8 heads
     p8 = m8.init(jax.random.PRNGKey(3))
     batch = _batch_for(m8, cfg, key=3)

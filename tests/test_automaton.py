@@ -1,12 +1,11 @@
 """Automaton pipeline tests: parser, Thompson NFA, DFA, Hopcroft, RSPQ meta."""
 import re as pyre
 
-import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.core import regex as rx
-from repro.core.automaton import compile_query, suffix_containment, thompson, determinize, hopcroft_minimize
+from repro.core.automaton import compile_query
 
 
 # ---------------------------------------------------------------------------

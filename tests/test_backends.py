@@ -17,7 +17,6 @@ regression ("palas" used to silently run the jnp reference).
 """
 import random
 
-import jax
 import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
@@ -266,7 +265,7 @@ def test_bucket_results_superset_with_bounded_boundary_error():
             _random_events(rng, 6, 30, 80)):
         if op == "+":
             fr = ref.insert(u, v, lab, ts)
-            fe = eng.insert(u, v, lab, ts)
+            eng.insert(u, v, lab, ts)
         else:
             ref.delete(u, v, lab, ts)
             eng.delete(u, v, lab, ts)

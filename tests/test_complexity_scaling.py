@@ -1,13 +1,9 @@
 """Table 1 complexity checks + paper-behaviour micro-validations that are
 cheap enough for the default suite (the heavier scaling test lives in
 test_system.py)."""
-import math
 import random
 
-import pytest
-
 from repro.core import RAPQ, compile_query
-from repro.core.automaton import suffix_containment
 from repro.streaming.generators import gmark_like
 
 

@@ -17,7 +17,7 @@ import tempfile
 import jax
 import pytest
 
-from repro.core import RAPQ, RSPQ, compile_query
+from repro.core import RSPQ, compile_query
 from repro.core.engine import BatchedDenseRPQEngine, DenseRPQEngine, RegisteredQuery
 from repro.distributed.executor import MeshExecutor
 from repro.streaming.generators import so_like, with_deletions

@@ -1,7 +1,6 @@
 """Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracles across
 shape/dtype sweeps + hypothesis property tests on semiring identities."""
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 from _hypothesis_compat import given, settings, st

@@ -12,7 +12,6 @@ from repro.core import (
     RAPQ,
     RSPQ,
     batch_rapq,
-    batch_rspq_bruteforce,
     compile_query,
     snapshot_from_edges,
     streaming_oracle,

@@ -23,7 +23,6 @@ def test_service_mixed_workload_and_deletions():
     svc.ingest(stream)
     assert svc.results("arb") == svc.results("arb_ref")
     # containment-property query: dense simple == dense arbitrary minus diag
-    arb_pairs = {p for p in svc.results("arb")}
     assert all(a != b for (a, b) in svc.results("smp"))
     assert svc.stats["arb"].tuples == len(stream)
 
