@@ -14,11 +14,34 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import subprocess
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
 
 
-def _write_summary(name: str, result) -> None:
+def _assert_tracked(path: str, allow_untracked: bool) -> None:
+    """A BENCH summary that exists only in a working tree silently drops
+    out of the cross-PR perf trajectory (the whole point of the files).
+    Fail LOUDLY when the file is not under version control instead of
+    letting the next ``git clean`` erase the datapoint."""
+    try:
+        proc = subprocess.run(
+            ["git", "ls-files", "--error-unmatch", os.path.abspath(path)],
+            capture_output=True, cwd=os.path.dirname(os.path.abspath(path)))
+    except (OSError, FileNotFoundError):
+        return  # no git in the environment: nothing to enforce
+    if proc.returncode != 0:
+        msg = (f"{path}: BENCH summary is not tracked by git — `git add` it "
+               "so the perf trajectory keeps the datapoint (or rerun with "
+               "--allow-untracked)")
+        if allow_untracked:
+            print(f"[warn] {msg}")
+        else:
+            print(f"[error] {msg}")
+            raise SystemExit(2)
+
+
+def _write_summary(name: str, result, allow_untracked: bool = False) -> None:
     """BENCH_<name>.json next to the dry-run artifacts. Non-JSON-able
     leaves (device arrays, engines) degrade to their repr — the summary is
     for trend diffs, not restoration."""
@@ -27,6 +50,7 @@ def _write_summary(name: str, result) -> None:
     with open(path, "w") as f:
         json.dump({"name": name, "result": result}, f, indent=1,
                   default=lambda o: repr(o), sort_keys=True)
+    _assert_tracked(path, allow_untracked)
 
 
 def main() -> None:
@@ -35,6 +59,9 @@ def main() -> None:
     ap.add_argument("--fast", action="store_true", help="smaller sizes")
     ap.add_argument("--no-summaries", action="store_true",
                     help="skip writing BENCH_*.json result summaries")
+    ap.add_argument("--allow-untracked", action="store_true",
+                    help="downgrade the untracked-BENCH-summary error to a "
+                         "warning (first run of a new figure, scratch trees)")
     ap.add_argument("--check", action="store_true",
                     help="run the dispatch-hygiene analyzer on src/ first "
                          "and refuse to time a dirty tree")
@@ -62,7 +89,8 @@ def main() -> None:
                    fig7_query_size, fig10_deletions, fig11_vs_batch,
                    fig12_multi_query, fig13_query_churn,
                    fig14_sharded_engine, fig15_backend_shootout,
-                   fig16_frontier, fig17_deletions, roofline, table4_rspq)
+                   fig16_frontier, fig17_deletions, fig18_sparse_adjacency,
+                   roofline, table4_rspq)
 
     scale = 0.4 if args.fast else 1.0
     modules = [
@@ -91,6 +119,13 @@ def main() -> None:
         # asserted inside)
         ("fig17", lambda: fig17_deletions.run(n_edges=int(200 * scale),
                                               executors=("local",))),
+        # fig18: padded-ELL adjacency vs the dense (L, N, N) slab — per-stage
+        # ingest split at the anchors, ELL-only measured at N=100k where the
+        # dense slab is infeasible by construction (identity asserted inside)
+        ("fig18", lambda: fig18_sparse_adjacency.run(
+            anchors=tuple(int(a * scale) for a in (2048, 4096, 8192)),
+            reps=2 if args.fast else 3,
+            identity_edges=int(150 * scale))),
         ("roofline", roofline.run),
     ]
     print("name,us_per_call,derived")
@@ -99,7 +134,7 @@ def main() -> None:
             continue
         result = fn()
         if not args.no_summaries:
-            _write_summary(name, result)
+            _write_summary(name, result, args.allow_untracked)
 
 
 if __name__ == "__main__":

@@ -1,7 +1,8 @@
 """R2 — recompile hazards.
 
 Invariant: every traced-shape capacity (``f_cap``, ``frontier_cap``,
-``q_cap``, ``n_slots``, Q/K pads) is bucketed — pow2 growth via
+``q_cap``, ``n_slots``, Q/K pads, the ELL degree/spill-ring caps
+``ell_cap``/``spill_cap``) is bucketed — pow2 growth via
 ``_next_pow2``, multiple-round-up via ``_round_up``, or ×2 doubling of an
 already-bucketed value — so the jit compile cache is shared across
 capacity steps instead of recompiling per exact size. Raw capacity
@@ -38,7 +39,8 @@ RULE = "R2"
 TITLE = "recompile hazards (un-bucketed capacities, unhashable cache keys)"
 
 _CAP_RE = re.compile(
-    r"(?:^|_)(f_cap|frontier_cap|q_cap|k_cap|n_cap|n_slots|q_pad|k_pad)$")
+    r"(?:^|_)(f_cap|frontier_cap|q_cap|k_cap|n_cap|n_slots|q_pad|k_pad"
+    r"|ell_cap|spill_cap)$")
 _BUCKET_HELPERS = {
     "_next_pow2", "next_pow2", "_round_up", "round_up", "pick_block_sizes",
 }

@@ -56,8 +56,10 @@ import jax.numpy as jnp
 
 from ..kernels.bucket.bucket import bucket_maxmin_fused
 from ..kernels.bucket.ref import bucket_maxmin_ref
+from ..kernels.ell.ops import ell_gather_contract
 from ..kernels.maxmin.maxmin import maxmin_matmul, maxmin_matmul_fused
 from ..kernels.maxmin.ref import maxmin_matmul_ref
+from .sparse_adj import EllAdjacency
 
 NEG_INF = float("-inf")
 
@@ -141,6 +143,50 @@ class ContractionBackend:
         return jnp.where(mask[:, None, None], contrib,
                          jnp.asarray(self.zero, contrib.dtype))
 
+    # -- ELL (blocked-sparse adjacency) contraction --------------------------
+    #
+    # The ``adj_layout="ell"`` axis: same contractions, but the adjacency
+    # operand is an :class:`~repro.core.sparse_adj.EllAdjacency` instead of
+    # the dense (L, N, N) slab. max/min never reassociates and free slots
+    # fold to :attr:`zero`, so every variant is bit-identical to running
+    # the dense hook on ``ell_to_dense(adj)`` — the conformance suite pins
+    # this per backend. Concrete on the base (the chunked jnp reference is
+    # exact on both the float and the int32-level lattice, so the bucket
+    # backend inherits it unchanged); :class:`PallasBackend` swaps in the
+    # fused gather-contract kernel.
+
+    def _fold_spill(self, contrib, d_s, ell: EllAdjacency, labs):
+        """Fold the spill ring into a gather-contract result: for ring
+        entries on transition j's label, ``contrib[j, :, dst] max=
+        min(d_s[j, :, src], spill_ts)``. Free ring entries carry
+        :attr:`zero` and annihilate."""
+        j, m, _ = contrib.shape
+        eff = jnp.where(ell.spill_lab[None, :] == labs[:, None],
+                        ell.spill_ts[None, :],
+                        jnp.asarray(self.zero, ell.spill_ts.dtype))  # (J, S)
+        d_sp = d_s[:, :, ell.spill_src]                              # (J, M, S)
+        cand = jnp.minimum(d_sp, eff[:, None, :].astype(d_s.dtype))
+        dst = jnp.broadcast_to(ell.spill_dst[None, None, :], cand.shape)
+        return contrib.at[jnp.arange(j)[:, None, None],
+                          jnp.arange(m)[None, :, None], dst].max(cand)
+
+    def contract_rows_ell(self, d_s, ell: EllAdjacency, labs) -> jnp.ndarray:
+        """Batched maxmin over u against ELL rows: d_s (J, M, N)[x, u] x
+        the per-label slot rows of ``ell`` -> (J, M, N)[x, v], O(M*N*E)
+        work instead of the dense O(M*N*N)."""
+        contrib = ell_gather_contract(d_s, ell.idx[labs], ell.ts[labs],
+                                      zero=self.zero, use_pallas=False)
+        return self._fold_spill(contrib, d_s, ell, labs)
+
+    def contract_batched_ell(self, dist, ell: EllAdjacency, btt,
+                             mask) -> jnp.ndarray:
+        """ELL twin of :meth:`contract_batched` (same gather of dist, same
+        masking contract)."""
+        d_s = dist[btt.qidx, :, :, btt.src]           # (J, N, N) [x, u]
+        contrib = self.contract_rows_ell(d_s, ell, btt.lab)
+        return jnp.where(mask[:, None, None], contrib,
+                         jnp.asarray(self.zero, contrib.dtype))
+
     def __repr__(self) -> str:  # pragma: no cover - debugging nicety
         return f"<{type(self).__name__} {self.name!r}>"
 
@@ -199,6 +245,12 @@ class PallasBackend(ContractionBackend):
         return maxmin_matmul_fused(d_s, a_l, bm=self.bm, bn=self.bn,
                                    bk=self.bk,
                                    interpret=_interp_default(self.interpret))
+
+    def contract_rows_ell(self, d_s, ell: EllAdjacency, labs):
+        contrib = ell_gather_contract(
+            d_s, ell.idx[labs], ell.ts[labs], zero=self.zero,
+            use_pallas=True, interpret=_interp_default(self.interpret))
+        return self._fold_spill(contrib, d_s, ell, labs)
 
 
 class BucketBackend(ContractionBackend):
@@ -299,6 +351,13 @@ class BucketBackend(ContractionBackend):
         return lvl.astype(jnp.int32)
 
     def prepare_state(self, dist, adj, now=None, w_max=None):
+        if isinstance(adj, EllAdjacency):
+            # encode the timestamp leaves in place (idx/ptr pass through);
+            # free slots (-inf) land on level 0 == the bucket zero, so the
+            # free-slot-annihilation contract survives the representation
+            adj = adj._replace(ts=self.encode(adj.ts, now, w_max),
+                               spill_ts=self.encode(adj.spill_ts, now, w_max))
+            return self.encode(dist, now, w_max), adj
         return (self.encode(dist, now, w_max), self.encode(adj, now, w_max))
 
     def decode_state(self, dist, now=None, w_max=None):

@@ -269,6 +269,8 @@ class BatchedDenseRPQEngine:
         executor: Optional[Executor] = None,
         frontier: str = "off",   # off | on | auto (executor ingest mode)
         frontier_cap: int = 32,
+        adj_layout: str = "dense",  # dense | ell (executor adjacency layout)
+        ell_cap: int = 8,
     ):
         queries = list(queries)
         if not queries:
@@ -282,7 +284,8 @@ class BatchedDenseRPQEngine:
         # frontier kwargs configure the default executor only; an explicit
         # executor instance arrives already configured
         self.executor = executor if executor is not None else LocalExecutor(
-            backend, frontier=frontier, frontier_cap=frontier_cap)
+            backend, frontier=frontier, frontier_cap=frontier_cap,
+            adj_layout=adj_layout, ell_cap=ell_cap)
         self.backend = self.executor.backend
         self.lane_specs: List[Optional[RegisteredQuery]] = list(queries)
         # round lane capacity to the executor's shard quantum (inert padding
@@ -770,7 +773,7 @@ class BatchedDenseRPQEngine:
         query, because the closure fixpoint depends only on the final
         adjacency: the oracle construction of the churn conformance tests
         and benchmarks/fig13_query_churn.py."""
-        adj = np.asarray(self.executor.arrays.adj)
+        adj = np.asarray(jax.device_get(self.executor.dense_adj()))
         out: List[Tuple[object, object, str, float]] = []
         ls, us, vs = np.nonzero(adj > NEG_INF)
         for l, u, v in zip(ls.tolist(), us.tolist(), vs.tolist()):
@@ -806,7 +809,8 @@ class BatchedDenseRPQEngine:
         gathers)."""
         self._drain_pending()
         a = self.executor.arrays
-        return {"adj": a.adj, "dist": a.dist, "emitted": a.emitted, "now": a.now}
+        return {"adj": self.executor.dense_adj(), "dist": a.dist,
+                "emitted": a.emitted, "now": a.now}
 
     def load_state_arrays(self, state: Dict[str, jnp.ndarray]) -> None:
         """Exact-shape reload (same capacities). For checkpoints written by
@@ -856,7 +860,7 @@ class BatchedDenseRPQEngine:
         self._rebuild_tables()
         self._repad_arrays()
         a = self.executor.arrays
-        adj = np.full(tuple(a.adj.shape), NEG_INF, np.float32)
+        adj = np.full(self.executor.adj_shape, NEG_INF, np.float32)
         for li_ck, lab in enumerate(labels):
             adj[self._label_index[lab], :ck_n, :ck_n] = adj_ck[li_ck]
         dist = np.full(tuple(a.dist.shape), NEG_INF, np.float32)
@@ -1005,11 +1009,14 @@ class DenseRPQEngine(BatchedDenseRPQEngine):
         executor: Optional[Executor] = None,
         frontier: str = "off",
         frontier_cap: int = 32,
+        adj_layout: str = "dense",
+        ell_cap: int = 8,
     ):
         super().__init__(
             [RegisteredQuery("q0", dfa, float(window), path_semantics)],
             n_slots=n_slots, batch_size=batch_size, backend=backend,
             executor=executor, frontier=frontier, frontier_cap=frontier_cap,
+            adj_layout=adj_layout, ell_cap=ell_cap,
         )
         self.dfa = dfa
         self.window = float(window)
@@ -1020,13 +1027,19 @@ class DenseRPQEngine(BatchedDenseRPQEngine):
 
     @property
     def arrays(self) -> EngineArrays:
+        # adj is always presented as the canonical dense slab — legacy
+        # consumers (dryrun, examples) are layout-agnostic
         b = self.executor.arrays
-        return EngineArrays(b.adj, b.dist[0], b.emitted[0], b.now)
+        return EngineArrays(self.executor.dense_adj(), b.dist[0],
+                            b.emitted[0], b.now)
 
     @arrays.setter
     def arrays(self, a: EngineArrays) -> None:
+        adj = a.adj
+        if self.executor.adj_layout == "ell":
+            adj = self.executor.pack_adj(np.asarray(jax.device_get(adj)))
         self.executor.set_arrays(BatchedEngineArrays(
-            a.adj, a.dist[None], a.emitted[None], a.now
+            adj, a.dist[None], a.emitted[None], a.now
         ))
 
     @property

@@ -51,8 +51,26 @@ from .semiring import (
     frontier_closure,
     frontier_delete,
 )
+from .sparse_adj import (
+    EllAdjacency,
+    ell_clear_slots,
+    ell_delete,
+    ell_expire,
+    ell_incident,
+    ell_insert,
+    ell_max_degree,
+    ell_to_dense,
+    pack_ell,
+)
 
 FRONTIER_MODES = ("off", "on", "auto")
+
+#: adjacency representations: "dense" is the canonical (L, N, N) slab,
+#: "ell" the blocked-sparse padded-ELL rows + spill ring (sparse_adj.py).
+#: The layout is an executor-construction choice, invisible to results —
+#: every dispatch is bit-identical across layouts (the conformance suite
+#: and docs/invariants.md "bit-identical spill" pin this).
+ADJ_LAYOUTS = ("dense", "ell")
 
 
 def _next_pow2(n: int) -> int:
@@ -104,11 +122,28 @@ def apply_batch(arrays: BatchedEngineArrays, src, dst, lab, ts, mask,
     """The ingest dispatch prologue, shared by the dense and frontier
     forms on BOTH executors: fold the masked batch into the adjacency
     (newest-timestamp max) and advance the stream clock. Returns
-    ``(adj, now)``."""
+    ``(adj, now)``. The adjacency layout branches at TRACE time (an
+    EllAdjacency is a different pytree, so each layout owns its compile
+    cache entry): ELL scatters into row slots with in-dispatch spill on
+    per-row overflow — same max-fold, same clock."""
     eff_ts = jnp.where(mask, ts, NEG_INF)
-    adj = arrays.adj.at[lab, src, dst].max(eff_ts, mode="drop")
+    if isinstance(arrays.adj, EllAdjacency):
+        adj = ell_insert(arrays.adj, src, dst, lab, eff_ts, mask)
+    else:
+        adj = arrays.adj.at[lab, src, dst].max(eff_ts, mode="drop")
     now = jnp.maximum(arrays.now, jnp.maximum(jnp.max(eff_ts), ts_floor))
     return adj, now
+
+
+def drop_batch(arrays: BatchedEngineArrays, src, dst, lab, mask):
+    """The delete dispatch prologue on both layouts: clear the masked
+    batch's adjacency entries (every stored copy for ELL — row slots AND
+    ring). Returns the retained adjacency."""
+    if isinstance(arrays.adj, EllAdjacency):
+        return ell_delete(arrays.adj, src, dst, lab, mask)
+    drop = jnp.where(mask, jnp.asarray(NEG_INF, jnp.float32),
+                     arrays.adj[lab, src, dst])
+    return arrays.adj.at[lab, src, dst].set(drop, mode="drop")
 
 
 def emit_new(arrays: BatchedEngineArrays, dist, adj, now, finals_mask,
@@ -201,8 +236,7 @@ def _delete(
     now = jnp.maximum(arrays.now, ts_now)
     low = now - windows
     valid_before = batched_valid_pairs(arrays.dist, finals_mask, low)
-    drop = jnp.where(mask, jnp.asarray(NEG_INF, jnp.float32), arrays.adj[lab, src, dst])
-    adj = arrays.adj.at[lab, src, dst].set(drop, mode="drop")
+    adj = drop_batch(arrays, src, dst, lab, mask)
     dist0 = jnp.full_like(arrays.dist, NEG_INF)
     dist, rounds, qrounds = batched_closure(
         dist0, adj, btt, backend, query_mask=live_mask,
@@ -240,9 +274,7 @@ def _delete_frontier(
     now = jnp.maximum(arrays.now, ts_now)
     low = now - windows
     valid_before = batched_valid_pairs(arrays.dist, finals_mask, low)
-    drop = jnp.where(mask, jnp.asarray(NEG_INF, jnp.float32),
-                     arrays.adj[lab, src, dst])
-    adj = arrays.adj.at[lab, src, dst].set(drop, mode="drop")
+    adj = drop_batch(arrays, src, dst, lab, mask)
     dist, rounds, qrounds, fstats = frontier_delete(
         arrays.dist, adj, btt, backend, src, mask, f_cap,
         query_mask=live_mask, now=now, w_max=w_max,
@@ -262,11 +294,15 @@ def _expire(arrays: BatchedEngineArrays, tau: jnp.ndarray, max_window: jnp.ndarr
     validity threshold by construction)."""
     now = jnp.maximum(arrays.now, tau)
     low = now - max_window
-    adj = jnp.where(arrays.adj > low, arrays.adj, NEG_INF)
-    incident = jnp.maximum(
-        jnp.max(adj, axis=(0, 2)),  # outgoing per u
-        jnp.max(adj, axis=(0, 1)),  # incoming per v
-    )
+    if isinstance(arrays.adj, EllAdjacency):
+        adj = ell_expire(arrays.adj, low)
+        incident = ell_incident(adj)
+    else:
+        adj = jnp.where(arrays.adj > low, arrays.adj, NEG_INF)
+        incident = jnp.maximum(
+            jnp.max(adj, axis=(0, 2)),  # outgoing per u
+            jnp.max(adj, axis=(0, 1)),  # incoming per v
+        )
     live = incident > low
     return BatchedEngineArrays(adj, arrays.dist, arrays.emitted, now), live
 
@@ -274,8 +310,13 @@ def _expire(arrays: BatchedEngineArrays, tau: jnp.ndarray, max_window: jnp.ndarr
 @jax.jit
 def _clear_slots(arrays: BatchedEngineArrays, slots: jnp.ndarray):
     """Zero out rows/cols of recycled slots (−inf / False) for ALL queries."""
-    adj = arrays.adj.at[:, slots, :].set(NEG_INF, mode="drop")
-    adj = adj.at[:, :, slots].set(NEG_INF, mode="drop")
+    if isinstance(arrays.adj, EllAdjacency):
+        n = arrays.dist.shape[1]
+        dead = jnp.zeros((n,), bool).at[slots].set(True, mode="drop")
+        adj = ell_clear_slots(arrays.adj, dead)
+    else:
+        adj = arrays.adj.at[:, slots, :].set(NEG_INF, mode="drop")
+        adj = adj.at[:, :, slots].set(NEG_INF, mode="drop")
     dist = arrays.dist.at[:, slots, :, :].set(NEG_INF, mode="drop")
     dist = dist.at[:, :, slots, :].set(NEG_INF, mode="drop")
     emitted = arrays.emitted.at[:, slots, :].set(False, mode="drop")
@@ -303,7 +344,9 @@ class Executor:
     n_multiple: int = 1
 
     def __init__(self, backend: BackendLike = "jnp",
-                 frontier: str = "off", frontier_cap: int = 32):
+                 frontier: str = "off", frontier_cap: int = 32,
+                 adj_layout: str = "dense", ell_cap: int = 8,
+                 spill_cap: int = 256):
         # first-class ContractionBackend; unknown names raise HERE, at
         # construction (they used to fall silently back to the jnp oracle)
         self.backend: ContractionBackend = resolve_backend(backend)
@@ -313,6 +356,27 @@ class Executor:
                 f"{', '.join(FRONTIER_MODES)}")
         if frontier_cap < 1:
             raise ValueError(f"frontier_cap must be >= 1, got {frontier_cap}")
+        if adj_layout not in ADJ_LAYOUTS:
+            raise ValueError(
+                f"unknown adj_layout {adj_layout!r}; known layouts: "
+                f"{', '.join(ADJ_LAYOUTS)}")
+        if ell_cap < 1:
+            raise ValueError(f"ell_cap must be >= 1, got {ell_cap}")
+        if spill_cap < 1:
+            raise ValueError(f"spill_cap must be >= 1, got {spill_cap}")
+        #: adjacency representation ("dense" | "ell"); results are layout-
+        #: independent, memory and the seed term are not (sparse_adj.py)
+        self.adj_layout = adj_layout
+        #: per-(label, u) degree capacity — pow2-bucketed like Q/F so the
+        #: jit compile cache is reused; grows ×2 at spill drains
+        self.ell_cap = _next_pow2(ell_cap) if ell_cap > 1 else 1
+        #: spill-ring capacity — the host budget drains before the ring
+        #: can hold this many appends, so no append is ever dropped
+        self.spill_cap = _next_pow2(spill_cap)
+        self._spill_budget = 0    # inserts dispatched since the last drain
+        self._ell_repacks = 0
+        self._ell_spill_drains = 0
+        self._ell_live_edges: Optional[int] = None  # snapshot at last repack
         #: frontier-restricted ingest: "off" = dense dispatch only (the
         #: pre-PR 5 path, bit-identical), "on" = frontier dispatch at a
         #: FIXED capacity, "auto" = frontier dispatch whose capacity grows
@@ -366,16 +430,59 @@ class Executor:
     def place(self, state: Dict[str, object]) -> None:
         """(Re)place host arrays as this executor's device state — the
         checkpoint-restore entry point (engine.adopt_state builds the
-        host-side layout, the executor owns placement/sharding)."""
+        host-side layout, the executor owns placement/sharding). The
+        ``adj`` entry is always the canonical DENSE slab — checkpoints are
+        layout-agnostic, so a dense save restores into an ELL executor and
+        vice versa; an ELL executor packs here (growing ``ell_cap`` ×2
+        until the live max degree fits, so a pack never spills)."""
+        adj_dev = self.pack_adj(state["adj"])
         self.set_arrays(BatchedEngineArrays(
-            self._put(np.asarray(state["adj"], np.float32), "adj"),
+            adj_dev,
             self._put(np.asarray(state["dist"], np.float32), "dist"),
             self._put(np.asarray(state["emitted"], bool), "emitted"),
             self._put(np.asarray(state["now"], np.float32), "now"),
         ))
 
+    def pack_adj(self, adj):
+        """Host dense slab -> device adjacency in this executor's layout
+        (ELL packs after growing ``ell_cap`` ×2 until the live max degree
+        fits, so a pack never spills)."""
+        adj_np = np.asarray(adj, np.float32)
+        if self.adj_layout == "ell":
+            need = int((adj_np > NEG_INF).sum(axis=-1).max()) if adj_np.size \
+                else 0
+            while self.ell_cap < need:
+                self.ell_cap *= 2
+            out = self._put_adj(pack_ell(adj_np, self.ell_cap, self.spill_cap))
+            self._spill_budget = 0
+            return out
+        return self._put(adj_np, "adj")
+
     def _put(self, arr: np.ndarray, name: str):
         return jnp.asarray(arr)
+
+    def _put_adj(self, ell: EllAdjacency) -> EllAdjacency:
+        """Device placement for an ELL adjacency pytree (the mesh executor
+        overrides to shard the u-row axis over 'model')."""
+        return jax.tree_util.tree_map(jnp.asarray, ell)
+
+    def dense_adj(self) -> jnp.ndarray:
+        """The adjacency in canonical dense form regardless of layout —
+        checkpoints, retained-edge scans and the reference engines read
+        this (maintenance paths; the densify is traced jnp, not a sync)."""
+        a = self._arrays.adj
+        if isinstance(a, EllAdjacency):
+            return ell_to_dense(a)
+        return a
+
+    @property
+    def adj_shape(self) -> Tuple[int, int, int]:
+        """Logical dense ``(L, N, N)`` adjacency shape regardless of layout
+        (shape metadata only — never densifies or syncs)."""
+        a = self._arrays.adj
+        if isinstance(a, EllAdjacency):
+            return (a.n_labels, a.n_slots, a.n_slots)
+        return tuple(a.shape)
 
     def grow(self, *, n_slots: Optional[int] = None, q_cap: Optional[int] = None,
              k: Optional[int] = None, n_label_slots: Optional[int] = None) -> None:
@@ -385,7 +492,10 @@ class Executor:
         a = self._arrays
         # no-op check on shape metadata FIRST: the common lifecycle event
         # (reclaiming an inert lane) must not pay a device->host gather
-        l_old, n_old = a.adj.shape[0], a.adj.shape[1]
+        if isinstance(a.adj, EllAdjacency):
+            l_old, n_old = a.adj.n_labels, a.adj.n_slots
+        else:
+            l_old, n_old = a.adj.shape[0], a.adj.shape[1]
         q_old, k_old = a.dist.shape[0], a.dist.shape[3]
         n_new = max(n_slots or 0, n_old)
         l_new = max(n_label_slots or 0, l_old)
@@ -393,7 +503,10 @@ class Executor:
         k_new = max(k or 0, k_old)
         if (n_new, l_new, q_new, k_new) == (n_old, l_old, q_old, k_old):
             return
-        adj = np.asarray(jax.device_get(a.adj))
+        # densify-before-gather: growth re-places through the canonical
+        # dense slab, so an ELL executor re-packs at the new shape (ring
+        # drained as a side effect)
+        adj = np.asarray(jax.device_get(self.dense_adj()))
         dist = np.asarray(jax.device_get(a.dist))
         emitted = np.asarray(jax.device_get(a.emitted))
         adj2 = np.full((l_new, n_new, n_new), NEG_INF, np.float32)
@@ -417,6 +530,8 @@ class Executor:
         one: per-event work scales with the rows the batch dirties, not N
         (overflow falls back to the dense loop in-dispatch; results are
         bit-identical either way)."""
+        if self.adj_layout == "ell":
+            self._reserve_spill(len(src))
         if self.frontier != "off":
             return self._ingest_frontier_dispatch(
                 src, dst, lab, ts, mask, ts_floor, tables)
@@ -537,6 +652,84 @@ class Executor:
         self._arrays = a._replace(
             now=jnp.maximum(a.now, jnp.asarray(ts, jnp.float32))
         )
+
+    # -- ELL spill budget ----------------------------------------------------
+    #
+    # The ring never drops an append: each ingest dispatch of width B can
+    # append at most B ring entries, so the host tracks a conservative
+    # budget of appends since the last drain and syncs the ring cursor
+    # BEFORE a dispatch could overflow it. A drain that finds the ring
+    # occupied means some row overflowed its degree capacity — grow
+    # ``ell_cap`` ×2 toward the true max degree and re-pack (which empties
+    # the ring). A drain that finds it empty just resets the budget. The
+    # sync is explicit (jax.device_get — rule R5's sanctioned form) and
+    # amortized: steady-state streams without degree growth never sync.
+
+    def _reserve_spill(self, b: int) -> None:
+        bneed = _next_pow2(2 * max(b, 1))
+        grew = False
+        while self.spill_cap < bneed:
+            self.spill_cap *= 2
+            grew = True
+        if grew:
+            self._repack_ell()
+        elif self._spill_budget + b > self.spill_cap:
+            self._drain_spill()
+        self._spill_budget += b
+
+    def _drain_spill(self) -> None:
+        self._ell_spill_drains += 1
+        ptr = int(jax.device_get(self._arrays.adj.spill_ptr))
+        if ptr > 0:
+            need = int(jax.device_get(ell_max_degree(self._arrays.adj)))
+            while self.ell_cap < need:
+                self.ell_cap *= 2
+            self._repack_ell()
+        else:
+            self._spill_budget = 0
+
+    def _repack_ell(self) -> None:
+        """Host round-trip re-pack at the current capacities: densify on
+        device, re-pack rows (ring folded in, then emptied). Growth and
+        compaction reuse this; dist/emitted stay resident."""
+        dense = np.asarray(jax.device_get(ell_to_dense(self._arrays.adj)))
+        need = int((dense > NEG_INF).sum(axis=-1).max()) if dense.size else 0
+        while self.ell_cap < need:
+            self.ell_cap *= 2
+        self._arrays = self._arrays._replace(
+            adj=self._put_adj(pack_ell(dense, self.ell_cap, self.spill_cap)))
+        self._ell_repacks += 1
+        self._ell_live_edges = int((dense > NEG_INF).sum())
+        self._spill_budget = 0
+
+    @property
+    def adjacency_stats(self) -> Dict[str, object]:
+        """Adjacency-representation telemetry (host-known values only —
+        reading this never syncs the device stream). ``live_edges`` and
+        ``occupancy`` are snapshots from the last re-pack (None before
+        one); ``adj_bytes`` is the exact device footprint of the current
+        representation."""
+        a = self._arrays.adj if self._arrays is not None else None
+        if isinstance(a, EllAdjacency):
+            slot_cells = a.n_labels * a.n_slots * a.ell_cap
+            adj_bytes = sum(int(np.prod(x.shape)) * x.dtype.itemsize
+                            for x in a)
+        else:
+            slot_cells = int(np.prod(a.shape)) if a is not None else 0
+            adj_bytes = slot_cells * 4
+        return {
+            "layout": self.adj_layout,
+            "ell_cap": self.ell_cap,
+            "spill_cap": self.spill_cap,
+            "repacks": self._ell_repacks,
+            "spill_drains": self._ell_spill_drains,
+            "live_edges": self._ell_live_edges,
+            "slot_cells": slot_cells,
+            "adj_bytes": adj_bytes,
+            "occupancy": (self._ell_live_edges / slot_cells
+                          if self._ell_live_edges is not None and slot_cells
+                          else None),
+        }
 
     # -- round accounting ----------------------------------------------------
 

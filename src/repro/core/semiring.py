@@ -44,6 +44,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .backend import BackendLike, ContractionBackend, resolve_backend
+from .sparse_adj import EllAdjacency, ell_label_rows, ell_rows_dense
 
 NEG_INF = float("-inf")
 
@@ -269,11 +270,18 @@ def batched_relax_round(
     active = btt.active
     if query_mask is not None:
         active = jnp.logical_and(active, query_mask[btt.qidx])
-    # contraction (masked rows carry the semiring zero already)
-    contrib = backend.contract_batched(dist, adj, btt, active)  # (J, N, N)
+    # contraction (masked rows carry the semiring zero already); the adj
+    # operand's LAYOUT dispatches at trace time — an EllAdjacency is a
+    # different pytree, so the jitted callers key separate traces and the
+    # Python isinstance is resolved once per compile, never per step
+    if isinstance(adj, EllAdjacency):
+        contrib = backend.contract_batched_ell(dist, adj, btt, active)
+        a_l = ell_label_rows(adj, btt.lab, backend.zero)  # (J, N, N)
+    else:
+        contrib = backend.contract_batched(dist, adj, btt, active)  # (J, N, N)
+        a_l = adj[btt.lab]                            # (J, N, N) [u, v]
     # base term: seed (x, x, s0) = +inf => min(+inf, adj[l, x, v]) = adj
     # (applied only to ACTIVE start rows so it cannot unmask a zeroed row)
-    a_l = adj[btt.lab]                                # (J, N, N) [u, v]
     base_rows = jnp.logical_and(btt.start_mask, active)
     contrib = jnp.where(base_rows[:, None, None],
                         jnp.maximum(contrib, a_l), contrib)
@@ -439,6 +447,39 @@ def frontier_seed(
     return dirty
 
 
+def frontier_seed_gathered(
+    dist: jnp.ndarray,          # (Q, N, N, K) f32 timestamps (pre-encode)
+    src: jnp.ndarray,           # (B,) int32 inserted-edge source slots
+    smask: jnp.ndarray,         # (B,) bool batch padding mask
+    query_mask: Optional[jnp.ndarray] = None,   # (Q,) bool live lanes
+) -> jnp.ndarray:
+    """:func:`frontier_seed` with the O(N²) scan replaced by a gather.
+
+    The dense seed tests EVERY dist column against a scattered (N,) source
+    mask — O(Q·N²·K) reads per event, the term that dominates once the
+    relaxation itself is frontier-restricted. But the batch names its
+    sources outright, so gathering the B columns ``dist[:, :, src, :]``
+    and reducing over (B, K) reads O(Q·N·B·K) — the seed cost scales with
+    the batch, not the graph. Duplicated sources in the batch are benign
+    (``any`` folds them), masked slots are excluded explicitly, and the
+    result is EXACTLY the dense seed's mask: both reduce the same set of
+    columns. Used by the ELL layout (whose whole point is breaking the
+    O(N²) wall); the dense layout keeps the scan so its dispatch shapes
+    and telemetry stay byte-stable."""
+    q, n, _, k = dist.shape
+    cols = dist[:, :, jnp.where(smask, src, 0), :]       # (Q, N, B, K)
+    reach = jnp.any(
+        jnp.logical_and(cols > NEG_INF, smask[None, None, :, None]),
+        axis=(2, 3),
+    )                                   # (Q, N) rows reaching a batch source
+    idx = jnp.where(smask, src, n)
+    src_mask = jnp.zeros((n,), bool).at[idx].set(True, mode="drop")
+    dirty = jnp.logical_or(reach, src_mask[None, :])
+    if query_mask is not None:
+        dirty = jnp.logical_and(dirty, query_mask[:, None])
+    return dirty
+
+
 def pack_frontier(
     dirty: jnp.ndarray, f_cap: int
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
@@ -488,11 +529,18 @@ def frontier_relax_round(
     lane = jnp.arange(q)[:, None]
     slab = dist[lane, rows]                            # (Q, F, N, K)
     slab_s = slab[btt.qidx, :, :, btt.src]             # (J, F, N) [f, u]
-    a_l = adj[btt.lab]                                 # (J, N, N) [u, v]
-    contrib = backend.contract_rows(slab_s, a_l)       # (J, F, N) [f, v]
-    # base term at the frontier rows: adj[l, x, v] for x = rows[q, f]
     rows_j = rows[btt.qidx]                            # (J, F)
-    a_base = jnp.take_along_axis(a_l, rows_j[:, :, None], axis=1)
+    if isinstance(adj, EllAdjacency):
+        # gather-contract straight off the ELL rows: O(F·N·E) per
+        # transition, and the base term densifies ONLY the F frontier rows
+        # — nothing O(N²) is materialized on this path
+        contrib = backend.contract_rows_ell(slab_s, adj, btt.lab)
+        a_base = ell_rows_dense(adj, btt.lab, rows_j, backend.zero)
+    else:
+        a_l = adj[btt.lab]                             # (J, N, N) [u, v]
+        contrib = backend.contract_rows(slab_s, a_l)   # (J, F, N) [f, v]
+        # base term at the frontier rows: adj[l, x, v] for x = rows[q, f]
+        a_base = jnp.take_along_axis(a_l, rows_j[:, :, None], axis=1)
     base_rows = jnp.logical_and(btt.start_mask, btt.active)
     contrib = jnp.where(base_rows[:, None, None],
                         jnp.maximum(contrib, a_base), contrib)
@@ -541,7 +589,13 @@ def frontier_closure(
     bound = max_rounds if max_rounds > 0 else n * k + 1
     mask0 = (jnp.ones((q,), bool) if query_mask is None
              else jnp.asarray(query_mask, bool))
-    dirty = frontier_seed(dist, src, smask, mask0)
+    # ELL dispatches seed via the batch-column gather (O(Q·N·B·K), the
+    # representation's headline win); dense keeps the scan — same mask
+    # either way (frontier_seed_gathered docstring), so results and the
+    # overflow decision are layout-independent
+    seed_fn = (frontier_seed_gathered if isinstance(adj, EllAdjacency)
+               else frontier_seed)
+    dirty = seed_fn(dist, src, smask, mask0)
     rows, rowmask0, cnt = pack_frontier(dirty, f_cap)
     seed_rows = jnp.sum(cnt)
     max_lane_rows = jnp.max(cnt)
@@ -664,7 +718,10 @@ def frontier_delete(
     bound = max_rounds if max_rounds > 0 else n * k + 1
     mask0 = (jnp.ones((q,), bool) if query_mask is None
              else jnp.asarray(query_mask, bool))
-    dirty = delete_cone(dist, src, smask, mask0)
+    # same layout split as frontier_closure: the cone IS the seed reduction
+    cone_fn = (frontier_seed_gathered if isinstance(adj, EllAdjacency)
+               else delete_cone)
+    dirty = cone_fn(dist, src, smask, mask0)
     rows, rowmask0, cnt = pack_frontier(dirty, f_cap)
     seed_rows = jnp.sum(cnt)
     max_lane_rows = jnp.max(cnt)

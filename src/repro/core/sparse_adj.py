@@ -1,0 +1,287 @@
+"""Blocked-sparse adjacency: padded ELL rows plus a replicated spill ring.
+
+The dense engine stores the shared graph as a ``(L, N, N)`` timestamp
+slab — O(N^2) memory per label and an O(N^2 K) frontier-seed term that
+caps N at tens of thousands (docs/architecture.md, "Per-event cost
+model").  This module is the sparse alternative: per ``(label, u)`` row
+we keep at most ``ell_cap`` destination slots (``idx``/``ts`` pairs,
+ELLPACK layout), where ``ell_cap`` is a power-of-2 degree capacity
+bucketed exactly like the Q/F capacities so jit compile caches are
+reused across graphs (`ell_cap` only ever doubles — see
+``Executor._maybe_grow_ell``).
+
+Rows can overflow.  Overflow never loses an edge and never aborts the
+dispatch: the insert scatters the surplus edge into a small replicated
+*spill ring* (``spill_src/dst/lab/ts`` + append cursor ``spill_ptr``)
+inside the same jitted step.  The host keeps a conservative budget of
+how many inserts could have spilled since the last drain and re-packs
+(growing ``ell_cap`` x2) before the ring can wrap, so the ELL layout is
+bit-identical to the dense slab at every event — the contract
+docs/invariants.md records as "bit-identical spill".
+
+Free slots hold ``ts == NEG_INF`` (or the backend ``zero`` after a
+bucket encode, which maps NEG_INF to level 0); their ``idx`` may be
+stale, which is benign everywhere: contraction and densify fold with
+``max`` so a zero-valued candidate is a no-op, deletes clear every
+matching copy, expiry thresholds each copy independently.  For the same
+reason an edge duplicated between a row slot and the ring (possible
+after churn) never changes a result.
+
+Everything here except ``pack_ell`` (host-side, numpy) is traceable and
+runs inside the executor's jitted step functions.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+NEG_INF = float("-inf")
+
+
+class EllAdjacency(NamedTuple):
+    """Padded-ELL adjacency + spill ring (a pytree; jit-transparent).
+
+    ``ts`` dtype is float32 in executor state; inside a bucket-backend
+    closure ``prepare_state`` swaps in int32 level codes (same shapes).
+    """
+
+    idx: jax.Array        # (L, N, E) int32 — destination vertex per slot
+    ts: jax.Array         # (L, N, E)       — edge timestamp; zero = free
+    spill_src: jax.Array  # (S,) int32
+    spill_dst: jax.Array  # (S,) int32
+    spill_lab: jax.Array  # (S,) int32
+    spill_ts: jax.Array   # (S,)            — zero = free ring entry
+    spill_ptr: jax.Array  # ()   int32 — append cursor; host budget keeps < S
+
+    @property
+    def n_labels(self) -> int:
+        return self.idx.shape[0]
+
+    @property
+    def n_slots(self) -> int:
+        return self.idx.shape[1]
+
+    @property
+    def ell_cap(self) -> int:
+        return self.idx.shape[2]
+
+    @property
+    def spill_cap(self) -> int:
+        return self.spill_src.shape[0]
+
+
+def ell_empty_np(n_labels: int, n_slots: int, ell_cap: int,
+                 spill_cap: int) -> EllAdjacency:
+    """Host-side empty ELL state (mirrors ``Executor.init_state``)."""
+    return EllAdjacency(
+        idx=np.zeros((n_labels, n_slots, ell_cap), np.int32),
+        ts=np.full((n_labels, n_slots, ell_cap), NEG_INF, np.float32),
+        spill_src=np.zeros((spill_cap,), np.int32),
+        spill_dst=np.zeros((spill_cap,), np.int32),
+        spill_lab=np.zeros((spill_cap,), np.int32),
+        spill_ts=np.full((spill_cap,), NEG_INF, np.float32),
+        spill_ptr=np.zeros((), np.int32),
+    )
+
+
+def pack_ell(dense: np.ndarray, ell_cap: int, spill_cap: int) -> EllAdjacency:
+    """Host-side pack of a dense ``(L, N, N)`` slab into ELL rows.
+
+    The caller sizes ``ell_cap`` to at least the max live out-degree
+    (``Executor.place`` grows it x2 until it fits), so a pack never
+    needs the ring; raising instead of silently spilling keeps the
+    repack→drain invariant auditable.
+    """
+    dense = np.asarray(dense, np.float32)
+    n_labels, n_slots, _ = dense.shape
+    out = ell_empty_np(n_labels, n_slots, ell_cap, spill_cap)
+    live = dense > NEG_INF
+    l, u, v = np.nonzero(live)
+    if l.size:
+        deg = live.sum(-1).reshape(-1)
+        row_start = np.zeros(n_labels * n_slots + 1, np.int64)
+        np.cumsum(deg, out=row_start[1:])
+        flat = l.astype(np.int64) * n_slots + u
+        pos = np.arange(l.size, dtype=np.int64) - row_start[flat]
+        if pos.max() >= ell_cap:
+            raise ValueError(
+                f"pack_ell: max out-degree {int(pos.max()) + 1} exceeds "
+                f"ell_cap={ell_cap}; grow the capacity before packing")
+        out.idx[l, u, pos] = v
+        out.ts[l, u, pos] = dense[l, u, v]
+    return out
+
+
+def ell_to_dense(ell: EllAdjacency, zero: float = NEG_INF) -> jax.Array:
+    """Densify to the canonical ``(L, N, N)`` slab (traceable).
+
+    Exact inverse of ``pack_ell`` up to slot order: max-folding makes
+    free slots (``ts == zero``) and duplicated edges no-ops.
+    """
+    n_labels, n_slots, _ = ell.idx.shape
+    dense = jnp.full((n_labels, n_slots, n_slots), zero, ell.ts.dtype)
+    dense = dense.at[jnp.arange(n_labels)[:, None, None],
+                     jnp.arange(n_slots)[None, :, None],
+                     ell.idx].max(ell.ts)
+    return dense.at[ell.spill_lab, ell.spill_src,
+                    ell.spill_dst].max(ell.spill_ts)
+
+
+def ell_insert(ell: EllAdjacency, src: jax.Array, dst: jax.Array,
+               lab: jax.Array, ts: jax.Array, mask: jax.Array) -> EllAdjacency:
+    """Jitted batch insert: per event, max into an existing slot for
+    ``(lab, src, dst)``, else claim a free slot, else spill to the ring
+    (merge if the triple is already ringed, append otherwise).
+
+    Appends write with ``mode="drop"`` past the ring end — the host
+    spill budget guarantees ``spill_ptr < spill_cap`` between drains, so
+    the drop leg is unreachable in a budget-honouring executor.
+    """
+    e_cap = ell.ell_cap
+    s_cap = ell.spill_cap
+
+    def body(i, cur):
+        u, v, l, t, m = src[i], dst[i], lab[i], ts[i], mask[i]
+        row_ts = cur.ts[l, u]
+        row_hit = (cur.idx[l, u] == v) & (row_ts > NEG_INF)
+        row_free = row_ts == NEG_INF
+        has_hit = jnp.any(row_hit)
+        has_free = jnp.any(row_free)
+        use_row = m & (has_hit | has_free)
+        slot = jnp.where(has_hit, jnp.argmax(row_hit), jnp.argmax(row_free))
+        slot = jnp.where(use_row, slot, e_cap)
+        idx2 = cur.idx.at[l, u, slot].set(v, mode="drop")
+        ts2 = cur.ts.at[l, u, slot].max(t, mode="drop")
+
+        do_spill = m & ~(has_hit | has_free)
+        ring_hit = ((cur.spill_src == u) & (cur.spill_dst == v)
+                    & (cur.spill_lab == l))
+        any_ring = jnp.any(ring_hit)
+        append = do_spill & ~any_ring
+        wslot = jnp.where(any_ring, jnp.argmax(ring_hit), cur.spill_ptr)
+        wslot = jnp.where(do_spill, wslot, s_cap)
+        new_ts = jnp.where(any_ring,
+                           jnp.maximum(cur.spill_ts[jnp.argmax(ring_hit)], t),
+                           t)
+        return cur._replace(
+            idx=idx2, ts=ts2,
+            spill_src=cur.spill_src.at[wslot].set(u, mode="drop"),
+            spill_dst=cur.spill_dst.at[wslot].set(v, mode="drop"),
+            spill_lab=cur.spill_lab.at[wslot].set(l, mode="drop"),
+            spill_ts=cur.spill_ts.at[wslot].set(new_ts, mode="drop"),
+            spill_ptr=cur.spill_ptr + append.astype(jnp.int32))
+
+    return lax.fori_loop(0, src.shape[0], body, ell)
+
+
+def ell_delete(ell: EllAdjacency, src: jax.Array, dst: jax.Array,
+               lab: jax.Array, mask: jax.Array) -> EllAdjacency:
+    """Jitted batch delete: clear every row slot AND ring entry matching
+    ``(lab, src, dst)`` (duplicates must all die to match the dense
+    ``.set(NEG_INF)``). Cleared slots keep their stale ``idx`` — benign.
+    """
+    def body(i, cur):
+        u, v, l, m = src[i], dst[i], lab[i], mask[i]
+        row_ts = cur.ts[l, u]
+        hit = (cur.idx[l, u] == v) & m
+        ts2 = cur.ts.at[l, u].set(jnp.where(hit, NEG_INF, row_ts))
+        ring_hit = ((cur.spill_src == u) & (cur.spill_dst == v)
+                    & (cur.spill_lab == l) & m)
+        return cur._replace(
+            ts=ts2,
+            spill_ts=jnp.where(ring_hit, NEG_INF, cur.spill_ts))
+
+    return lax.fori_loop(0, src.shape[0], body, ell)
+
+
+def ell_expire(ell: EllAdjacency, low: jax.Array) -> EllAdjacency:
+    """Window expiry: threshold each timestamp leaf (mirrors the dense
+    ``where(adj > low, adj, NEG_INF)``)."""
+    return ell._replace(
+        ts=jnp.where(ell.ts > low, ell.ts, NEG_INF),
+        spill_ts=jnp.where(ell.spill_ts > low, ell.spill_ts, NEG_INF))
+
+
+def ell_incident(ell: EllAdjacency) -> jax.Array:
+    """Per-vertex max incident timestamp, identical to the dense
+    ``maximum(adj.max((0, 2)), adj.max((0, 1)))`` reduction."""
+    n_slots = ell.n_slots
+    out_u = ell.ts.max(axis=(0, 2))
+    in_v = jnp.full((n_slots,), NEG_INF, ell.ts.dtype)
+    in_v = in_v.at[ell.idx.reshape(-1)].max(ell.ts.reshape(-1))
+    out_u = out_u.at[ell.spill_src].max(ell.spill_ts)
+    in_v = in_v.at[ell.spill_dst].max(ell.spill_ts)
+    return jnp.maximum(out_u, in_v)
+
+
+def ell_clear_slots(ell: EllAdjacency, dead: jax.Array) -> EllAdjacency:
+    """Clear every edge incident to a dead vertex slot (``dead``: (N,)
+    bool), mirroring the dense row+column ``.set(NEG_INF)``."""
+    ts = jnp.where(dead[None, :, None], NEG_INF, ell.ts)
+    ts = jnp.where(dead[ell.idx], NEG_INF, ts)
+    kill = dead[ell.spill_src] | dead[ell.spill_dst]
+    return ell._replace(ts=ts,
+                        spill_ts=jnp.where(kill, NEG_INF, ell.spill_ts))
+
+
+def ell_live_edges(ell: EllAdjacency) -> jax.Array:
+    """Device count of live (non-free) entries — occupancy telemetry.
+    Ring duplicates of row-resident edges count once each; the executor
+    only reads this at drain boundaries so the bias is visible, small,
+    and documented."""
+    return (jnp.sum(ell.ts > NEG_INF).astype(jnp.int32)
+            + jnp.sum(ell.spill_ts > NEG_INF).astype(jnp.int32))
+
+
+def ell_max_degree(ell: EllAdjacency) -> jax.Array:
+    """Device max live out-degree over ``(label, u)`` rows, counting
+    ring entries toward their row — sizes ``ell_cap`` after a drain."""
+    row_deg = jnp.sum(ell.ts > NEG_INF, axis=2).astype(jnp.int32)  # (L, N)
+    ring_live = (ell.spill_ts > NEG_INF).astype(jnp.int32)
+    ring_deg = jnp.zeros_like(row_deg).at[ell.spill_lab,
+                                          ell.spill_src].add(ring_live)
+    return jnp.max(row_deg + ring_deg)
+
+
+def ell_label_rows(ell: EllAdjacency, labs: jax.Array,
+                   zero: float) -> jax.Array:
+    """Densify the per-transition label slabs: ``out[j] == dense[labs[j]]``
+    of shape (J, N, N). Used for the base term of the dense batched
+    round; free slots fold to ``zero`` (a no-op under max)."""
+    j = labs.shape[0]
+    n_slots = ell.n_slots
+    idx_l = ell.idx[labs]                     # (J, N, E)
+    ts_l = ell.ts[labs]
+    out = jnp.full((j, n_slots, n_slots), zero, ell.ts.dtype)
+    out = out.at[jnp.arange(j)[:, None, None],
+                 jnp.arange(n_slots)[None, :, None], idx_l].max(ts_l)
+    eff = jnp.where(ell.spill_lab[None, :] == labs[:, None],
+                    ell.spill_ts[None, :],
+                    jnp.asarray(zero, ell.spill_ts.dtype))  # (J, S)
+    return out.at[jnp.arange(j)[:, None], ell.spill_src[None, :],
+                  ell.spill_dst[None, :]].max(eff)
+
+
+def ell_rows_dense(ell: EllAdjacency, labs: jax.Array, rows: jax.Array,
+                   zero: float) -> jax.Array:
+    """Densify only the frontier rows: ``out[j, f] == dense[labs[j],
+    rows[j, f]]`` of shape (J, F, N) — the O(F * d_max) base-term gather
+    the frontier round uses instead of materializing (J, N, N)."""
+    j, f = rows.shape
+    n_slots = ell.n_slots
+    idx_r = ell.idx[labs[:, None], rows]      # (J, F, E)
+    ts_r = ell.ts[labs[:, None], rows]
+    out = jnp.full((j, f, n_slots), zero, ell.ts.dtype)
+    out = out.at[jnp.arange(j)[:, None, None],
+                 jnp.arange(f)[None, :, None], idx_r].max(ts_r)
+    hit = ((ell.spill_lab[None, None, :] == labs[:, None, None])
+           & (ell.spill_src[None, None, :] == rows[:, :, None]))  # (J, F, S)
+    eff = jnp.where(hit, ell.spill_ts[None, None, :],
+                    jnp.asarray(zero, ell.spill_ts.dtype))
+    dst = jnp.broadcast_to(ell.spill_dst[None, None, :], hit.shape)
+    return out.at[jnp.arange(j)[:, None, None],
+                  jnp.arange(f)[None, :, None], dst].max(eff)

@@ -62,8 +62,10 @@ from ..core.executor import (
     Executor,
     QueryTables,
     apply_batch,
+    drop_batch,
     emit_new,
 )
+from ..core.sparse_adj import EllAdjacency, ell_to_dense
 from ..core.semiring import (
     NEG_INF,
     BatchedTransitionTable,
@@ -89,6 +91,26 @@ def host_mesh(model_axis: int = 1) -> Mesh:
 
 def _row_specs(q_axes) -> Tuple[P, ...]:
     return tuple(P(q_axes, None) for _ in range(6))
+
+
+def _adj_dense(adj):
+    """Trace-time layout adapter for the shard_map closures: the per-shard
+    relaxation contracts the canonical dense slab (one in-jit densify —
+    XLA SPMD inserts the reshard), while the ELL pytree itself carries the
+    graph between dispatches so insert/delete scatters stay O(B·E)."""
+    return ell_to_dense(adj) if isinstance(adj, EllAdjacency) else adj
+
+
+def _adj_shardings(mesh: Mesh, adj_layout: str):
+    """Canonical adjacency sharding per layout: the dense slab shards its v
+    axis over 'model'; the ELL pytree shards idx/ts on the u-ROW axis (rows
+    are the scatter unit) and replicates the small spill ring."""
+    if adj_layout == "ell":
+        row = NamedSharding(mesh, P(None, "model", None))
+        rep = NamedSharding(mesh, P())
+        return EllAdjacency(idx=row, ts=row, spill_src=rep, spill_dst=rep,
+                            spill_lab=rep, spill_ts=rep, spill_ptr=rep)
+    return NamedSharding(mesh, P(None, None, "model"))
 
 
 def make_sharded_closure(mesh: Mesh, backend,
@@ -340,15 +362,19 @@ def batched_round_lowering(mesh: Mesh, btt: BatchedTransitionTable,
 
 
 @functools.lru_cache(maxsize=None)
-def _mesh_step_fns(mesh: Mesh, q_axes: Tuple[str, ...], backend):
+def _mesh_step_fns(mesh: Mesh, q_axes: Tuple[str, ...], backend,
+                   adj_layout: str = "dense"):
     """Jitted mesh step functions + canonical shardings, cached per
-    (mesh, lane axes, backend object) so every MeshExecutor on the same
-    mesh shares one compile cache (mirroring the module-level jits of the
-    local executor; string-named backends resolve to process-wide
-    singletons, so the cache key is stable)."""
+    (mesh, lane axes, backend object, adjacency layout) so every
+    MeshExecutor on the same mesh shares one compile cache (mirroring the
+    module-level jits of the local executor; string-named backends resolve
+    to process-wide singletons, so the cache key is stable). Under
+    ``adj_layout="ell"`` the batch fold / drop runs on the sharded ELL
+    pytree and the closures contract a one-shot in-jit densified view —
+    bit-identical to the dense layout (see core/sparse_adj.py)."""
     qa = q_axes[0] if len(q_axes) == 1 else tuple(q_axes)
     sh = dict(
-        adj=NamedSharding(mesh, P(None, None, "model")),
+        adj=_adj_shardings(mesh, adj_layout),
         dist=NamedSharding(mesh, P(qa, None, "model", None)),
         emitted=NamedSharding(mesh, P(qa, None, None)),
         now=NamedSharding(mesh, P()),
@@ -360,8 +386,9 @@ def _mesh_step_fns(mesh: Mesh, q_axes: Tuple[str, ...], backend):
     def ingest_impl(arrays, src, dst, lab, ts, mask, ts_floor,
                     rows, finals_mask, windows, live_mask, w_max):
         adj, now = apply_batch(arrays, src, dst, lab, ts, mask, ts_floor)
+        adj_d = _adj_dense(adj)
         dist, shard_rounds, qrounds = closure(
-            arrays.dist, adj, adj, *rows, live_mask, now, w_max)
+            arrays.dist, adj_d, adj_d, *rows, live_mask, now, w_max)
         out, new = emit_new(arrays, dist, adj, now, finals_mask, windows)
         return out, new, shard_rounds, qrounds
 
@@ -370,20 +397,20 @@ def _mesh_step_fns(mesh: Mesh, q_axes: Tuple[str, ...], backend):
         now = jnp.maximum(arrays.now, ts_now)
         low = now - windows
         valid_before = batched_valid_pairs(arrays.dist, finals_mask, low)
-        drop = jnp.where(mask, jnp.asarray(NEG_INF, jnp.float32),
-                         arrays.adj[lab, src, dst])
-        adj = arrays.adj.at[lab, src, dst].set(drop, mode="drop")
+        adj = drop_batch(arrays, src, dst, lab, mask)
+        adj_d = _adj_dense(adj)
         dist0 = jnp.full_like(arrays.dist, NEG_INF)
         dist, shard_rounds, qrounds = closure(
-            dist0, adj, adj, *rows, live_mask, now, w_max)
+            dist0, adj_d, adj_d, *rows, live_mask, now, w_max)
         valid_after = batched_valid_pairs(dist, finals_mask, low)
         invalidated = jnp.logical_and(valid_before, jnp.logical_not(valid_after))
         return (BatchedEngineArrays(adj, dist, arrays.emitted, now),
                 invalidated, shard_rounds, qrounds)
 
     def relax_impl(arrays, rows, query_mask, w_max):
+        adj_d = _adj_dense(arrays.adj)
         dist, shard_rounds, qrounds = closure(
-            arrays.dist, arrays.adj, arrays.adj, *rows, query_mask,
+            arrays.dist, adj_d, adj_d, *rows, query_mask,
             arrays.now, w_max)
         return arrays._replace(dist=dist), shard_rounds, qrounds
 
@@ -400,12 +427,12 @@ def _mesh_step_fns(mesh: Mesh, q_axes: Tuple[str, ...], backend):
 
 @functools.lru_cache(maxsize=None)
 def _mesh_frontier_ingest(mesh: Mesh, q_axes: Tuple[str, ...], backend,
-                          f_cap: int):
+                          f_cap: int, adj_layout: str = "dense"):
     """Jitted frontier ingest for the mesh executor, cached per (mesh, lane
-    axes, backend, frontier capacity) — capacity grows ×2 like Q/K
-    bucketing, so each step of the auto-growth compiles once and the
-    previous steps' entries stay warm for other groups."""
-    fns = _mesh_step_fns(mesh, q_axes, backend)
+    axes, backend, frontier capacity, adjacency layout) — capacity grows ×2
+    like Q/K bucketing, so each step of the auto-growth compiles once and
+    the previous steps' entries stay warm for other groups."""
+    fns = _mesh_step_fns(mesh, q_axes, backend, adj_layout)
     sh = fns["shardings"]
     qa = q_axes[0] if len(q_axes) == 1 else tuple(q_axes)
     closure = make_sharded_frontier_closure(mesh, backend, f_cap,
@@ -417,8 +444,10 @@ def _mesh_frontier_ingest(mesh: Mesh, q_axes: Tuple[str, ...], backend,
     def ingest_impl(arrays, src, dst, lab, ts, mask, ts_floor,
                     rows, finals_mask, windows, live_mask, w_max):
         adj, now = apply_batch(arrays, src, dst, lab, ts, mask, ts_floor)
+        adj_d = _adj_dense(adj)
         dist, shard_rounds, qrounds, rr, fb, seed, mx = closure(
-            arrays.dist, adj, adj, *rows, live_mask, src, mask, now, w_max)
+            arrays.dist, adj_d, adj_d, *rows, live_mask, src, mask, now,
+            w_max)
         out, new = emit_new(arrays, dist, adj, now, finals_mask, windows)
         return out, new, shard_rounds, qrounds, rr, fb, seed, mx
 
@@ -430,12 +459,12 @@ def _mesh_frontier_ingest(mesh: Mesh, q_axes: Tuple[str, ...], backend,
 
 @functools.lru_cache(maxsize=None)
 def _mesh_frontier_delete(mesh: Mesh, q_axes: Tuple[str, ...], backend,
-                          f_cap: int):
+                          f_cap: int, adj_layout: str = "dense"):
     """Jitted cone-seeded deletion for the mesh executor, cached per (mesh,
-    lane axes, backend, frontier capacity) — the delete twin of
-    :func:`_mesh_frontier_ingest`, sharing its capacity-bucketing
+    lane axes, backend, frontier capacity, adjacency layout) — the delete
+    twin of :func:`_mesh_frontier_ingest`, sharing its capacity-bucketing
     discipline."""
-    fns = _mesh_step_fns(mesh, q_axes, backend)
+    fns = _mesh_step_fns(mesh, q_axes, backend, adj_layout)
     sh = fns["shardings"]
     qa = q_axes[0] if len(q_axes) == 1 else tuple(q_axes)
     closure = make_sharded_frontier_delete(mesh, backend, f_cap,
@@ -449,11 +478,11 @@ def _mesh_frontier_delete(mesh: Mesh, q_axes: Tuple[str, ...], backend,
         now = jnp.maximum(arrays.now, ts_now)
         low = now - windows
         valid_before = batched_valid_pairs(arrays.dist, finals_mask, low)
-        drop = jnp.where(mask, jnp.asarray(NEG_INF, jnp.float32),
-                         arrays.adj[lab, src, dst])
-        adj = arrays.adj.at[lab, src, dst].set(drop, mode="drop")
+        adj = drop_batch(arrays, src, dst, lab, mask)
+        adj_d = _adj_dense(adj)
         dist, shard_rounds, qrounds, rr, fb, seed, mx = closure(
-            arrays.dist, adj, adj, *rows, live_mask, src, mask, now, w_max)
+            arrays.dist, adj_d, adj_d, *rows, live_mask, src, mask, now,
+            w_max)
         valid_after = batched_valid_pairs(dist, finals_mask, low)
         invalidated = jnp.logical_and(valid_before,
                                       jnp.logical_not(valid_after))
@@ -480,8 +509,12 @@ class MeshExecutor(Executor):
 
     def __init__(self, mesh: Optional[Mesh] = None, model_axis: int = 1,
                  q_axes: Sequence[str] = ("data",), backend="jnp",
-                 frontier: str = "off", frontier_cap: int = 32):
-        super().__init__(backend, frontier=frontier, frontier_cap=frontier_cap)
+                 frontier: str = "off", frontier_cap: int = 32,
+                 adj_layout: str = "dense", ell_cap: int = 8,
+                 spill_cap: int = 256):
+        super().__init__(backend, frontier=frontier, frontier_cap=frontier_cap,
+                         adj_layout=adj_layout, ell_cap=ell_cap,
+                         spill_cap=spill_cap)
         self.mesh = mesh if mesh is not None else host_mesh(model_axis)
         self.q_axes = tuple(q_axes)
         self.n_shards = int(np.prod([self.mesh.shape[a] for a in self.q_axes]))
@@ -491,7 +524,8 @@ class MeshExecutor(Executor):
         # the RESOLVED backend object keys the cache (stable identity for
         # string-named backends), and its contraction is what the per-shard
         # closure runs — no jnp-oracle hardcode on the mesh path
-        fns = _mesh_step_fns(self.mesh, self.q_axes, self.backend)
+        fns = _mesh_step_fns(self.mesh, self.q_axes, self.backend,
+                             self.adj_layout)
         self._sh = fns["shardings"]
         self._jit_ingest = fns["ingest"]
         self._jit_delete = fns["delete"]
@@ -510,6 +544,12 @@ class MeshExecutor(Executor):
     def _put(self, arr: np.ndarray, name: str):
         return jax.device_put(arr, self._sh[name])
 
+    def _put_adj(self, ell):
+        # _sh["adj"] is the EllAdjacency-of-shardings tree under
+        # adj_layout="ell" (see _adj_shardings): u-rows over 'model',
+        # spill ring replicated
+        return jax.device_put(ell, self._sh["adj"])
+
     def _rows_for(self, btt: BatchedTransitionTable, q_cap: int):
         if self._rows_src is not btt:
             self._rows = shard_transitions(btt, q_cap, self.n_shards)
@@ -522,9 +562,12 @@ class MeshExecutor(Executor):
                      tables: QueryTables):
         q_cap = self._arrays.dist.shape[0]
         rows = self._rows_for(tables.btt, q_cap)
+        if self.adj_layout == "ell":
+            self._reserve_spill(len(src))
         if self.frontier != "off":
             ingest = _mesh_frontier_ingest(
-                self.mesh, self.q_axes, self.backend, self.frontier_cap)
+                self.mesh, self.q_axes, self.backend, self.frontier_cap,
+                self.adj_layout)
             (self._arrays, new, shard_rounds, qrounds,
              rr, fb, seed, mx) = ingest(
                 self._arrays,
@@ -556,7 +599,8 @@ class MeshExecutor(Executor):
         rows = self._rows_for(tables.btt, q_cap)
         if self.frontier != "off":
             delete = _mesh_frontier_delete(
-                self.mesh, self.q_axes, self.backend, self.frontier_cap)
+                self.mesh, self.q_axes, self.backend, self.frontier_cap,
+                self.adj_layout)
             (self._arrays, invalidated, shard_rounds, qrounds,
              rr, fb, seed, mx) = delete(
                 self._arrays,

@@ -1,0 +1,4 @@
+"""ELL gather-contract kernels: ``ref.py`` (jnp oracle), ``ell.py``
+(fused Pallas kernel), ``ops.py`` (dispatch)."""
+from .ops import ell_gather_contract  # noqa: F401
+from .ref import ell_gather_contract_naive, ell_gather_contract_ref  # noqa: F401

@@ -1,0 +1,97 @@
+"""Fused Pallas gather-contract over padded-ELL adjacency rows.
+
+Grid ``(J, M/bm, U/bu)`` with the u-axis innermost: each step loads a
+``(bm, bu)`` block of the row operand and the ``(bu, E)`` ELL slot
+block for transition ``j``, then walks the ``bu * E`` slots performing
+``o[:, idx[u, e]] = max(o[:, idx[u, e]], min(d[:, u], ts[u, e]))`` via
+single-column ``pl.ds`` read-modify-writes.  The output block spans the
+full vertex width and is revisited across the u-grid (the same
+accumulator pattern as the k-loop in ``kernels/maxmin``), initialized
+to ``zero`` at the first u-step with ``pl.when``.
+
+Block sizes come from the shared ``pick_block_sizes`` table (rule R3);
+the scatter axis cannot be blocked, so only (m, u) tile.  Free slots
+(``ts == zero``) self-annihilate under the min/max fold, so padding the
+u-axis with free rows and the m-axis with ``zero`` rows is exact.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from ..maxmin.maxmin import pick_block_sizes
+
+NEG_INF = float("-inf")
+
+
+def _r8(x: int) -> int:
+    return max(x + (-x) % 8, 8)
+
+
+def _r128(x: int) -> int:
+    return max(x + (-x) % 128, 128)
+
+
+def _ell_kernel(d_ref, idx_ref, ts_ref, o_ref, *, bu, e_cap, zero):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.full(o_ref.shape, zero, o_ref.dtype)
+
+    d = d_ref[0]                      # (bm, bu)
+    idx_flat = idx_ref[0].reshape(-1)  # (bu * e_cap,) int32
+    ts_flat = ts_ref[0].reshape(-1)
+
+    def body(i, _):
+        col = lax.dynamic_index_in_dim(idx_flat, i, keepdims=False)
+        t = lax.dynamic_index_in_dim(ts_flat, i, keepdims=False)
+        u = i // e_cap
+        d_col = lax.dynamic_slice(d, (0, u), (d.shape[0], 1))[:, 0]
+        cand = jnp.minimum(d_col, t.astype(d.dtype))
+        cur = o_ref[0, :, pl.ds(col, 1)]
+        o_ref[0, :, pl.ds(col, 1)] = jnp.maximum(cur, cand[:, None])
+        return 0
+
+    lax.fori_loop(0, bu * e_cap, body, 0)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("zero", "bm", "bu", "interpret"))
+def ell_gather_contract_fused(d, idx, ts, *, zero=NEG_INF, bm=None, bu=None,
+                              interpret=False):
+    """Batched fused gather-contract: d (J, M, U) x idx/ts (J, U, E)
+    -> (J, M, N) with N == U."""
+    j, m, u = d.shape
+    e_cap = idx.shape[2]
+    t_bm, _, t_bu = pick_block_sizes(m, u, u)
+    bm = bm or t_bm
+    bu = bu or t_bu
+    if interpret:
+        bm = min(bm, _r8(m))
+        bu = min(bu, _r8(u))
+
+    m_pad = m + (-m) % bm
+    u_pad = u + (-u) % bu
+    n_out = _r128(u)
+    zval = jnp.asarray(zero, d.dtype)
+    d_p = jnp.full((j, m_pad, u_pad), zval, d.dtype).at[:, :m, :u].set(d)
+    idx_p = jnp.zeros((j, u_pad, e_cap), jnp.int32).at[:, :u, :].set(idx)
+    ts_p = jnp.full((j, u_pad, e_cap), jnp.asarray(zero, ts.dtype),
+                    ts.dtype).at[:, :u, :].set(ts)
+
+    out = pl.pallas_call(
+        functools.partial(_ell_kernel, bu=bu, e_cap=e_cap, zero=zero),
+        grid=(j, m_pad // bm, u_pad // bu),
+        in_specs=[
+            pl.BlockSpec((1, bm, bu), lambda ji, mi, ui: (ji, mi, ui)),
+            pl.BlockSpec((1, bu, e_cap), lambda ji, mi, ui: (ji, ui, 0)),
+            pl.BlockSpec((1, bu, e_cap), lambda ji, mi, ui: (ji, ui, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, n_out), lambda ji, mi, ui: (ji, mi, 0)),
+        out_shape=jax.ShapeDtypeStruct((j, m_pad, n_out), d.dtype),
+        interpret=interpret,
+    )(d_p, idx_p, ts_p)
+    return out[:, :m, :u]

@@ -1,0 +1,33 @@
+"""Dispatch layer for the ELL gather-contract (mirrors
+``kernels/maxmin/ops.py``): jnp chunked reference off-TPU, the fused
+Pallas kernel on TPU or under ``interpret=True``."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .ell import ell_gather_contract_fused
+from .ref import NEG_INF, ell_gather_contract_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def ell_gather_contract(d, idx, ts, *, zero=NEG_INF, use_pallas=None,
+                        interpret=None):
+    """Batched gather-contract: d (J, M, U) x idx/ts (J, U, E) -> (J, M, U).
+
+    ``use_pallas=None`` picks the Pallas path on TPU; ``interpret=None``
+    interprets off-TPU so the kernel stays testable on CPU CI.
+    """
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        if interpret is None:
+            interpret = not _on_tpu()
+        return ell_gather_contract_fused(d, idx, ts, zero=zero,
+                                         interpret=interpret)
+    return jnp.stack([
+        ell_gather_contract_ref(d[ji], idx[ji], ts[ji], zero=zero)
+        for ji in range(d.shape[0])])

@@ -1,0 +1,55 @@
+"""jnp reference for the ELL gather-contract.
+
+``out[m, v] = max_u max_e min(d[m, u], ts[u, e])`` over slots with
+``idx[u, e] == v`` — the (max, min) bottleneck contraction of a row
+block ``d`` against a padded-ELL adjacency, without densifying the
+(N, N) label slab.  Free slots carry ``ts == zero`` so their candidates
+fold away under the scatter-max (min with ``zero`` is ``zero`` for both
+the -inf float lattice and the level-0 bucket lattice).
+
+max/min never reassociate rounding, so this is bit-identical to
+``maxmin_matmul_ref(d, densify(idx, ts))`` — the conformance tests pin
+that equality and the executors rely on it for the dense-spill
+contract.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+NEG_INF = float("-inf")
+
+
+def ell_gather_contract_ref(d, idx, ts, *, zero=NEG_INF, u_chunk: int = 2048):
+    """Gather-contract one matrix: d (M, U) x ELL rows idx/ts (U, E)
+    -> (M, N) where N == U (square vertex space).
+
+    The candidate tensor (M, u_chunk, E) is built per u-chunk inside a
+    ``fori_loop`` so peak memory stays O(M * u_chunk * E) instead of
+    O(M * N * E); the chunk is shrunk to a divisor of U so the loop
+    needs no tail.
+    """
+    m, u = d.shape
+    e_cap = idx.shape[1]
+    chunk = min(u_chunk, u)
+    while u % chunk:
+        chunk //= 2
+    out0 = jnp.full((m, u), zero, d.dtype)
+
+    def body(i, out):
+        u0 = i * chunk
+        idx_c = lax.dynamic_slice(idx, (u0, 0), (chunk, e_cap))
+        ts_c = lax.dynamic_slice(ts, (u0, 0), (chunk, e_cap))
+        d_c = lax.dynamic_slice(d, (0, u0), (m, chunk))
+        cand = jnp.minimum(d_c[:, :, None], ts_c[None].astype(d.dtype))
+        return out.at[:, idx_c.reshape(-1)].max(cand.reshape(m, chunk * e_cap))
+
+    return lax.fori_loop(0, u // chunk, body, out0)
+
+
+def ell_gather_contract_naive(d, idx, ts, *, zero=NEG_INF):
+    """Densify-then-contract one-liner; O(M * N * N) scratch, tests only."""
+    u, _ = idx.shape
+    a = jnp.full((u, u), zero, ts.dtype)
+    a = a.at[jnp.arange(u)[:, None], idx].max(ts)
+    return jnp.max(jnp.minimum(d[:, :, None], a[None].astype(d.dtype)), axis=1)

@@ -48,6 +48,9 @@ F_CAP = 256   # frontier capacity the "batched-frontier" cell lowers: the
               # dirty-row slab is (Q, F, N, K) with F << N, so the round's
               # contraction prices O(J·F·N²) instead of O(J·N³)
 
+ELL_CAP_ANALYTIC = 8    # degree cap for the padded-ELL adjacency napkin
+SPILL_CAP_ANALYTIC = 256  # replicated spill-ring slots (16 B each)
+
 # multi-query serving cell (mode="batched"): the Table-2 workload stacked
 # into ONE (Q, N, N, K) relaxation — the BatchedDenseRPQEngine's round on
 # the production mesh
@@ -320,6 +323,21 @@ def run_rpq_cell(name: str, n_slots: int, query: str, v_chunk: int,
         "level_dots": (N_LEVELS + 1
                        if (mode == "mxu" or mode.endswith("mxu_bucket"))
                        else 0),
+        # adjacency-layout napkin (PR 8, adj_layout="ell"): every lowered
+        # cell here still carries the dense (L, N, N) slab — these analytic
+        # twins price what the SAME cell's adjacency state and base-term
+        # reads cost off the O(N²) wall (idx int32 + ts f32 rows at the
+        # default degree cap, plus the replicated 16 B/slot spill ring)
+        "adjacency": {
+            "dense_bytes": 4.0 * meta_labels * n_slots**2,
+            "ell_cap": ELL_CAP_ANALYTIC,
+            "ell_bytes": (8.0 * meta_labels * n_slots * ELL_CAP_ANALYTIC
+                          + 16.0 * SPILL_CAP_ANALYTIC),
+            # gather-contract op count for the frontier round's base term:
+            # O(J·F·E·N) instead of the slab's O(J·F·N²)
+            "ell_gather_ops": (2.0 * n_transitions * min(F_CAP, n_slots)
+                               * ELL_CAP_ANALYTIC * n_slots),
+        },
     }
     with open(path, "w") as f:
         json.dump(result, f, indent=1)

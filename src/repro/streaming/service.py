@@ -98,7 +98,12 @@ from typing import Deque, Dict, List, Optional, Set, Tuple, Union
 from ..core.automaton import compile_query
 from ..core.backend import resolve_backend
 from ..core.engine import BatchedDenseRPQEngine, PendingResults, RegisteredQuery
-from ..core.executor import FRONTIER_MODES, Executor, LocalExecutor
+from ..core.executor import (
+    ADJ_LAYOUTS,
+    FRONTIER_MODES,
+    Executor,
+    LocalExecutor,
+)
 from ..core.reference import RAPQ, RSPQ
 
 
@@ -221,7 +226,9 @@ class PersistentQueryService:
                  adaptive_batch: bool = False,
                  max_batch: int = 32,
                  frontier: str = "off",
-                 frontier_cap: int = 32):
+                 frontier_cap: int = 32,
+                 adj_layout: str = "dense",
+                 ell_cap: int = 8):
         self.window = float(window)
         self.slide = float(slide)
         self._executor_spec = executor
@@ -239,6 +246,21 @@ class PersistentQueryService:
                 f"({' | '.join(FRONTIER_MODES)})")
         self._frontier = frontier
         self._frontier_cap = int(frontier_cap)
+        # adjacency representation (tentpole of the blocked-sparse PR):
+        # "dense" = the (L, N, N) slab, "ell" = padded ELL rows + spill
+        # ring (core/sparse_adj.py). Results are bit-identical; memory is
+        # ∝ live edges and the seed term drops from O(N²K) to
+        # O(F·d_max·K) under ELL. Per-interval occupancy telemetry lands
+        # in :attr:`adjacency_log`.
+        if adj_layout not in ADJ_LAYOUTS:
+            raise ValueError(
+                f"unknown adj_layout {adj_layout!r} "
+                f"({' | '.join(ADJ_LAYOUTS)})")
+        self._adj_layout = adj_layout
+        self._ell_cap = int(ell_cap)
+        #: (tuples_seen_so_far, adjacency_stats snapshot) history, one
+        #: entry per slide boundary when the layout is "ell"
+        self.adjacency_log: List[Tuple[int, Dict[str, object]]] = []
         #: (tuples_seen_so_far, per-interval frontier stats delta) history
         self.frontier_log: List[Tuple[int, Dict[str, object]]] = []
         self._frontier_mark: Optional[Dict[str, object]] = None
@@ -278,10 +300,14 @@ class PersistentQueryService:
             from ..distributed.executor import MeshExecutor
 
             return MeshExecutor(backend=backend, frontier=self._frontier,
-                                frontier_cap=self._frontier_cap)
+                                frontier_cap=self._frontier_cap,
+                                adj_layout=self._adj_layout,
+                                ell_cap=self._ell_cap)
         if self._executor_spec == "local":
             return LocalExecutor(backend, frontier=self._frontier,
-                                 frontier_cap=self._frontier_cap)
+                                 frontier_cap=self._frontier_cap,
+                                 adj_layout=self._adj_layout,
+                                 ell_cap=self._ell_cap)
         raise ValueError(
             f"unknown executor {self._executor_spec!r} (local | mesh | instance)")
 
@@ -571,11 +597,15 @@ class PersistentQueryService:
             last slide boundary to :attr:`frontier_log` and hand it to the
             batch steering below."""
             delta = self._frontier_delta()
+            seen = max((self.stats[s.name].tuples
+                        for _qi, s in self._group.live_items()),
+                       default=0) if self._group is not None else 0
             if delta:
-                seen = max((self.stats[s.name].tuples
-                            for _qi, s in self._group.live_items()),
-                           default=0)
                 self.frontier_log.append((seen, delta))
+            if (self._group is not None
+                    and self._group.executor.adj_layout == "ell"):
+                self.adjacency_log.append(
+                    (seen, self._group.executor.adjacency_stats))
             return delta
 
         def adapt_batch(finterval: Dict[str, object]) -> None:

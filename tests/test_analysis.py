@@ -69,8 +69,9 @@ def step_fns(mesh, q_axes):
 def grow(n):
     f_cap = n + 3
     q_cap = 100
+    ell_cap = n + 5
     fns = step_fns(1, [1, 2])
-    return f_cap, q_cap, fns
+    return f_cap, q_cap, ell_cap, fns
 """
 
 R2_CLEAN = """\
@@ -87,8 +88,11 @@ def grow(n, dist):
     f_cap = _next_pow2(n)
     f_cap *= 2
     q_cap = dist.shape[0]
+    ell_cap = _next_pow2(n)
+    spill_cap = ell_cap
+    spill_cap *= 2
     fns = step_fns(1, (1, 2))
-    return f_cap, q_cap, fns
+    return f_cap, q_cap, ell_cap, spill_cap, fns
 """
 
 R3_BAD = """\
@@ -211,7 +215,7 @@ class Engine:
 
 FIXTURES = {
     "R1": (R1_BAD, 5, R1_CLEAN),
-    "R2": (R2_BAD, 3, R2_CLEAN),
+    "R2": (R2_BAD, 4, R2_CLEAN),
     "R3": (R3_BAD, 3, R3_CLEAN),
     "R4": (R4_BAD, 3, R4_CLEAN),
     "R5": (R5_BAD, 4, R5_CLEAN),

@@ -157,6 +157,23 @@ def test_deletions_benchmark():
 
 
 @pytest.mark.slow
+def test_sparse_adjacency_benchmark():
+    """benchmarks/fig18_sparse_adjacency in the CI slow tier: padded-ELL
+    adjacency vs the dense (L, N, N) slab — per-event result identity
+    (gmark window with deletions and expiry, frontier auto) AND the >=2x
+    per-event ingest acceptance bar at the largest measured anchor and at
+    the N=100k extrapolation (where the dense slab is infeasible by
+    construction) are asserted inside."""
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.fig18_sparse_adjacency"],
+        capture_output=True, text=True, timeout=2400,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+    )
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "[ok] fig18 >= 2x per-event ingest" in proc.stdout
+
+
+@pytest.mark.slow
 def test_dryrun_machinery_smoke():
     """Full dry-run protocol on one cell in a subprocess (512 host devices):
     lower + compile + memory/cost/collective scrape must all succeed."""
