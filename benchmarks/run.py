@@ -90,7 +90,7 @@ def main() -> None:
                    fig12_multi_query, fig13_query_churn,
                    fig14_sharded_engine, fig15_backend_shootout,
                    fig16_frontier, fig17_deletions, fig18_sparse_adjacency,
-                   roofline, table4_rspq)
+                   fig19_sparse_dist, roofline, table4_rspq)
 
     scale = 0.4 if args.fast else 1.0
     modules = [
@@ -124,6 +124,14 @@ def main() -> None:
         # dense slab is infeasible by construction (identity asserted inside)
         ("fig18", lambda: fig18_sparse_adjacency.run(
             anchors=tuple(int(a * scale) for a in (2048, 4096, 8192)),
+            reps=2 if args.fast else 3,
+            identity_edges=int(150 * scale))),
+        # fig19: row-sparse dist (per-source-row reachable sets + sparse
+        # emit) vs the dense (Q, N, N, K) slab — per-stage split at the
+        # anchors, sparse-only measured at N=128k where the dense dist is
+        # infeasible by construction (identity asserted inside)
+        ("fig19", lambda: fig19_sparse_dist.run(
+            anchors=tuple(int(a * scale) for a in (2048, 8192)),
             reps=2 if args.fast else 3,
             identity_edges=int(150 * scale))),
         ("roofline", roofline.run),

@@ -2,7 +2,8 @@
 
 Invariant: every traced-shape capacity (``f_cap``, ``frontier_cap``,
 ``q_cap``, ``n_slots``, Q/K pads, the ELL degree/spill-ring caps
-``ell_cap``/``spill_cap``) is bucketed — pow2 growth via
+``ell_cap``/``spill_cap``, the row-sparse dist slot/overflow caps
+``dist_cap``/``ovf_cap``) is bucketed — pow2 growth via
 ``_next_pow2``, multiple-round-up via ``_round_up``, or ×2 doubling of an
 already-bucketed value — so the jit compile cache is shared across
 capacity steps instead of recompiling per exact size. Raw capacity
@@ -40,7 +41,7 @@ TITLE = "recompile hazards (un-bucketed capacities, unhashable cache keys)"
 
 _CAP_RE = re.compile(
     r"(?:^|_)(f_cap|frontier_cap|q_cap|k_cap|n_cap|n_slots|q_pad|k_pad"
-    r"|ell_cap|spill_cap)$")
+    r"|ell_cap|spill_cap|dist_cap|ovf_cap)$")
 _BUCKET_HELPERS = {
     "_next_pow2", "next_pow2", "_round_up", "round_up", "pick_block_sizes",
 }
@@ -70,7 +71,9 @@ def _rhs_is_bucketed(node: ast.AST, cap_name: str) -> bool:
         # alias of an existing (already bucketed) value; .shape mirrors
         return True
     if isinstance(node, ast.Constant):
-        return _is_pow2(node.value)
+        # None is the "unset, sized later" sentinel (e.g. dist_ovf_cap
+        # before first placement), not a capacity value
+        return node.value is None or _is_pow2(node.value)
     if isinstance(node, ast.Call):
         f = dotted(node.func).rsplit(".", 1)[-1]
         if f in _BUCKET_HELPERS:

@@ -58,6 +58,7 @@ from ..kernels.bucket.bucket import bucket_maxmin_fused
 from ..kernels.bucket.ref import bucket_maxmin_ref
 from ..kernels.ell.ops import ell_gather_contract
 from ..kernels.maxmin.maxmin import maxmin_matmul, maxmin_matmul_fused
+from ..kernels.rowsparse.ops import rowsparse_gather
 from ..kernels.maxmin.ref import maxmin_matmul_ref
 from .sparse_adj import EllAdjacency
 
@@ -187,6 +188,20 @@ class ContractionBackend:
         return jnp.where(mask[:, None, None], contrib,
                          jnp.asarray(self.zero, contrib.dtype))
 
+    # -- row-sparse dist gather ----------------------------------------------
+
+    def gather_dist_rows(self, idx, ts, e: int) -> jnp.ndarray:
+        """Densify gathered row-sparse dist slot rows: idx/ts (M, C) ->
+        the (M, E) f32 slab a frontier round relaxes
+        (``dist_layout="row_sparse"``, PR 9). Operates on RAW f32
+        timestamps with a -inf zero regardless of :attr:`zero` — the
+        caller :meth:`encode`-s the densified slab at the backend
+        boundary, exactly where the dense layout encodes its gathered
+        rows, so clock-anchored representations never leak into the
+        stored sparse state. Pure scatter-max, exact for every backend;
+        :class:`PallasBackend` swaps in the fused kernel."""
+        return rowsparse_gather(idx, ts, e, zero=NEG_INF, use_pallas=False)
+
     def __repr__(self) -> str:  # pragma: no cover - debugging nicety
         return f"<{type(self).__name__} {self.name!r}>"
 
@@ -251,6 +266,10 @@ class PallasBackend(ContractionBackend):
             d_s, ell.idx[labs], ell.ts[labs], zero=self.zero,
             use_pallas=True, interpret=_interp_default(self.interpret))
         return self._fold_spill(contrib, d_s, ell, labs)
+
+    def gather_dist_rows(self, idx, ts, e: int):
+        return rowsparse_gather(idx, ts, e, zero=NEG_INF, use_pallas=True,
+                                interpret=_interp_default(self.interpret))
 
 
 class BucketBackend(ContractionBackend):

@@ -271,6 +271,8 @@ class BatchedDenseRPQEngine:
         frontier_cap: int = 32,
         adj_layout: str = "dense",  # dense | ell (executor adjacency layout)
         ell_cap: int = 8,
+        dist_layout: str = "dense",  # dense | row_sparse (dist layout)
+        dist_cap: int = 16,
     ):
         queries = list(queries)
         if not queries:
@@ -285,7 +287,8 @@ class BatchedDenseRPQEngine:
         # executor instance arrives already configured
         self.executor = executor if executor is not None else LocalExecutor(
             backend, frontier=frontier, frontier_cap=frontier_cap,
-            adj_layout=adj_layout, ell_cap=ell_cap)
+            adj_layout=adj_layout, ell_cap=ell_cap,
+            dist_layout=dist_layout, dist_cap=dist_cap)
         self.backend = self.executor.backend
         self.lane_specs: List[Optional[RegisteredQuery]] = list(queries)
         # round lane capacity to the executor's shard quantum (inert padding
@@ -494,7 +497,8 @@ class BatchedDenseRPQEngine:
         if self._check_conflict[lane]:
             a = self.executor.arrays
             low = a.now - self.windows
-            flags = np.asarray(_conflict_possible(a.dist, self.not_contained, low))
+            flags = np.asarray(_conflict_possible(
+                self.executor.dense_dist(), self.not_contained, low))
             if flags[lane]:
                 self.per_query_conflicted[lane] = True
         initial = self._decode_pairs(np.asarray(valid[lane]), bool(self._simple[lane]))
@@ -622,7 +626,8 @@ class BatchedDenseRPQEngine:
         if self._check_conflict.any():
             a = self.executor.arrays
             low = a.now - self.windows
-            flags = np.asarray(_conflict_possible(a.dist, self.not_contained, low))
+            flags = np.asarray(_conflict_possible(
+                self.executor.dense_dist(), self.not_contained, low))
             for qi in np.nonzero(flags & self._check_conflict)[0]:
                 self.per_query_conflicted[int(qi)] = True
         # decode deferred: snapshot the interner so later slot recycling
@@ -795,7 +800,7 @@ class BatchedDenseRPQEngine:
         # pending dispatch feeds it), so only the dist read below has to
         # wait on the in-flight closure
         low = self._host_now - np.asarray(self.windows)  # (Q,)
-        pop = np.asarray(a.dist) > low[:, None, None, None]
+        pop = np.asarray(self.executor.dense_dist()) > low[:, None, None, None]
         if qi is not None:
             pop = pop[qi : qi + 1]
         roots = int(pop.any(axis=(2, 3)).sum())
@@ -809,7 +814,8 @@ class BatchedDenseRPQEngine:
         gathers)."""
         self._drain_pending()
         a = self.executor.arrays
-        return {"adj": self.executor.dense_adj(), "dist": a.dist,
+        return {"adj": self.executor.dense_adj(),
+                "dist": self.executor.dense_dist(),
                 "emitted": a.emitted, "now": a.now}
 
     def load_state_arrays(self, state: Dict[str, jnp.ndarray]) -> None:
@@ -863,7 +869,7 @@ class BatchedDenseRPQEngine:
         adj = np.full(self.executor.adj_shape, NEG_INF, np.float32)
         for li_ck, lab in enumerate(labels):
             adj[self._label_index[lab], :ck_n, :ck_n] = adj_ck[li_ck]
-        dist = np.full(tuple(a.dist.shape), NEG_INF, np.float32)
+        dist = np.full(self.executor.dist_shape, NEG_INF, np.float32)
         emitted = np.zeros(tuple(a.emitted.shape), bool)
         # states beyond a lane's own dfa.k are provably -inf padding (no
         # transition ever scatters into them), so the K prefix carries
@@ -1011,12 +1017,15 @@ class DenseRPQEngine(BatchedDenseRPQEngine):
         frontier_cap: int = 32,
         adj_layout: str = "dense",
         ell_cap: int = 8,
+        dist_layout: str = "dense",
+        dist_cap: int = 16,
     ):
         super().__init__(
             [RegisteredQuery("q0", dfa, float(window), path_semantics)],
             n_slots=n_slots, batch_size=batch_size, backend=backend,
             executor=executor, frontier=frontier, frontier_cap=frontier_cap,
             adj_layout=adj_layout, ell_cap=ell_cap,
+            dist_layout=dist_layout, dist_cap=dist_cap,
         )
         self.dfa = dfa
         self.window = float(window)
@@ -1027,10 +1036,11 @@ class DenseRPQEngine(BatchedDenseRPQEngine):
 
     @property
     def arrays(self) -> EngineArrays:
-        # adj is always presented as the canonical dense slab — legacy
+        # adj/dist are always presented as canonical dense slabs — legacy
         # consumers (dryrun, examples) are layout-agnostic
         b = self.executor.arrays
-        return EngineArrays(self.executor.dense_adj(), b.dist[0],
+        return EngineArrays(self.executor.dense_adj(),
+                            self.executor.dense_dist()[0],
                             b.emitted[0], b.now)
 
     @arrays.setter
@@ -1038,8 +1048,11 @@ class DenseRPQEngine(BatchedDenseRPQEngine):
         adj = a.adj
         if self.executor.adj_layout == "ell":
             adj = self.executor.pack_adj(np.asarray(jax.device_get(adj)))
+        dist = a.dist[None]
+        if self.executor.dist_layout == "row_sparse":
+            dist = self.executor.pack_dist(np.asarray(jax.device_get(dist)))
         self.executor.set_arrays(BatchedEngineArrays(
-            adj, a.dist[None], a.emitted[None], a.now
+            adj, dist, a.emitted[None], a.now
         ))
 
     @property

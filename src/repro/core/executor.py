@@ -62,6 +62,17 @@ from .sparse_adj import (
     ell_to_dense,
     pack_ell,
 )
+from .sparse_dist import (
+    RowSparseDist,
+    pack_rows,
+    rsd_clear_lane,
+    rsd_clear_slots,
+    rsd_empty_like,
+    rsd_grow_repack,
+    rsd_live_entries,
+    rsd_row_counts,
+    rsd_to_dense,
+)
 
 FRONTIER_MODES = ("off", "on", "auto")
 
@@ -71,6 +82,14 @@ FRONTIER_MODES = ("off", "on", "auto")
 #: every dispatch is bit-identical across layouts (the conformance suite
 #: and docs/invariants.md "bit-identical spill" pin this).
 ADJ_LAYOUTS = ("dense", "ell")
+
+#: dist representations: "dense" is the canonical (Q, N, N, K) slab,
+#: "row_sparse" the per-(q, x) reachable-set layout (sparse_dist.py) —
+#: per-row slot sets plus a bounded overflow table, with the sparse emit
+#: that breaks the O(Q·N²) per-event scan. Same contract as ADJ_LAYOUTS:
+#: a construction choice, invisible to results (the conformance suite and
+#: docs/invariants.md "row-sparse overflow contract" pin this).
+DIST_LAYOUTS = ("dense", "row_sparse")
 
 
 def _next_pow2(n: int) -> int:
@@ -237,7 +256,10 @@ def _delete(
     low = now - windows
     valid_before = batched_valid_pairs(arrays.dist, finals_mask, low)
     adj = drop_batch(arrays, src, dst, lab, mask)
-    dist0 = jnp.full_like(arrays.dist, NEG_INF)
+    if isinstance(arrays.dist, RowSparseDist):
+        dist0 = rsd_empty_like(arrays.dist)
+    else:
+        dist0 = jnp.full_like(arrays.dist, NEG_INF)
     dist, rounds, qrounds = batched_closure(
         dist0, adj, btt, backend, query_mask=live_mask,
         now=now, w_max=w_max,
@@ -310,15 +332,18 @@ def _expire(arrays: BatchedEngineArrays, tau: jnp.ndarray, max_window: jnp.ndarr
 @jax.jit
 def _clear_slots(arrays: BatchedEngineArrays, slots: jnp.ndarray):
     """Zero out rows/cols of recycled slots (−inf / False) for ALL queries."""
+    n = arrays.emitted.shape[1]
+    dead = jnp.zeros((n,), bool).at[slots].set(True, mode="drop")
     if isinstance(arrays.adj, EllAdjacency):
-        n = arrays.dist.shape[1]
-        dead = jnp.zeros((n,), bool).at[slots].set(True, mode="drop")
         adj = ell_clear_slots(arrays.adj, dead)
     else:
         adj = arrays.adj.at[:, slots, :].set(NEG_INF, mode="drop")
         adj = adj.at[:, :, slots].set(NEG_INF, mode="drop")
-    dist = arrays.dist.at[:, slots, :, :].set(NEG_INF, mode="drop")
-    dist = dist.at[:, :, slots, :].set(NEG_INF, mode="drop")
+    if isinstance(arrays.dist, RowSparseDist):
+        dist = rsd_clear_slots(arrays.dist, dead)
+    else:
+        dist = arrays.dist.at[:, slots, :, :].set(NEG_INF, mode="drop")
+        dist = dist.at[:, :, slots, :].set(NEG_INF, mode="drop")
     emitted = arrays.emitted.at[:, slots, :].set(False, mode="drop")
     emitted = emitted.at[:, :, slots].set(False, mode="drop")
     return BatchedEngineArrays(adj, dist, emitted, arrays.now)
@@ -346,7 +371,9 @@ class Executor:
     def __init__(self, backend: BackendLike = "jnp",
                  frontier: str = "off", frontier_cap: int = 32,
                  adj_layout: str = "dense", ell_cap: int = 8,
-                 spill_cap: int = 256):
+                 spill_cap: int = 256,
+                 dist_layout: str = "dense", dist_cap: int = 16,
+                 dist_ovf_cap: Optional[int] = None):
         # first-class ContractionBackend; unknown names raise HERE, at
         # construction (they used to fall silently back to the jnp oracle)
         self.backend: ContractionBackend = resolve_backend(backend)
@@ -364,6 +391,15 @@ class Executor:
             raise ValueError(f"ell_cap must be >= 1, got {ell_cap}")
         if spill_cap < 1:
             raise ValueError(f"spill_cap must be >= 1, got {spill_cap}")
+        if dist_layout not in DIST_LAYOUTS:
+            raise ValueError(
+                f"unknown dist_layout {dist_layout!r}; known layouts: "
+                f"{', '.join(DIST_LAYOUTS)}")
+        if dist_cap < 1:
+            raise ValueError(f"dist_cap must be >= 1, got {dist_cap}")
+        if dist_ovf_cap is not None and dist_ovf_cap < 1:
+            raise ValueError(
+                f"dist_ovf_cap must be >= 1, got {dist_ovf_cap}")
         #: adjacency representation ("dense" | "ell"); results are layout-
         #: independent, memory and the seed term are not (sparse_adj.py)
         self.adj_layout = adj_layout
@@ -377,6 +413,24 @@ class Executor:
         self._ell_repacks = 0
         self._ell_spill_drains = 0
         self._ell_live_edges: Optional[int] = None  # snapshot at last repack
+        #: dist representation ("dense" | "row_sparse"); like adj_layout,
+        #: results are layout-independent, memory and the emit scan are not
+        #: (sparse_dist.py)
+        self.dist_layout = dist_layout
+        #: per-(q, x) reachable-set capacity — pow2-bucketed like the other
+        #: capacities (rule R2); grows ×2 at overflow drains and whenever a
+        #: host pack finds a fuller row
+        self.dist_cap = _next_pow2(dist_cap) if dist_cap > 1 else 1
+        #: overflow-table row capacity; None = sized at first placement to
+        #: cover every row at small scale (the tests' lost == 0 guarantee),
+        #: clamped so the table's dense rows stay bounded at large N
+        self.dist_ovf_cap = (_next_pow2(dist_ovf_cap)
+                             if dist_ovf_cap is not None else None)
+        self._dist_budget = 0     # claim bound since the last drain
+        self._dist_repacks = 0
+        self._dist_drains = 0
+        self._dist_lost = 0       # host view; refreshed at drains
+        self._dist_live_entries: Optional[int] = None
         #: frontier-restricted ingest: "off" = dense dispatch only (the
         #: pre-PR 5 path, bit-identical), "on" = frontier dispatch at a
         #: FIXED capacity, "auto" = frontier dispatch whose capacity grows
@@ -438,7 +492,7 @@ class Executor:
         adj_dev = self.pack_adj(state["adj"])
         self.set_arrays(BatchedEngineArrays(
             adj_dev,
-            self._put(np.asarray(state["dist"], np.float32), "dist"),
+            self.pack_dist(state["dist"]),
             self._put(np.asarray(state["emitted"], bool), "emitted"),
             self._put(np.asarray(state["now"], np.float32), "now"),
         ))
@@ -458,6 +512,33 @@ class Executor:
             return out
         return self._put(adj_np, "adj")
 
+    def pack_dist(self, dist):
+        """Host dense slab -> device dist in this executor's layout.
+
+        The row-sparse pack grows ``dist_cap`` ×2 until the fullest row
+        fits its slots — a host pack never routes a row to the overflow
+        table, the same no-spill-at-pack discipline as :meth:`pack_adj`.
+        The overflow table is sized once, at first placement: big enough
+        that EVERY row can overflow simultaneously at small scale (so
+        nothing is ever lost — the conformance tests' invariant), clamped
+        at 4096 rows so its dense (R, N·K) payload stays bounded when N
+        is large (where the table is pressure relief, not a fallback —
+        drains grow ``dist_cap`` before it can fill)."""
+        dist_np = np.asarray(dist, np.float32)
+        if self.dist_layout == "row_sparse":
+            q, n = dist_np.shape[0], dist_np.shape[1]
+            need = int((dist_np > NEG_INF).reshape(q, n, -1).sum(-1).max()) \
+                if dist_np.size else 0
+            while self.dist_cap < need:
+                self.dist_cap *= 2
+            if self.dist_ovf_cap is None:
+                self.dist_ovf_cap = _next_pow2(min(max(q * n, 64), 4096))
+            out = self._put_dist(
+                pack_rows(dist_np, self.dist_cap, self.dist_ovf_cap))
+            self._dist_budget = 0
+            return out
+        return self._put(dist_np, "dist")
+
     def _put(self, arr: np.ndarray, name: str):
         return jnp.asarray(arr)
 
@@ -465,6 +546,11 @@ class Executor:
         """Device placement for an ELL adjacency pytree (the mesh executor
         overrides to shard the u-row axis over 'model')."""
         return jax.tree_util.tree_map(jnp.asarray, ell)
+
+    def _put_dist(self, sd: RowSparseDist) -> RowSparseDist:
+        """Device placement for a row-sparse dist pytree (the mesh executor
+        overrides to shard the lane axis over 'data')."""
+        return jax.tree_util.tree_map(jnp.asarray, sd)
 
     def dense_adj(self) -> jnp.ndarray:
         """The adjacency in canonical dense form regardless of layout —
@@ -484,6 +570,26 @@ class Executor:
             return (a.n_labels, a.n_slots, a.n_slots)
         return tuple(a.shape)
 
+    def dense_dist(self) -> jnp.ndarray:
+        """The dist in canonical dense ``(Q, N, N, K)`` form regardless of
+        layout — checkpoints, conflict probes and the reference engines
+        read this (maintenance paths; the densify is traced jnp, not a
+        sync)."""
+        d = self._arrays.dist
+        if isinstance(d, RowSparseDist):
+            return rsd_to_dense(d)
+        return d
+
+    @property
+    def dist_shape(self) -> Tuple[int, int, int, int]:
+        """Logical dense ``(Q, N, N, K)`` dist shape regardless of layout
+        (shape metadata only — never densifies or syncs)."""
+        d = self._arrays.dist
+        if isinstance(d, RowSparseDist):
+            q, n, _c = d.idx.shape
+            return (q, n, n, d.k)
+        return tuple(d.shape)
+
     def grow(self, *, n_slots: Optional[int] = None, q_cap: Optional[int] = None,
              k: Optional[int] = None, n_label_slots: Optional[int] = None) -> None:
         """Grow device state in place (append-only padding: -inf / False).
@@ -496,7 +602,7 @@ class Executor:
             l_old, n_old = a.adj.n_labels, a.adj.n_slots
         else:
             l_old, n_old = a.adj.shape[0], a.adj.shape[1]
-        q_old, k_old = a.dist.shape[0], a.dist.shape[3]
+        q_old, _, _, k_old = self.dist_shape
         n_new = max(n_slots or 0, n_old)
         l_new = max(n_label_slots or 0, l_old)
         q_new = max(q_cap or 0, q_old)
@@ -507,7 +613,7 @@ class Executor:
         # dense slab, so an ELL executor re-packs at the new shape (ring
         # drained as a side effect)
         adj = np.asarray(jax.device_get(self.dense_adj()))
-        dist = np.asarray(jax.device_get(a.dist))
+        dist = np.asarray(jax.device_get(self.dense_dist()))
         emitted = np.asarray(jax.device_get(a.emitted))
         adj2 = np.full((l_new, n_new, n_new), NEG_INF, np.float32)
         adj2[:l_old, :n_old, :n_old] = adj
@@ -532,6 +638,8 @@ class Executor:
         bit-identical either way)."""
         if self.adj_layout == "ell":
             self._reserve_spill(len(src))
+        if self.dist_layout == "row_sparse":
+            self._reserve_dist(self.frontier != "off")
         if self.frontier != "off":
             return self._ingest_frontier_dispatch(
                 src, dst, lab, ts, mask, ts_floor, tables)
@@ -573,6 +681,8 @@ class Executor:
         dropped edges are cleared and re-derived (overflow falls back to
         the dense from-scratch loop in-dispatch; results are bit-identical
         either way)."""
+        if self.dist_layout == "row_sparse":
+            self._reserve_dist(self.frontier != "off")
         if self.frontier != "off":
             return self._delete_frontier_dispatch(
                 src, dst, lab, mask, ts_now, tables)
@@ -607,6 +717,8 @@ class Executor:
         """Run the batched closure to fixpoint in place (no adjacency
         change): lane seeding at registration (``query_mask`` = just the new
         lane) or any state re-derivation."""
+        if self.dist_layout == "row_sparse":
+            self._reserve_dist(False)
         a = self._arrays
         mask = tables.live_mask if query_mask is None else jnp.asarray(
             np.asarray(query_mask, bool))
@@ -638,8 +750,12 @@ class Executor:
 
     def clear_lane(self, lane: int) -> None:
         a = self._arrays
+        if isinstance(a.dist, RowSparseDist):
+            dist = rsd_clear_lane(a.dist, jnp.asarray(lane, jnp.int32))
+        else:
+            dist = a.dist.at[lane].set(NEG_INF)
         self._arrays = a._replace(
-            dist=a.dist.at[lane].set(NEG_INF),
+            dist=dist,
             emitted=a.emitted.at[lane].set(False),
         )
 
@@ -731,11 +847,92 @@ class Executor:
                           else None),
         }
 
+    # -- row-sparse dist overflow budget -------------------------------------
+    #
+    # Same shape as the ELL spill budget above, at row granularity: the
+    # overflow table never silently grows stale — the host tracks a
+    # conservative bound on table claims since the last drain (a frontier
+    # dispatch can claim at most its frontier rows; a dense round trip can
+    # re-pack up to every row) and syncs the claim cursor BEFORE the bound
+    # crosses the table capacity. A drain that finds claims means rows
+    # outgrew ``dist_cap`` — grow it ×2 toward the observed max row
+    # occupancy and re-pack in place (rsd_grow_repack: no densify), which
+    # empties the table. A drain that finds the table empty just resets
+    # the budget. While the table can hold every row at once (the default
+    # sizing at small scale), nothing can EVER be lost; at large N the
+    # clamped table plus these drains keep pressure near zero, and any
+    # loss is counted (``dist_stats["lost"]``), never silent.
+
+    def _reserve_dist(self, frontier: bool) -> None:
+        q, n = self.dist_shape[0], self.dist_shape[1]
+        w = q * min(self.frontier_cap, n) if frontier else q * n
+        w = min(w, self.dist_ovf_cap)
+        if self._dist_budget + w > self.dist_ovf_cap:
+            self._drain_dist()
+        self._dist_budget += w
+
+    def _drain_dist(self) -> None:
+        self._dist_drains += 1
+        d = self._arrays.dist
+        ptr, lost = (int(x) for x in jax.device_get((d.ovf_ptr, d.lost)))
+        self._dist_lost = lost
+        if ptr > 0:
+            need = int(jax.device_get(jnp.max(rsd_row_counts(d))))
+            while self.dist_cap < need:
+                self.dist_cap *= 2
+            self._repack_dist()
+        else:
+            self._dist_budget = 0
+
+    def _repack_dist(self) -> None:
+        """In-place re-pack at the current capacities (rsd_grow_repack —
+        no densify round trip): overflow rows that now fit move into their
+        slots, the table empties. Growth and drains reuse this; adj and
+        emitted stay resident."""
+        d = self._arrays.dist
+        sd = rsd_grow_repack(d, self.dist_cap, self.dist_ovf_cap)
+        self._arrays = self._arrays._replace(dist=self._put_dist(sd))
+        self._dist_repacks += 1
+        self._dist_live_entries = int(jax.device_get(rsd_live_entries(sd)))
+        self._dist_budget = 0
+
+    @property
+    def dist_stats(self) -> Dict[str, object]:
+        """Dist-representation telemetry (host-known values only — reading
+        this never syncs the device stream). ``live_entries`` and
+        ``occupancy`` are snapshots from the last re-pack (None before
+        one); ``lost`` is the host's view from the last drain (rows
+        dropped with the overflow table full — 0 whenever the table
+        covers every row); ``dist_bytes`` is the exact device footprint
+        of the current representation."""
+        d = self._arrays.dist if self._arrays is not None else None
+        if isinstance(d, RowSparseDist):
+            slot_cells = d.n_lanes * d.n_slots * d.dist_cap
+            dist_bytes = sum(int(np.prod(x.shape)) * x.dtype.itemsize
+                             for x in d)
+        else:
+            slot_cells = int(np.prod(d.shape)) if d is not None else 0
+            dist_bytes = slot_cells * 4
+        return {
+            "layout": self.dist_layout,
+            "dist_cap": self.dist_cap,
+            "ovf_cap": self.dist_ovf_cap,
+            "repacks": self._dist_repacks,
+            "drains": self._dist_drains,
+            "lost": self._dist_lost,
+            "live_entries": self._dist_live_entries,
+            "slot_cells": slot_cells,
+            "dist_bytes": dist_bytes,
+            "occupancy": (self._dist_live_entries / slot_cells
+                          if self._dist_live_entries is not None and slot_cells
+                          else None),
+        }
+
     # -- round accounting ----------------------------------------------------
 
     def _account(self, rounds, qrounds, n_live: int, fstats=None,
                  is_delete: bool = False) -> None:
-        n = int(self._arrays.dist.shape[1]) if self._arrays is not None else 0
+        n = self.dist_shape[1] if self._arrays is not None else 0
         self._pending_counts.append(
             (rounds, qrounds, n_live, fstats, n, is_delete))
         # auto-frontier flushes more eagerly: the ×2 capacity growth reads
@@ -794,7 +991,7 @@ class Executor:
         if self._frontier_fallbacks <= self._frontier_growth_mark:
             return
         self._frontier_growth_mark = self._frontier_fallbacks
-        n = (int(self._arrays.dist.shape[1])
+        n = (self.dist_shape[1]
              if self._arrays is not None else self._frontier_max_lane_rows)
         limit = _next_pow2(n)
         target = min(_next_pow2(max(self._frontier_max_lane_rows,

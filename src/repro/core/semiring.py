@@ -45,6 +45,9 @@ import numpy as np
 
 from .backend import BackendLike, ContractionBackend, resolve_backend
 from .sparse_adj import EllAdjacency, ell_label_rows, ell_rows_dense
+from .sparse_dist import (RowSparseDist, rsd_from_dense, rsd_gather_rows,
+                          rsd_scatter_rows, rsd_seed_gathered, rsd_to_dense,
+                          rsd_valid_pairs)
 
 NEG_INF = float("-inf")
 
@@ -362,7 +365,19 @@ def batched_closure(
     anchor backends whose operand representation moves with the clock:
     ``prepare_state`` converts the f32 timestamp arrays once at entry,
     every round runs in the backend's representation, ``decode_state``
-    converts back once at exit (identity for jnp/pallas)."""
+    converts back once at exit (identity for jnp/pallas).
+
+    A :class:`~repro.core.sparse_dist.RowSparseDist` ``dist`` takes the
+    dense-superset round trip: densify, run the identical dense loop,
+    re-pack (the non-frontier dispatches — query registration, relax —
+    are whole-state fixpoints anyway; only the frontier paths have a
+    row-local form worth keeping sparse end-to-end)."""
+    if isinstance(dist, RowSparseDist):
+        dense, rounds, qrounds = batched_closure(
+            rsd_to_dense(dist), adj, btt, backend, max_rounds,
+            query_mask, now, w_max)
+        return (rsd_from_dense(dense, dist.dist_cap, dist.ovf_cap,
+                               dist.lost), rounds, qrounds)
     backend = resolve_backend(backend)
     q, n, _, k = dist.shape
     bound = max_rounds if max_rounds > 0 else n * k + 1
@@ -378,7 +393,14 @@ def batched_valid_pairs(
     dist: jnp.ndarray, finals: jnp.ndarray, low: jnp.ndarray
 ) -> jnp.ndarray:
     """(Q, N, N) bool validity per query: finals is (Q, K), low is (Q,)
-    (per-query window thresholds applied at read time)."""
+    (per-query window thresholds applied at read time).
+
+    A :class:`~repro.core.sparse_dist.RowSparseDist` ``dist`` routes to
+    the sparse emit (:func:`~repro.core.sparse_dist.rsd_valid_pairs`):
+    only stored entries are reduced — O(Q·N·C) instead of the dense
+    O(Q·N²·K) scan that dominates per-event cost at large N."""
+    if isinstance(dist, RowSparseDist):
+        return rsd_valid_pairs(dist, finals, low)
     acc = jnp.where(finals[:, None, None, :], dist, NEG_INF)
     best = jnp.max(acc, axis=3)
     return best > low[:, None, None]
@@ -523,11 +545,36 @@ def frontier_relax_round(
     with ``rowmask`` — the next round's mask (a row whose round produced no
     update is at its fixpoint forever: it depends only on itself)."""
     backend = resolve_backend(backend)
-    q, n, _, k = dist.shape
-    f = rows.shape[1]
-    zero = jnp.asarray(backend.zero, dist.dtype)
+    q = dist.shape[0]
     lane = jnp.arange(q)[:, None]
     slab = dist[lane, rows]                            # (Q, F, N, K)
+    new_slab, changed = _frontier_slab_round(slab, adj, btt, backend,
+                                             rows, rowmask)
+    out = dist.at[lane, rows].max(new_slab)
+    return out, changed
+
+
+def _frontier_slab_round(
+    slab: jnp.ndarray,          # (Q, F, N, K) gathered frontier rows
+    adj: jnp.ndarray,           # (L, N, N) shared adjacency (same repr)
+    btt: BatchedTransitionTable,
+    backend: ContractionBackend,
+    rows: jnp.ndarray,          # (Q, F) int32 frontier row indices
+    rowmask: jnp.ndarray,       # (Q, F) bool valid-slot mask
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One frontier round on the gathered slab itself (no scatter back).
+
+    The (max, min) recurrence couples a source row only to ITSELF and the
+    shared adjacency, and the frontier only shrinks, so a round never
+    needs to read a row outside the slab: keeping the whole round loop
+    slab-local is bit-identical to re-gathering from ``dist`` each round
+    (valid rows are unique per lane — ``pack_frontier`` packs a mask —
+    and padded slots are masked to zero contribution). The dense-layout
+    :func:`frontier_relax_round` wraps this with its per-round
+    gather/scatter-max; the row-sparse layout gathers ONCE, loops here,
+    and scatters once at the end of the dispatch."""
+    q, f, n, k = slab.shape
+    zero = jnp.asarray(backend.zero, slab.dtype)
     slab_s = slab[btt.qidx, :, :, btt.src]             # (J, F, N) [f, u]
     rows_j = rows[btt.qidx]                            # (J, F)
     if isinstance(adj, EllAdjacency):
@@ -553,8 +600,7 @@ def frontier_relax_round(
     new_slab = jnp.maximum(slab, upd)
     changed = jnp.logical_and(
         jnp.any(new_slab > slab, axis=(2, 3)), rowmask)
-    out = dist.at[lane, rows].max(new_slab)
-    return out, changed
+    return new_slab, changed
 
 
 def frontier_closure(
@@ -584,6 +630,11 @@ def frontier_closure(
     never dirtied counts ZERO rounds here (the dense loop charges every
     live lane its round-1 no-op), which is exactly the per-event work
     decoupling the frontier buys."""
+    if isinstance(dist, RowSparseDist):
+        return _rowsparse_frontier_closure(
+            dist, adj, btt, backend, src, smask, f_cap,
+            query_mask=query_mask, max_rounds=max_rounds,
+            now=now, w_max=w_max)
     backend = resolve_backend(backend)
     q, n, _, k = dist.shape
     bound = max_rounds if max_rounds > 0 else n * k + 1
@@ -713,6 +764,11 @@ def frontier_delete(
 
     Returns ``(dist, rounds, query_rounds, stats)`` with the same contract
     as :func:`frontier_closure`."""
+    if isinstance(dist, RowSparseDist):
+        return _rowsparse_frontier_delete(
+            dist, adj, btt, backend, src, smask, f_cap,
+            query_mask=query_mask, max_rounds=max_rounds,
+            now=now, w_max=w_max)
     backend = resolve_backend(backend)
     q, n, _, k = dist.shape
     bound = max_rounds if max_rounds > 0 else n * k + 1
@@ -761,6 +817,184 @@ def frontier_delete(
         overflow, dense_branch, frontier_branch, None)
     stats = FrontierStats(seed_rows, max_lane_rows, rows_relaxed, overflow)
     return backend.decode_state(dist_f, now, w_max), rounds, qrounds, stats
+
+
+# ---------------------------------------------------------------------------
+# Row-sparse dist frontier paths (PR 9 tentpole)
+#
+# Same closure/delete contracts as the dense-layout functions above, with
+# the (Q, N, N, K) slab replaced by a RowSparseDist. The single-source row
+# independence that justifies the frontier in the first place also means a
+# whole DISPATCH only ever reads and writes the frontier rows — so instead
+# of gathering and scattering per round, the row-sparse path densifies the
+# frontier rows ONCE (the backend's gather_dist_rows kernel), runs every
+# round slab-local (`_frontier_slab_round`), and scatters the finished rows
+# back into the per-row sets once at the end. Backend encode/decode wraps
+# the slab at the same boundary the dense path wraps the full state, so
+# clock-anchored representations never leak into the stored sparse state.
+#
+# Overflow keeps the dense lax.cond fallback, upgraded to a round trip:
+# densify -> exact dense loop -> in-jit re-pack (rsd_from_dense). Rows that
+# outgrow dist_cap during the re-pack or the scatter land in the bounded
+# overflow table; the executor's host-side budget drains and grows the
+# capacity before the table can fill (docs/invariants.md, "the row-sparse
+# overflow contract"). Results are bit-identical to the dense layout for
+# the float backends; for the bucket backend identity is OBSERVABLE (same
+# emitted streams) rather than raw — untouched sparse rows keep
+# window-dead entries a dense round trip would garbage-collect, the same
+# caveat the PR 6 delete section documents above.
+# ---------------------------------------------------------------------------
+
+
+def _rowsparse_frontier_closure(
+    sd: RowSparseDist,
+    adj,
+    btt: BatchedTransitionTable,
+    backend: BackendLike,
+    src: jnp.ndarray,
+    smask: jnp.ndarray,
+    f_cap: int,
+    query_mask: Optional[jnp.ndarray] = None,
+    max_rounds: int = 0,
+    now: Optional[jnp.ndarray] = None,
+    w_max: Optional[jnp.ndarray] = None,
+) -> Tuple[RowSparseDist, jnp.ndarray, jnp.ndarray, FrontierStats]:
+    """:func:`frontier_closure` on a :class:`RowSparseDist` (see the
+    section comment): gather-once / slab-local rounds / scatter-once,
+    with the overflow fallback as a densify round trip."""
+    backend = resolve_backend(backend)
+    q, n, _c = sd.idx.shape
+    k = sd.k
+    bound = max_rounds if max_rounds > 0 else n * k + 1
+    mask0 = (jnp.ones((q,), bool) if query_mask is None
+             else jnp.asarray(query_mask, bool))
+    # the seed walks stored entries only — same mask as the dense scan on
+    # the densified state (rsd_seed_gathered docstring), so the overflow
+    # decision and telemetry are layout-independent
+    dirty = rsd_seed_gathered(sd, src, smask, mask0)
+    rows, rowmask0, cnt = pack_frontier(dirty, f_cap)
+    seed_rows = jnp.sum(cnt)
+    max_lane_rows = jnp.max(cnt)
+    overflow = jnp.any(cnt > f_cap)
+    # encode the adjacency operand once, shared by both branches (the
+    # dist operand of prepare_state is a dummy scalar: the branches
+    # encode their own slab/state at their own boundary)
+    _, adj_op = backend.prepare_state(
+        jnp.asarray(NEG_INF, jnp.float32), adj, now, w_max)
+
+    def dense_branch(_):
+        d_op = backend.encode(rsd_to_dense(sd), now, w_max)
+        d_f, rounds, qrounds = _masked_closure_loop(
+            d_op, adj_op, btt, backend, mask0, bound)
+        dense_f = backend.decode_state(d_f, now, w_max)
+        out = rsd_from_dense(dense_f, sd.dist_cap, sd.ovf_cap, sd.lost)
+        live_rows = jnp.sum(mask0.astype(jnp.int32)) * n
+        return out, rounds, qrounds, rounds * live_rows
+
+    def frontier_branch(_):
+        slab0 = rsd_gather_rows(sd, rows, backend.gather_dist_rows)
+        slab_op = backend.encode(slab0, now, w_max)
+
+        def cond(carry):
+            _s, rm, it, _qr, _rr = carry
+            return jnp.logical_and(jnp.any(rm), it < bound)
+
+        def body(carry):
+            s, rm, it, qr, rr = carry
+            ns, changed = _frontier_slab_round(s, adj_op, btt, backend,
+                                               rows, rm)
+            qactive = jnp.any(rm, axis=1).astype(jnp.int32)
+            return (ns, changed, it + 1, qr + qactive,
+                    rr + jnp.sum(rm.astype(jnp.int32)))
+
+        s_f, _, rounds, qrounds, rr = jax.lax.while_loop(
+            cond, body,
+            (slab_op, rowmask0, jnp.asarray(0, jnp.int32),
+             jnp.zeros((q,), jnp.int32), jnp.asarray(0, jnp.int32)))
+        slab_f = backend.decode_state(s_f, now, w_max)
+        out = rsd_scatter_rows(sd, rows, rowmask0, slab_f)
+        return out, rounds, qrounds, rr
+
+    out, rounds, qrounds, rows_relaxed = jax.lax.cond(
+        overflow, dense_branch, frontier_branch, None)
+    stats = FrontierStats(seed_rows, max_lane_rows, rows_relaxed, overflow)
+    return out, rounds, qrounds, stats
+
+
+def _rowsparse_frontier_delete(
+    sd: RowSparseDist,
+    adj,
+    btt: BatchedTransitionTable,
+    backend: BackendLike,
+    src: jnp.ndarray,
+    smask: jnp.ndarray,
+    f_cap: int,
+    query_mask: Optional[jnp.ndarray] = None,
+    max_rounds: int = 0,
+    now: Optional[jnp.ndarray] = None,
+    w_max: Optional[jnp.ndarray] = None,
+) -> Tuple[RowSparseDist, jnp.ndarray, jnp.ndarray, FrontierStats]:
+    """:func:`frontier_delete` on a :class:`RowSparseDist`: the cone is
+    seeded from the stored entries of the PRE-delete state, cone rows
+    re-derive from a zeroed slab (clearing + re-deriving in one scatter:
+    the final scatter's full-row overwrite IS the clear — exact even for
+    rows that shrink), non-cone rows are never touched."""
+    backend = resolve_backend(backend)
+    q, n, _c = sd.idx.shape
+    k = sd.k
+    bound = max_rounds if max_rounds > 0 else n * k + 1
+    mask0 = (jnp.ones((q,), bool) if query_mask is None
+             else jnp.asarray(query_mask, bool))
+    dirty = rsd_seed_gathered(sd, src, smask, mask0)
+    rows, rowmask0, cnt = pack_frontier(dirty, f_cap)
+    seed_rows = jnp.sum(cnt)
+    max_lane_rows = jnp.max(cnt)
+    overflow = jnp.any(cnt > f_cap)
+    _, adj_op = backend.prepare_state(
+        jnp.asarray(NEG_INF, jnp.float32), adj, now, w_max)
+
+    def dense_branch(_):
+        # from-scratch over ALL rows — exactly the non-frontier delete
+        # computation, re-packed in-jit on the way out
+        d0 = backend.encode(
+            jnp.full((q, n, n, k), NEG_INF, jnp.float32), now, w_max)
+        d_f, rounds, qrounds = _masked_closure_loop(
+            d0, adj_op, btt, backend, mask0, bound)
+        dense_f = backend.decode_state(d_f, now, w_max)
+        out = rsd_from_dense(dense_f, sd.dist_cap, sd.ovf_cap, sd.lost)
+        live_rows = jnp.sum(mask0.astype(jnp.int32)) * n
+        return out, rounds, qrounds, rounds * live_rows
+
+    def frontier_branch(_):
+        # cone rows start at the semiring zero (re-derivation from
+        # scratch); rounds only read slab rows, so no gather is needed
+        slab0 = backend.encode(
+            jnp.full((q, f_cap, n, k), NEG_INF, jnp.float32), now, w_max)
+
+        def cond(carry):
+            _s, rm, it, _qr, _rr = carry
+            return jnp.logical_and(jnp.any(rm), it < bound)
+
+        def body(carry):
+            s, rm, it, qr, rr = carry
+            ns, changed = _frontier_slab_round(s, adj_op, btt, backend,
+                                               rows, rm)
+            qactive = jnp.any(rm, axis=1).astype(jnp.int32)
+            return (ns, changed, it + 1, qr + qactive,
+                    rr + jnp.sum(rm.astype(jnp.int32)))
+
+        s_f, _, rounds, qrounds, rr = jax.lax.while_loop(
+            cond, body,
+            (slab0, rowmask0, jnp.asarray(0, jnp.int32),
+             jnp.zeros((q,), jnp.int32), jnp.asarray(0, jnp.int32)))
+        slab_f = backend.decode_state(s_f, now, w_max)
+        out = rsd_scatter_rows(sd, rows, rowmask0, slab_f)
+        return out, rounds, qrounds, rr
+
+    out, rounds, qrounds, rows_relaxed = jax.lax.cond(
+        overflow, dense_branch, frontier_branch, None)
+    stats = FrontierStats(seed_rows, max_lane_rows, rows_relaxed, overflow)
+    return out, rounds, qrounds, stats
 
 
 # ---------------------------------------------------------------------------

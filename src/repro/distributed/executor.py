@@ -66,6 +66,7 @@ from ..core.executor import (
     emit_new,
 )
 from ..core.sparse_adj import EllAdjacency, ell_to_dense
+from ..core.sparse_dist import RowSparseDist, rsd_from_dense, rsd_to_dense
 from ..core.semiring import (
     NEG_INF,
     BatchedTransitionTable,
@@ -101,6 +102,34 @@ def _adj_dense(adj):
     return ell_to_dense(adj) if isinstance(adj, EllAdjacency) else adj
 
 
+def _dist_dense(dist):
+    """Trace-time dist layout adapter, the dist twin of :func:`_adj_dense`:
+    the shard_map closures relax the canonical dense ``(Q, N, N, K)`` slab
+    (one in-jit densify), while the row-sparse pytree carries the reachable
+    sets between dispatches so checkpoint/emit state stays compact."""
+    return rsd_to_dense(dist) if isinstance(dist, RowSparseDist) else dist
+
+
+def _dist_like(dist0, dense):
+    """Repack a dense closure result into ``dist0``'s layout, carrying its
+    capacities and loss counter — identity under the dense layout. The
+    repack is a canonical pack (fitting rows -> slots, overfull -> table),
+    so the mesh path is observably identical to the local sparse path."""
+    if isinstance(dist0, RowSparseDist):
+        return rsd_from_dense(dense, dist0.dist_cap, dist0.ovf_cap,
+                              dist0.lost)
+    return dense
+
+
+def _dist_logical_shape(dist):
+    """Logical dense ``(Q, N, N, K)`` shape of either layout (trace-time
+    metadata only — never densifies)."""
+    if isinstance(dist, RowSparseDist):
+        q, n, _c = dist.idx.shape
+        return (q, n, n, dist.k)
+    return tuple(dist.shape)
+
+
 def _adj_shardings(mesh: Mesh, adj_layout: str):
     """Canonical adjacency sharding per layout: the dense slab shards its v
     axis over 'model'; the ELL pytree shards idx/ts on the u-ROW axis (rows
@@ -111,6 +140,20 @@ def _adj_shardings(mesh: Mesh, adj_layout: str):
         return EllAdjacency(idx=row, ts=row, spill_src=rep, spill_dst=rep,
                             spill_lab=rep, spill_ts=rep, spill_ptr=rep)
     return NamedSharding(mesh, P(None, None, "model"))
+
+
+def _dist_shardings(mesh: Mesh, dist_layout: str, qa):
+    """Canonical dist sharding per layout: the dense slab shards Q over the
+    lane axes and v over 'model'; the row-sparse pytree shards its source-row
+    slabs on the lane axis only (rows are the gather/scatter unit; the v/k
+    entries inside a row are the payload) and replicates the small bounded
+    overflow table + counters."""
+    if dist_layout == "row_sparse":
+        row = NamedSharding(mesh, P(qa, None, None))
+        rep = NamedSharding(mesh, P())
+        return RowSparseDist(idx=row, ts=row, ovf_rows=rep, ovf_ts=rep,
+                             ovf_ptr=rep, lost=rep)
+    return NamedSharding(mesh, P(qa, None, "model", None))
 
 
 def make_sharded_closure(mesh: Mesh, backend,
@@ -363,19 +406,23 @@ def batched_round_lowering(mesh: Mesh, btt: BatchedTransitionTable,
 
 @functools.lru_cache(maxsize=None)
 def _mesh_step_fns(mesh: Mesh, q_axes: Tuple[str, ...], backend,
-                   adj_layout: str = "dense"):
+                   adj_layout: str = "dense", dist_layout: str = "dense"):
     """Jitted mesh step functions + canonical shardings, cached per
-    (mesh, lane axes, backend object, adjacency layout) so every
-    MeshExecutor on the same mesh shares one compile cache (mirroring the
-    module-level jits of the local executor; string-named backends resolve
-    to process-wide singletons, so the cache key is stable). Under
+    (mesh, lane axes, backend object, adjacency layout, dist layout) so
+    every MeshExecutor on the same mesh shares one compile cache (mirroring
+    the module-level jits of the local executor; string-named backends
+    resolve to process-wide singletons, so the cache key is stable). Under
     ``adj_layout="ell"`` the batch fold / drop runs on the sharded ELL
     pytree and the closures contract a one-shot in-jit densified view —
-    bit-identical to the dense layout (see core/sparse_adj.py)."""
+    bit-identical to the dense layout (see core/sparse_adj.py). Under
+    ``dist_layout="row_sparse"`` the closures likewise relax an in-jit
+    densified dist and the result repacks into the row-sparse pytree on
+    the way out — the shard_map bodies stay layout-oblivious (see
+    core/sparse_dist.py)."""
     qa = q_axes[0] if len(q_axes) == 1 else tuple(q_axes)
     sh = dict(
         adj=_adj_shardings(mesh, adj_layout),
-        dist=NamedSharding(mesh, P(qa, None, "model", None)),
+        dist=_dist_shardings(mesh, dist_layout, qa),
         emitted=NamedSharding(mesh, P(qa, None, None)),
         now=NamedSharding(mesh, P()),
     )
@@ -388,8 +435,10 @@ def _mesh_step_fns(mesh: Mesh, q_axes: Tuple[str, ...], backend,
         adj, now = apply_batch(arrays, src, dst, lab, ts, mask, ts_floor)
         adj_d = _adj_dense(adj)
         dist, shard_rounds, qrounds = closure(
-            arrays.dist, adj_d, adj_d, *rows, live_mask, now, w_max)
+            _dist_dense(arrays.dist), adj_d, adj_d, *rows, live_mask, now,
+            w_max)
         out, new = emit_new(arrays, dist, adj, now, finals_mask, windows)
+        out = out._replace(dist=_dist_like(arrays.dist, dist))
         return out, new, shard_rounds, qrounds
 
     def delete_impl(arrays, src, dst, lab, mask, ts_now,
@@ -399,20 +448,23 @@ def _mesh_step_fns(mesh: Mesh, q_axes: Tuple[str, ...], backend,
         valid_before = batched_valid_pairs(arrays.dist, finals_mask, low)
         adj = drop_batch(arrays, src, dst, lab, mask)
         adj_d = _adj_dense(adj)
-        dist0 = jnp.full_like(arrays.dist, NEG_INF)
+        q, n, _, k = _dist_logical_shape(arrays.dist)
+        dist0 = jnp.full((q, n, n, k), NEG_INF, jnp.float32)
         dist, shard_rounds, qrounds = closure(
             dist0, adj_d, adj_d, *rows, live_mask, now, w_max)
         valid_after = batched_valid_pairs(dist, finals_mask, low)
         invalidated = jnp.logical_and(valid_before, jnp.logical_not(valid_after))
-        return (BatchedEngineArrays(adj, dist, arrays.emitted, now),
+        return (BatchedEngineArrays(adj, _dist_like(arrays.dist, dist),
+                                    arrays.emitted, now),
                 invalidated, shard_rounds, qrounds)
 
     def relax_impl(arrays, rows, query_mask, w_max):
         adj_d = _adj_dense(arrays.adj)
         dist, shard_rounds, qrounds = closure(
-            arrays.dist, adj_d, adj_d, *rows, query_mask,
+            _dist_dense(arrays.dist), adj_d, adj_d, *rows, query_mask,
             arrays.now, w_max)
-        return arrays._replace(dist=dist), shard_rounds, qrounds
+        return (arrays._replace(dist=_dist_like(arrays.dist, dist)),
+                shard_rounds, qrounds)
 
     return dict(
         shardings=sh,
@@ -427,12 +479,13 @@ def _mesh_step_fns(mesh: Mesh, q_axes: Tuple[str, ...], backend,
 
 @functools.lru_cache(maxsize=None)
 def _mesh_frontier_ingest(mesh: Mesh, q_axes: Tuple[str, ...], backend,
-                          f_cap: int, adj_layout: str = "dense"):
+                          f_cap: int, adj_layout: str = "dense",
+                          dist_layout: str = "dense"):
     """Jitted frontier ingest for the mesh executor, cached per (mesh, lane
-    axes, backend, frontier capacity, adjacency layout) — capacity grows ×2
+    axes, backend, frontier capacity, layouts) — capacity grows ×2
     like Q/K bucketing, so each step of the auto-growth compiles once and
     the previous steps' entries stay warm for other groups."""
-    fns = _mesh_step_fns(mesh, q_axes, backend, adj_layout)
+    fns = _mesh_step_fns(mesh, q_axes, backend, adj_layout, dist_layout)
     sh = fns["shardings"]
     qa = q_axes[0] if len(q_axes) == 1 else tuple(q_axes)
     closure = make_sharded_frontier_closure(mesh, backend, f_cap,
@@ -446,9 +499,10 @@ def _mesh_frontier_ingest(mesh: Mesh, q_axes: Tuple[str, ...], backend,
         adj, now = apply_batch(arrays, src, dst, lab, ts, mask, ts_floor)
         adj_d = _adj_dense(adj)
         dist, shard_rounds, qrounds, rr, fb, seed, mx = closure(
-            arrays.dist, adj_d, adj_d, *rows, live_mask, src, mask, now,
-            w_max)
+            _dist_dense(arrays.dist), adj_d, adj_d, *rows, live_mask, src,
+            mask, now, w_max)
         out, new = emit_new(arrays, dist, adj, now, finals_mask, windows)
+        out = out._replace(dist=_dist_like(arrays.dist, dist))
         return out, new, shard_rounds, qrounds, rr, fb, seed, mx
 
     return jax.jit(
@@ -459,12 +513,13 @@ def _mesh_frontier_ingest(mesh: Mesh, q_axes: Tuple[str, ...], backend,
 
 @functools.lru_cache(maxsize=None)
 def _mesh_frontier_delete(mesh: Mesh, q_axes: Tuple[str, ...], backend,
-                          f_cap: int, adj_layout: str = "dense"):
+                          f_cap: int, adj_layout: str = "dense",
+                          dist_layout: str = "dense"):
     """Jitted cone-seeded deletion for the mesh executor, cached per (mesh,
-    lane axes, backend, frontier capacity, adjacency layout) — the delete
+    lane axes, backend, frontier capacity, layouts) — the delete
     twin of :func:`_mesh_frontier_ingest`, sharing its capacity-bucketing
     discipline."""
-    fns = _mesh_step_fns(mesh, q_axes, backend, adj_layout)
+    fns = _mesh_step_fns(mesh, q_axes, backend, adj_layout, dist_layout)
     sh = fns["shardings"]
     qa = q_axes[0] if len(q_axes) == 1 else tuple(q_axes)
     closure = make_sharded_frontier_delete(mesh, backend, f_cap,
@@ -481,12 +536,13 @@ def _mesh_frontier_delete(mesh: Mesh, q_axes: Tuple[str, ...], backend,
         adj = drop_batch(arrays, src, dst, lab, mask)
         adj_d = _adj_dense(adj)
         dist, shard_rounds, qrounds, rr, fb, seed, mx = closure(
-            arrays.dist, adj_d, adj_d, *rows, live_mask, src, mask, now,
-            w_max)
+            _dist_dense(arrays.dist), adj_d, adj_d, *rows, live_mask, src,
+            mask, now, w_max)
         valid_after = batched_valid_pairs(dist, finals_mask, low)
         invalidated = jnp.logical_and(valid_before,
                                       jnp.logical_not(valid_after))
-        return (BatchedEngineArrays(adj, dist, arrays.emitted, now),
+        return (BatchedEngineArrays(adj, _dist_like(arrays.dist, dist),
+                                    arrays.emitted, now),
                 invalidated, shard_rounds, qrounds, rr, fb, seed, mx)
 
     return jax.jit(
@@ -511,10 +567,12 @@ class MeshExecutor(Executor):
                  q_axes: Sequence[str] = ("data",), backend="jnp",
                  frontier: str = "off", frontier_cap: int = 32,
                  adj_layout: str = "dense", ell_cap: int = 8,
-                 spill_cap: int = 256):
+                 spill_cap: int = 256, dist_layout: str = "dense",
+                 dist_cap: int = 16, dist_ovf_cap: Optional[int] = None):
         super().__init__(backend, frontier=frontier, frontier_cap=frontier_cap,
                          adj_layout=adj_layout, ell_cap=ell_cap,
-                         spill_cap=spill_cap)
+                         spill_cap=spill_cap, dist_layout=dist_layout,
+                         dist_cap=dist_cap, dist_ovf_cap=dist_ovf_cap)
         self.mesh = mesh if mesh is not None else host_mesh(model_axis)
         self.q_axes = tuple(q_axes)
         self.n_shards = int(np.prod([self.mesh.shape[a] for a in self.q_axes]))
@@ -525,7 +583,7 @@ class MeshExecutor(Executor):
         # string-named backends), and its contraction is what the per-shard
         # closure runs — no jnp-oracle hardcode on the mesh path
         fns = _mesh_step_fns(self.mesh, self.q_axes, self.backend,
-                             self.adj_layout)
+                             self.adj_layout, self.dist_layout)
         self._sh = fns["shardings"]
         self._jit_ingest = fns["ingest"]
         self._jit_delete = fns["delete"]
@@ -550,6 +608,12 @@ class MeshExecutor(Executor):
         # spill ring replicated
         return jax.device_put(ell, self._sh["adj"])
 
+    def _put_dist(self, sd):
+        # _sh["dist"] is the RowSparseDist-of-shardings tree under
+        # dist_layout="row_sparse" (see _dist_shardings): source rows over
+        # the lane axes, overflow table + counters replicated
+        return jax.device_put(sd, self._sh["dist"])
+
     def _rows_for(self, btt: BatchedTransitionTable, q_cap: int):
         if self._rows_src is not btt:
             self._rows = shard_transitions(btt, q_cap, self.n_shards)
@@ -560,14 +624,16 @@ class MeshExecutor(Executor):
 
     def ingest_batch(self, src, dst, lab, ts, mask, ts_floor: float,
                      tables: QueryTables):
-        q_cap = self._arrays.dist.shape[0]
+        q_cap = self.dist_shape[0]
         rows = self._rows_for(tables.btt, q_cap)
         if self.adj_layout == "ell":
             self._reserve_spill(len(src))
+        if self.dist_layout == "row_sparse":
+            self._reserve_dist(self.frontier != "off")
         if self.frontier != "off":
             ingest = _mesh_frontier_ingest(
                 self.mesh, self.q_axes, self.backend, self.frontier_cap,
-                self.adj_layout)
+                self.adj_layout, self.dist_layout)
             (self._arrays, new, shard_rounds, qrounds,
              rr, fb, seed, mx) = ingest(
                 self._arrays,
@@ -595,12 +661,14 @@ class MeshExecutor(Executor):
 
     def delete_batch(self, src, dst, lab, mask, ts_now: float,
                      tables: QueryTables):
-        q_cap = self._arrays.dist.shape[0]
+        q_cap = self.dist_shape[0]
         rows = self._rows_for(tables.btt, q_cap)
+        if self.dist_layout == "row_sparse":
+            self._reserve_dist(self.frontier != "off")
         if self.frontier != "off":
             delete = _mesh_frontier_delete(
                 self.mesh, self.q_axes, self.backend, self.frontier_cap,
-                self.adj_layout)
+                self.adj_layout, self.dist_layout)
             (self._arrays, invalidated, shard_rounds, qrounds,
              rr, fb, seed, mx) = delete(
                 self._arrays,
@@ -626,8 +694,10 @@ class MeshExecutor(Executor):
 
     def relax(self, tables: QueryTables,
               query_mask: Optional[np.ndarray] = None) -> None:
-        q_cap = self._arrays.dist.shape[0]
+        q_cap = self.dist_shape[0]
         rows = self._rows_for(tables.btt, q_cap)
+        if self.dist_layout == "row_sparse":
+            self._reserve_dist(False)
         mask = tables.live_mask if query_mask is None else jnp.asarray(
             np.asarray(query_mask, bool))
         self._arrays, shard_rounds, qrounds = self._jit_relax(

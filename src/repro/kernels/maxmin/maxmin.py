@@ -28,9 +28,14 @@ NEG_INF = float("-inf")
 # the frontier-restricted round feeds SKINNY (F, N) slabs — a fixed 128-row
 # block would pad a F=16 slab 8x and waste 7/8 of every VPU tile. Small-M
 # rows trade bm down and bn up (the broadcast intermediate bm*bk*bn*4B stays
-# ≲ 8 MiB of VMEM either way); bn keeps the 128-lane alignment.
+# ≲ 8 MiB of VMEM either way); bn keeps the 128-lane alignment. The M<=4 row
+# serves the row-sparse dist gather (PR 9): a Q·F row slab at tiny frontiers
+# is a handful of rows against a WIDE N·K entry axis, so bn doubles again —
+# the sweep over the entry axis halves its grid steps while bm*bn*4B stays
+# a single VMEM tile.
 _BLOCK_TABLE = (
     # (max M, (bm, bn, bk))
+    (4,    (8, 512, 128)),
     (8,    (8, 256, 128)),
     (16,   (16, 256, 128)),
     (32,   (32, 256, 128)),

@@ -1,0 +1,6 @@
+"""Row-sparse dist gather kernels (PR 9): densify the per-(q, x) slot
+sets of a :class:`~repro.core.sparse_dist.RowSparseDist` into the dense
+(M, E) row slab the frontier rounds relax."""
+from .ops import rowsparse_gather  # noqa: F401
+from .ref import rowsparse_gather_naive, rowsparse_gather_ref  # noqa: F401
+from .rowsparse import rowsparse_gather_fused  # noqa: F401

@@ -1,0 +1,30 @@
+"""Dispatch layer for the row-sparse dist gather (mirrors
+``kernels/ell/ops.py``): jnp chunked reference off-TPU, the fused
+Pallas kernel on TPU or under ``interpret=True``."""
+from __future__ import annotations
+
+import jax
+
+from .ref import NEG_INF, rowsparse_gather_ref
+from .rowsparse import rowsparse_gather_fused
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def rowsparse_gather(idx, ts, e: int, *, zero=NEG_INF, use_pallas=None,
+                     interpret=None):
+    """Densify gathered slot rows: idx/ts (M, C) -> (M, E).
+
+    ``use_pallas=None`` picks the Pallas path on TPU; ``interpret=None``
+    interprets off-TPU so the kernel stays testable on CPU CI.
+    """
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        if interpret is None:
+            interpret = not _on_tpu()
+        return rowsparse_gather_fused(idx, ts, e, zero=zero,
+                                      interpret=interpret)
+    return rowsparse_gather_ref(idx, ts, e, zero=zero)

@@ -1,0 +1,52 @@
+"""jnp reference for the row-sparse dist gather.
+
+``out[m, e] = max over slots c with idx[m, c] == e of ts[m, c]`` — the
+densify of M gathered row-sparse dist rows (each row a pow2-capacity
+set of flattened ``v * K + k`` keys) into the dense (M, E) slab the
+frontier round relaxes, where ``E = N * K``.  Free slots carry
+``ts == zero`` and their (stale but in-range) ``idx`` is benign: a
+zero-valued candidate never wins the max fold.
+
+Pure scatter-max — no reassociation, exact on both the f32 timestamp
+lattice and the int32 bucket-level lattice, so every backend can share
+this reference (the bucket backend inherits it unchanged).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+NEG_INF = float("-inf")
+
+
+def rowsparse_gather_ref(idx, ts, e: int, *, zero=NEG_INF,
+                         m_chunk: int = 256):
+    """Densify gathered slot rows: idx/ts (M, C) -> (M, E).
+
+    The scatter-max runs per m-chunk inside a ``fori_loop`` so the
+    scatter working set stays O(chunk * E) while the output accumulates
+    in place; the chunk is shrunk to a divisor of M so the loop needs
+    no tail (same schedule as the ELL reference's u-chunking).
+    """
+    m, c = idx.shape
+    chunk = min(m_chunk, m)
+    while m % chunk:
+        chunk //= 2
+    out0 = jnp.full((m, e), zero, ts.dtype)
+
+    def body(i, out):
+        m0 = i * chunk
+        idx_c = lax.dynamic_slice(idx, (m0, 0), (chunk, c))
+        ts_c = lax.dynamic_slice(ts, (m0, 0), (chunk, c))
+        blk = jnp.full((chunk, e), zero, ts.dtype).at[
+            jnp.arange(chunk)[:, None], idx_c].max(ts_c)
+        return lax.dynamic_update_slice(out, blk, (m0, 0))
+
+    return lax.fori_loop(0, m // chunk, body, out0)
+
+
+def rowsparse_gather_naive(idx, ts, e: int, *, zero=NEG_INF):
+    """One-hot compare-and-fold oracle; O(M * C * E) scratch, tests only."""
+    cand = jnp.where(idx[:, :, None] == jnp.arange(e)[None, None, :],
+                     ts[:, :, None], jnp.asarray(zero, ts.dtype))
+    return jnp.max(cand, axis=1)

@@ -1,0 +1,88 @@
+"""Fused Pallas gather for row-sparse dist rows.
+
+Grid ``(M/bm, E/bn)``: each step owns a ``(bm, bn)`` output tile and
+the full ``(bm, C)`` slot block of its rows (slot capacity C is small —
+it is the pow2 ``dist_cap`` — so the block always fits VMEM).  The
+kernel sweeps the C slots with a ``fori_loop``, comparing each slot's
+flattened key against the tile's column range and max-folding the hits:
+a compare-select per slot on a (bm, bn) vector register, never a
+(bm, C, bn) broadcast, so VMEM stays O(bm * (C + bn)) at any capacity.
+
+Every output tile is visited exactly once (no accumulation grid dim),
+so no ``pl.when`` init is needed.  Free slots carry ``ts == zero`` and
+annihilate under the max; m-padding rows carry key 0 with ``zero``
+values, e-padding columns are sliced off — exact by the same argument
+as the other semiring kernels (padding is the semiring zero).
+
+Block sizes come from the shared ``pick_block_sizes`` table (rule R3);
+the skinny (rows, E) shapes this kernel sees — a handful of gathered
+frontier rows against E = N*K columns — are the narrow-m rows PR 9
+added to the table.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from ..maxmin.maxmin import pick_block_sizes
+
+NEG_INF = float("-inf")
+
+
+def _r8(x: int) -> int:
+    return max(x + (-x) % 8, 8)
+
+
+def _rs_kernel(idx_ref, ts_ref, o_ref, *, bn, c_cap, zero):
+    col0 = pl.program_id(1) * bn
+    idxb = idx_ref[...]                     # (bm, C)
+    tsb = ts_ref[...]
+    cols = (lax.broadcasted_iota(jnp.int32, (o_ref.shape[0], bn), 1)
+            + col0)                          # (bm, bn) global column ids
+
+    def body(c, acc):
+        key = lax.dynamic_slice(idxb, (0, c), (idxb.shape[0], 1))  # (bm, 1)
+        val = lax.dynamic_slice(tsb, (0, c), (tsb.shape[0], 1))
+        cand = jnp.where(key == cols, val.astype(acc.dtype),
+                         jnp.asarray(zero, acc.dtype))
+        return jnp.maximum(acc, cand)
+
+    o_ref[...] = lax.fori_loop(
+        0, c_cap, body, jnp.full(o_ref.shape, zero, o_ref.dtype))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("e", "zero", "bm", "bn", "interpret"))
+def rowsparse_gather_fused(idx, ts, e: int, *, zero=NEG_INF, bm=None,
+                           bn=None, interpret=False):
+    """Fused densify of gathered slot rows: idx/ts (M, C) -> (M, E)."""
+    m, c_cap = idx.shape
+    t_bm, t_bn, _ = pick_block_sizes(m, c_cap, e)
+    bm = bm or t_bm
+    bn = bn or t_bn
+    if interpret:
+        bm = min(bm, _r8(m))
+        bn = min(bn, _r8(e))
+
+    m_pad = m + (-m) % bm
+    e_pad = e + (-e) % bn
+    idx_p = jnp.zeros((m_pad, c_cap), jnp.int32).at[:m].set(idx)
+    ts_p = jnp.full((m_pad, c_cap), jnp.asarray(zero, ts.dtype),
+                    ts.dtype).at[:m].set(ts)
+
+    out = pl.pallas_call(
+        functools.partial(_rs_kernel, bn=bn, c_cap=c_cap, zero=zero),
+        grid=(m_pad // bm, e_pad // bn),
+        in_specs=[
+            pl.BlockSpec((bm, c_cap), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, c_cap), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m_pad, e_pad), ts.dtype),
+        interpret=interpret,
+    )(idx_p, ts_p)
+    return out[:m, :e]

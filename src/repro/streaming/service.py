@@ -100,9 +100,11 @@ from ..core.backend import resolve_backend
 from ..core.engine import BatchedDenseRPQEngine, PendingResults, RegisteredQuery
 from ..core.executor import (
     ADJ_LAYOUTS,
+    DIST_LAYOUTS,
     FRONTIER_MODES,
     Executor,
     LocalExecutor,
+    _next_pow2,
 )
 from ..core.reference import RAPQ, RSPQ
 
@@ -228,7 +230,9 @@ class PersistentQueryService:
                  frontier: str = "off",
                  frontier_cap: int = 32,
                  adj_layout: str = "dense",
-                 ell_cap: int = 8):
+                 ell_cap: int = 8,
+                 dist_layout: str = "dense",
+                 dist_cap: int = 16):
         self.window = float(window)
         self.slide = float(slide)
         self._executor_spec = executor
@@ -258,9 +262,25 @@ class PersistentQueryService:
                 f"({' | '.join(ADJ_LAYOUTS)})")
         self._adj_layout = adj_layout
         self._ell_cap = int(ell_cap)
+        # dist representation (tentpole of the sparse-dist PR): "dense" =
+        # the (Q, N, N, K) slab, "row_sparse" = per-source-row reachable
+        # sets + bounded overflow table (core/sparse_dist.py). Result
+        # streams are identical in every mode; memory is ∝ reachable
+        # entries and the emit scan drops from O(Q·N²·K) to
+        # O(Q·N·dist_cap). Per-interval occupancy telemetry lands in
+        # :attr:`dist_log`.
+        if dist_layout not in DIST_LAYOUTS:
+            raise ValueError(
+                f"unknown dist_layout {dist_layout!r} "
+                f"({' | '.join(DIST_LAYOUTS)})")
+        self._dist_layout = dist_layout
+        self._dist_cap = int(dist_cap)
         #: (tuples_seen_so_far, adjacency_stats snapshot) history, one
         #: entry per slide boundary when the layout is "ell"
         self.adjacency_log: List[Tuple[int, Dict[str, object]]] = []
+        #: (tuples_seen_so_far, dist_stats snapshot) history, one entry
+        #: per slide boundary when the dist layout is "row_sparse"
+        self.dist_log: List[Tuple[int, Dict[str, object]]] = []
         #: (tuples_seen_so_far, per-interval frontier stats delta) history
         self.frontier_log: List[Tuple[int, Dict[str, object]]] = []
         self._frontier_mark: Optional[Dict[str, object]] = None
@@ -302,12 +322,16 @@ class PersistentQueryService:
             return MeshExecutor(backend=backend, frontier=self._frontier,
                                 frontier_cap=self._frontier_cap,
                                 adj_layout=self._adj_layout,
-                                ell_cap=self._ell_cap)
+                                ell_cap=self._ell_cap,
+                                dist_layout=self._dist_layout,
+                                dist_cap=self._dist_cap)
         if self._executor_spec == "local":
             return LocalExecutor(backend, frontier=self._frontier,
                                  frontier_cap=self._frontier_cap,
                                  adj_layout=self._adj_layout,
-                                 ell_cap=self._ell_cap)
+                                 ell_cap=self._ell_cap,
+                                 dist_layout=self._dist_layout,
+                                 dist_cap=self._dist_cap)
         raise ValueError(
             f"unknown executor {self._executor_spec!r} (local | mesh | instance)")
 
@@ -606,6 +630,10 @@ class PersistentQueryService:
                     and self._group.executor.adj_layout == "ell"):
                 self.adjacency_log.append(
                     (seen, self._group.executor.adjacency_stats))
+            if (self._group is not None
+                    and self._group.executor.dist_layout == "row_sparse"):
+                self.dist_log.append(
+                    (seen, self._group.executor.dist_stats))
             return delta
 
         def adapt_batch(finterval: Dict[str, object]) -> None:
@@ -737,6 +765,20 @@ class PersistentQueryService:
                           for s in self._group.lane_specs],
                 "labels": list(self._group.labels),
                 "interner": self._group.interner_state(),
+                # learned capacity occupancy (all ×2-bucketed): a restored
+                # service starts at these instead of re-learning them from
+                # overflow pressure — frontier_cap from "auto" growth,
+                # dist_cap from row-sparse drains, ell_cap from adjacency
+                # packs; harmless no-ops for layouts/modes that are off
+                "capacities": {
+                    "frontier_cap": int(self._group.executor.frontier_cap),
+                    "ell_cap": int(self._group.executor.ell_cap),
+                    "dist_cap": int(self._group.executor.dist_cap),
+                    "dist_ovf_cap": (
+                        int(self._group.executor.dist_ovf_cap)
+                        if self._group.executor.dist_ovf_cap is not None
+                        else None),
+                },
                 **self._group.results_state(),
             }
         for name, eng in self._ref_engines.items():
@@ -755,6 +797,26 @@ class PersistentQueryService:
         state, extra = ckpt.restore(directory, like=like)
         if self._group is not None:
             meta = extra["dense"]
+            # adopt the snapshot's LEARNED capacities first (never shrink —
+            # max with our own), so the re-placement below packs at the
+            # occupancy the crashed service had already learned instead of
+            # re-discovering it through overflow pressure
+            caps = meta.get("capacities", {})
+            ex = self._group.executor
+            # saved caps are already ×2-bucketed; _next_pow2 is identity on
+            # them and keeps manifest tampering from un-bucketing the jits
+            if caps.get("frontier_cap"):
+                ex.frontier_cap = max(
+                    ex.frontier_cap, _next_pow2(int(caps["frontier_cap"])))
+            if caps.get("ell_cap"):
+                ex.ell_cap = max(ex.ell_cap, _next_pow2(int(caps["ell_cap"])))
+            if caps.get("dist_cap"):
+                ex.dist_cap = max(ex.dist_cap,
+                                  _next_pow2(int(caps["dist_cap"])))
+            if caps.get("dist_ovf_cap"):
+                prev = ex.dist_ovf_cap if ex.dist_ovf_cap is not None else 1
+                ex.dist_ovf_cap = max(
+                    prev, _next_pow2(int(caps["dist_ovf_cap"])))
             # lane-by-name adoption: tolerant of bucketed-Q/K/label/slot
             # padding differences AND executor changes (mesh <-> local);
             # raises if the LIVE query sets differ

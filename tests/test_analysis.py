@@ -70,8 +70,9 @@ def grow(n):
     f_cap = n + 3
     q_cap = 100
     ell_cap = n + 5
+    dist_cap = n + 7
     fns = step_fns(1, [1, 2])
-    return f_cap, q_cap, ell_cap, fns
+    return f_cap, q_cap, ell_cap, dist_cap, fns
 """
 
 R2_CLEAN = """\
@@ -91,8 +92,10 @@ def grow(n, dist):
     ell_cap = _next_pow2(n)
     spill_cap = ell_cap
     spill_cap *= 2
+    dist_cap = _next_pow2(n)
+    dist_ovf_cap = min(dist_cap, 4096)
     fns = step_fns(1, (1, 2))
-    return f_cap, q_cap, ell_cap, spill_cap, fns
+    return f_cap, q_cap, ell_cap, spill_cap, dist_cap, dist_ovf_cap, fns
 """
 
 R3_BAD = """\
@@ -215,7 +218,7 @@ class Engine:
 
 FIXTURES = {
     "R1": (R1_BAD, 5, R1_CLEAN),
-    "R2": (R2_BAD, 4, R2_CLEAN),
+    "R2": (R2_BAD, 5, R2_CLEAN),
     "R3": (R3_BAD, 3, R3_CLEAN),
     "R4": (R4_BAD, 3, R4_CLEAN),
     "R5": (R5_BAD, 4, R5_CLEAN),

@@ -150,6 +150,12 @@ def test_pick_block_sizes_table():
     assert pick_block_sizes(16, 512, 512) == (16, 256, 128)
     assert pick_block_sizes(32, 512, 512) == (32, 256, 128)
     assert pick_block_sizes(512, 512, 512) == (128, 128, 64)
+    # ultra-skinny row slabs (the row-sparse dist gather: a handful of
+    # (q, x) rows against a wide N·K entry axis) double bn again
+    assert pick_block_sizes(4, 512, 2048) == (8, 512, 128)
+    assert pick_block_sizes(1, 128, 1024) == (8, 512, 128)
+    # the wide-bn row still clamps to the aligned problem
+    assert pick_block_sizes(4, 16, 40) == (8, 128, 16)
     # clamps: a tiny engine never pays full-tile padding on m/k, and bn
     # keeps the 128-lane alignment floor
     assert pick_block_sizes(5, 24, 24) == (8, 128, 24)

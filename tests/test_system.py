@@ -174,6 +174,24 @@ def test_sparse_adjacency_benchmark():
 
 
 @pytest.mark.slow
+def test_sparse_dist_benchmark():
+    """benchmarks/fig19_sparse_dist in the CI slow tier: row-sparse
+    reachable-set dist vs the dense (Q, N, N, K) slab — per-event result
+    identity (gmark window with deletions and expiry, frontier auto, a
+    tiny dist_cap so the overflow/repack path fires) AND the >=2x
+    per-event (seed + relax + emit) acceptance bar at the largest
+    measured anchor and at the N=128k extrapolation (where the dense
+    dist is infeasible by construction) are asserted inside."""
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.fig19_sparse_dist"],
+        capture_output=True, text=True, timeout=2400,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+    )
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "[ok] fig19 >= 2x per-event throughput" in proc.stdout
+
+
+@pytest.mark.slow
 def test_dryrun_machinery_smoke():
     """Full dry-run protocol on one cell in a subprocess (512 host devices):
     lower + compile + memory/cost/collective scrape must all succeed."""
