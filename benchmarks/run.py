@@ -90,7 +90,7 @@ def main() -> None:
                    fig12_multi_query, fig13_query_churn,
                    fig14_sharded_engine, fig15_backend_shootout,
                    fig16_frontier, fig17_deletions, fig18_sparse_adjacency,
-                   fig19_sparse_dist, roofline, table4_rspq)
+                   fig19_sparse_dist, fig20_survival, roofline, table4_rspq)
 
     scale = 0.4 if args.fast else 1.0
     modules = [
@@ -134,6 +134,12 @@ def main() -> None:
             anchors=tuple(int(a * scale) for a in (2048, 8192)),
             reps=2 if args.fast else 3,
             identity_edges=int(150 * scale))),
+        # fig20: supervised service under seeded chaos plans — recovery
+        # time, WAL replay throughput, and result-stream identity across
+        # injected crashes/stragglers/transients (identity asserted inside)
+        ("fig20", lambda: fig20_survival.run(
+            n_edges=int(220 * scale),
+            seeds=(0,) if args.fast else (0, 1, 2))),
         ("roofline", roofline.run),
     ]
     print("name,us_per_call,derived")

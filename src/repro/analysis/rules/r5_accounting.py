@@ -8,7 +8,8 @@ Two bug classes, both shipped and fixed in past PRs:
   reintroduces the class.
 * **Eager counter flushes**: the executors queue device scalars
   (``_pending_counts``) and convert them only at the sanctioned flush
-  sites (``_flush_counts`` / ``_consume_count`` / ``_consume_frontier``)
+  sites (``_flush_counts`` / ``_consume_count`` / ``_consume_frontier``,
+  plus the supervisor's ``_flush_health`` telemetry interval)
   so the hot ingest path never blocks on a device→host sync. A
   ``float(...now)`` or ``np.asarray(rounds)`` anywhere else serializes
   the async dispatch chain behind a telemetry read — the engine keeps a
@@ -35,7 +36,11 @@ from ..analyzer import Finding, Module, Project, dotted
 RULE = "R5"
 TITLE = "accounting hygiene (FIFO drains, eager device-scalar reads)"
 
-_SANCTIONED_FNS = ("_flush_counts", "_consume_count", "_consume_frontier")
+#: `_flush_health` is the supervisor's per-interval telemetry flush
+#: (streaming/supervisor.py): like the executor flush sites it reads
+#: host-known counters between dispatches, never on the hot path
+_SANCTIONED_FNS = ("_flush_counts", "_consume_count", "_consume_frontier",
+                   "_flush_health")
 _COUNTER_NAME_RE = re.compile(r"(rounds|counts)$")
 _CONVERTERS = ("float", "int", "bool", "np.asarray", "np.array",
                "np.float32", "np.float64", "numpy.asarray")

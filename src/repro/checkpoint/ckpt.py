@@ -34,6 +34,14 @@ import numpy as np
 
 SEP = "/"
 
+
+class SimulatedCrash(RuntimeError):
+    """Raised by :func:`save` at an injected crash point (``_crash_after``)
+    — the fault-injection harness's stand-in for the process dying mid-
+    checkpoint. Everything written so far stays on disk exactly as a real
+    kill would leave it; nothing is cleaned up, and the commit protocol
+    must make the partial state invisible to :func:`restore`."""
+
 # npz cannot serialize ml_dtypes (bf16/fp8); store a bit-view + dtype tag
 _VIEW_DTYPES = {
     "bfloat16": (ml_dtypes.bfloat16, np.uint16),
@@ -83,8 +91,18 @@ def save(
     tree: Any,
     extra: Optional[Dict[str, Any]] = None,
     host_id: int = 0,
+    _crash_after: Optional[str] = None,
 ) -> str:
-    """Synchronous checkpoint of a pytree of (possibly sharded) arrays."""
+    """Synchronous checkpoint of a pytree of (possibly sharded) arrays.
+
+    ``_crash_after`` is a fault-injection hook (tests/chaos harness only):
+    raise :class:`SimulatedCrash` after the named stage completes —
+    ``"shards"`` (array files written, no manifest), ``"manifest"``
+    (manifest fsync'd inside the tmp dir, commit rename not taken), or
+    ``"rename"`` (step dir renamed, LATEST not swung). Every one of these
+    partial states must leave :func:`latest_step_dir` pointing at the
+    previous committed step — that is the atomicity contract the crash-mid-
+    save hardening tests pin."""
     flat = _flatten(tree)
     step_dir = os.path.join(directory, f"step_{step:09d}")
     tmp_dir = step_dir + f".tmp.{host_id}"
@@ -100,6 +118,8 @@ def save(
         arrays[key.replace(SEP, "__")] = arr
         meta[key] = {"shape": list(arr.shape), "dtype": dtype_name}
     np.savez(os.path.join(tmp_dir, f"shard_{host_id:05d}.npz"), **arrays)
+    if _crash_after == "shards":
+        raise SimulatedCrash(f"injected crash after shard write: {tmp_dir}")
 
     manifest = {
         "step": step,
@@ -113,10 +133,16 @@ def save(
         json.dump(manifest, f)
         f.flush()
         os.fsync(f.fileno())
+    if _crash_after == "manifest":
+        raise SimulatedCrash(
+            f"injected crash after manifest, before commit: {tmp_dir}")
     # commit: rename tmp dir, then swing LATEST atomically
     if os.path.exists(step_dir):
         shutil.rmtree(step_dir)
     os.rename(tmp_dir, step_dir)
+    if _crash_after == "rename":
+        raise SimulatedCrash(
+            f"injected crash after rename, before LATEST: {step_dir}")
     latest_tmp = os.path.join(directory, ".LATEST.tmp")
     with open(latest_tmp, "w") as f:
         f.write(os.path.basename(step_dir))
@@ -130,12 +156,26 @@ _pending: Dict[str, threading.Thread] = {}
 
 
 def async_save(directory: str, step: int, tree: Any,
-               extra: Optional[Dict[str, Any]] = None) -> None:
+               extra: Optional[Dict[str, Any]] = None,
+               _crash_after: Optional[str] = None) -> None:
     """Device->host transfer now; file IO on a background thread so the
-    train loop is not blocked (one in-flight save at a time)."""
+    serving/train loop is not blocked (one in-flight save at a time).
+
+    ``_crash_after`` rides through to :func:`save`; a
+    :class:`SimulatedCrash` raised on the background thread is swallowed
+    there — exactly like a real process kill between ``async_save`` and
+    ``wait_pending``, the save just never commits and the partial tmp dir
+    is left behind for the atomicity contract to neutralize."""
     wait_pending(directory)
     host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
-    t = threading.Thread(target=save, args=(directory, step, host_tree, extra))
+
+    def _run() -> None:
+        try:
+            save(directory, step, host_tree, extra, _crash_after=_crash_after)
+        except SimulatedCrash:
+            pass  # the "process" died mid-save; partial state stays on disk
+
+    t = threading.Thread(target=_run)
     t.start()
     _pending[directory] = t
 
@@ -146,16 +186,46 @@ def wait_pending(directory: str) -> None:
         t.join()
 
 
+def _is_committed(step_dir: str) -> bool:
+    mpath = os.path.join(step_dir, "manifest.json")
+    if not os.path.exists(mpath):
+        return False
+    try:
+        with open(mpath) as f:
+            return json.load(f).get("status") == "committed"
+    except (OSError, ValueError):
+        return False
+
+
 def latest_step_dir(directory: str) -> Optional[str]:
+    """The last PUBLISHED step directory, or None. Publication is the
+    atomic LATEST swing: while LATEST resolves to a committed dir, that
+    dir wins — a newer step dir whose save crashed after the rename but
+    before the swing is complete on disk yet deliberately invisible, so
+    the commit point stays one unambiguous instruction. Only a missing or
+    dangling LATEST (e.g. a crash between an rmtree of a re-saved step
+    and its rename) falls back to scanning for the highest committed
+    ``step_*`` dir, so a partial checkpoint can never be returned and a
+    sole surviving committed one can never be missed."""
     latest = os.path.join(directory, "LATEST")
-    if not os.path.exists(latest):
+    if os.path.exists(latest):
+        with open(latest) as f:
+            name = f.read().strip()
+        step_dir = os.path.join(directory, name)
+        if _is_committed(step_dir):
+            return step_dir
+    if not os.path.isdir(directory):
         return None
-    with open(latest) as f:
-        name = f.read().strip()
-    step_dir = os.path.join(directory, name)
-    if not os.path.exists(os.path.join(step_dir, "manifest.json")):
-        return None
-    return step_dir
+    for name in sorted(os.listdir(directory), reverse=True):
+        # tmp dirs are "step_<n>.tmp.<host>" — excluded by NAME, not by
+        # manifest status: a crash after the manifest fsync but before the
+        # commit rename leaves a committed-looking manifest inside the tmp
+        # dir, and that state must stay invisible
+        if name.startswith("step_") and ".tmp" not in name:
+            step_dir = os.path.join(directory, name)
+            if _is_committed(step_dir):
+                return step_dir
+    return None
 
 
 def manifest_extra(directory: str) -> Dict[str, Any]:

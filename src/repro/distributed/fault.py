@@ -97,3 +97,48 @@ def run_with_restarts(
         "stragglers": list(monitor.stragglers),
         "final_step": step,
     }
+
+
+def run_service_with_restarts(
+    make_service: Callable[..., Any],
+    stream: Any,
+    ckpt_dir: str,
+    *,
+    batch_events: int = 8,
+    ckpt_every: int = 4,
+    max_restarts: int = 8,
+    fault_plan: Any = None,
+    on_straggler: Optional[Callable[[int], None]] = None,
+    monitor: Optional[StragglerMonitor] = None,
+    **supervisor_kwargs: Any,
+) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    """`run_with_restarts` ported onto `PersistentQueryService`: the same
+    supervise/checkpoint/restore contract, but the unit of work is a WAL-logged
+    micro-batch instead of a training step, and restore is followed by exact
+    WAL-suffix replay (streaming/supervisor.py) rather than recompute-forward.
+
+    Per-batch wall times feed the same `StragglerMonitor`; detected stragglers
+    invoke `on_straggler(lsn)` and land in the supervisor's `health_log`.
+
+    Returns ``(final_results, report)`` where the report mirrors
+    `run_with_restarts`'s (restarts / stragglers / final step) plus the
+    recovery measurements the service path adds.
+    """
+    from ..streaming.supervisor import ServiceSupervisor
+
+    sup = ServiceSupervisor(
+        make_service, ckpt_dir,
+        batch_events=batch_events, ckpt_every=ckpt_every,
+        max_restarts=max_restarts, fault_plan=fault_plan,
+        monitor=monitor or StragglerMonitor(),
+        on_straggler=on_straggler, **supervisor_kwargs)
+    results = sup.run(stream)
+    return results, {
+        "restarts": sup.restarts,
+        "stragglers": list(sup.stragglers),
+        "final_step": sup.wal.last_lsn,
+        "recoveries": [
+            {"recovery_s": r.recovery_s, "replayed_events": r.replayed_events,
+             "replay_eps": r.replay_eps} for r in sup.recoveries],
+        "health_log": list(sup.health_log),
+    }

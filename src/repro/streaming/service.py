@@ -744,16 +744,47 @@ class PersistentQueryService:
 
     # -- state persistence ----------------------------------------------------
 
-    def snapshot(self, directory: str, step: int) -> None:
+    def snapshot(self, directory: str, step: int, *,
+                 wal_lsn: Optional[int] = None,
+                 extra_meta: Optional[Dict[str, object]] = None,
+                 async_save: bool = False,
+                 _crash_after: Optional[str] = None) -> None:
+        """Checkpoint the whole service. ``wal_lsn`` records the
+        write-ahead-log position this snapshot covers (the supervisor's
+        recovery replays only records past it); ``async_save=True`` defers
+        the file IO to a background thread (``ckpt.async_save`` — the
+        device→host transfer still happens here, so the state is
+        consistent no matter what the stream does next); ``_crash_after``
+        is the chaos harness's mid-save kill switch (ckpt.save stages).
+
+        The dense group's deferred-decode FIFO is drained FIRST: an
+        in-flight async-decode batch (``async_depth>1``) has already
+        mutated device state, so saving before its results land in
+        ``per_query_results`` would snapshot an emitted mask ahead of the
+        recorded results — restore + replay would then drop those pairs
+        (the device diff thinks they were already reported). Draining
+        makes snapshot a sequence point: state and results agree."""
         from ..checkpoint import ckpt
 
         self._ensure_group()
+        if self._group is not None:
+            # belt-and-braces with engine.state_arrays()/results_state()
+            # (each drains too): ONE sequence point, visible at the
+            # service boundary, regression-pinned in tests/test_fault.py
+            self._group._drain_pending()
         state: Dict[str, object] = {}
         extra: Dict[str, object] = {
             "step": step,
             "next_expiry": self._next_expiry,
             "reference": sorted(self._ref_engines),
         }
+        if wal_lsn is not None:
+            extra["wal_lsn"] = int(wal_lsn)
+        if extra_meta:
+            # caller metadata (e.g. the supervisor's churn catalog) rides
+            # the manifest; reserved keys stay ours
+            for k, v in extra_meta.items():
+                extra.setdefault(k, v)
         if self._group is not None:
             state["dense_group"] = self._group.state_arrays()
             extra["dense"] = {
@@ -783,7 +814,12 @@ class PersistentQueryService:
             }
         for name, eng in self._ref_engines.items():
             state[f"refeng.{name}"] = ckpt.pickle_leaf(eng)
-        ckpt.save(directory, step, state, extra=extra)
+        if async_save:
+            ckpt.async_save(directory, step, state, extra=extra,
+                            _crash_after=_crash_after)
+        else:
+            ckpt.save(directory, step, state, extra=extra,
+                      _crash_after=_crash_after)
 
     def restore(self, directory: str) -> int:
         from ..checkpoint import ckpt

@@ -1,0 +1,27 @@
+"""Suite-wide hygiene.
+
+Compiled executables accumulate address-space mappings for as long as
+jax's jit caches hold them — across a full tier-1 run that growth is
+linear in the number of distinct compiled shapes (~30k maps and rising
+as suites are added), and `vm.max_map_count` defaults to 65530. Once
+the ceiling is hit, the next `pthread_create` fails with
+"can't start new thread" in whatever test happens to run late in the
+session. Tests never share compiled shapes across module boundaries,
+so dropping the caches between modules keeps the map count bounded
+without losing warm-cache speed within a module.
+
+The import is lazy and guarded: test modules that deliberately never
+import jax (the analyzer suite runs pure-stdlib) stay jax-free when
+run on their own.
+"""
+import sys
+
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_per_module():
+    yield
+    jax = sys.modules.get("jax")
+    if jax is not None:
+        jax.clear_caches()

@@ -212,6 +212,11 @@ class Engine:
     def _flush_counts(self, shard_rounds):
         return np.asarray(shard_rounds)
 
+    def _flush_health(self, overflow_counts):
+        # the supervisor's per-interval telemetry flush is a sanctioned
+        # site, same as the executor counter flushes
+        return np.asarray(overflow_counts)
+
     def restore(self, state):
         return float(np.asarray(jax.device_get(state.now)))
 """

@@ -192,6 +192,24 @@ def test_sparse_dist_benchmark():
 
 
 @pytest.mark.slow
+def test_survival_benchmark():
+    """benchmarks/fig20_survival in the CI slow tier: the supervised
+    service under seeded chaos plans (crashes before/after dispatch,
+    mid-snapshot at every commit stage, during replay, stragglers,
+    transient errors) on the sparse layout combination — per-batch
+    result-stream identity against the uninterrupted run is asserted
+    inside, and recovery time / replay eps are measured."""
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.fig20_survival"],
+        capture_output=True, text=True, timeout=2400,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+    )
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "[ok] fig20 survival" in proc.stdout
+    assert "identical=False" not in proc.stdout
+
+
+@pytest.mark.slow
 def test_dryrun_machinery_smoke():
     """Full dry-run protocol on one cell in a subprocess (512 host devices):
     lower + compile + memory/cost/collective scrape must all succeed."""
